@@ -1,0 +1,62 @@
+"""§III.B case study — 'Redistribution Overhead Scales with Row Size'.
+
+Paper claims reproduced: unguarded eager redistribution of 100 GB+ blobs
+regresses up to 20×; the Row Size Model (batch-density + row-size guard)
+plus the cost gate recover to parity with local processing.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.types import DySkewConfig, Policy
+from repro.sim.engine import ClusterConfig, Simulator, StrategyConfig
+from repro.sim.workload import generate_query, heavy_rows_case
+
+Row = Tuple[str, float, str]
+
+
+def run(quick: bool = False) -> List[Row]:
+    cluster = ClusterConfig(num_nodes=4)
+    prof = heavy_rows_case(row_gb=1.0, n_rows=48)
+    batches = generate_query(prof, cluster.num_workers, seed=0)
+
+    strategies = {
+        "none": StrategyConfig(kind="none"),
+        "eager_unguarded": StrategyConfig(
+            kind="dyskew",
+            dyskew=DySkewConfig(
+                policy=Policy.EAGER_SNOWPARK, cost_gate=0.0,
+                min_batch_density_frac=0.0,
+            ),
+            enable_density_guard=False,
+            enable_cost_gate=False,
+        ),
+        "eager_guarded": StrategyConfig(kind="dyskew"),
+    }
+    res = {
+        k: Simulator(cluster, st, seed=0).run_query(batches)
+        for k, st in strategies.items()
+    }
+    reg = res["eager_unguarded"].latency / res["none"].latency
+    rec = res["eager_guarded"].latency / res["none"].latency
+    rows: List[Row] = [
+        (
+            f"heavy_rows_{k}",
+            r.latency * 1e6,
+            f"bytes_moved_gb={r.bytes_moved_remote/1e9:.1f}",
+        )
+        for k, r in res.items()
+    ]
+    rows.append((
+        "heavy_rows_summary",
+        0.0,
+        f"unguarded_regression={reg:.1f}x (paper: up to 20x);"
+        f"guarded_vs_local={rec:.2f}x",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

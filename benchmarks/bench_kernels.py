@@ -1,0 +1,74 @@
+"""Pallas kernel latencies (interpret mode on CPU — correctness-path
+timing only; TPU timing happens on hardware) + oracle agreement."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = False) -> List[Row]:
+    from repro.kernels.dispatch.kernel import dispatch_gather
+    from repro.kernels.dispatch.ref import dispatch_gather_ref
+    from repro.kernels.histogram.kernel import load_histogram
+    from repro.kernels.histogram.ref import load_histogram_ref
+    from repro.kernels.ssd_scan.kernel import ssd_state_scan
+    from repro.kernels.ssd_scan.ref import ssd_state_scan_ref
+    from repro.kernels.topk_gating.kernel import topk_gating
+    from repro.kernels.topk_gating.ref import topk_gating_ref
+
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    T, S, D = (256, 512, 256) if quick else (1024, 2048, 512)
+    x = jax.random.normal(key, (T, D), jnp.bfloat16)
+    src = jax.random.randint(key, (S,), 0, T)
+    valid = jnp.ones((S,), bool)
+    us = _time(lambda: dispatch_gather(x, src, valid, interpret=True))
+    ref = dispatch_gather_ref(x, src, valid)
+    out = dispatch_gather(x, src, valid, interpret=True)
+    err = float(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max())
+    rows.append(("kernel_dispatch_gather", us, f"max_err={err:.1e};shape=({T},{S},{D})"))
+
+    N, E = (2048, 64) if quick else (8192, 384)
+    ids = jax.random.randint(key, (N,), 0, E)
+    us = _time(lambda: load_histogram(ids, num_dest=E, interpret=True))
+    err = float(jnp.abs(load_histogram(ids, num_dest=E, interpret=True)
+                        - load_histogram_ref(ids, E)).max())
+    rows.append(("kernel_histogram", us, f"max_err={err:.1e};N={N};E={E}"))
+
+    Tt, Et, k = (256, 64, 4) if quick else (1024, 384, 8)
+    logits = jax.random.normal(key, (Tt, Et))
+    us = _time(lambda: topk_gating(logits, k=k, interpret=True))
+    w, idx = topk_gating(logits, k=k, interpret=True)
+    wr, idxr = topk_gating_ref(logits, k)
+    agree = float(jnp.mean((idx == idxr).astype(jnp.float32)))
+    rows.append(("kernel_topk_gating", us, f"idx_agree={agree:.4f};T={Tt};E={Et};k={k}"))
+
+    C, H, P, Nn = (8, 8, 32, 32) if quick else (32, 16, 64, 128)
+    states = jax.random.normal(key, (C, H, P, Nn))
+    decay = jax.nn.sigmoid(jax.random.normal(key, (C, H)))
+    us = _time(lambda: ssd_state_scan(states, decay, interpret=True))
+    err = float(jnp.abs(ssd_state_scan(states, decay, interpret=True)
+                        - ssd_state_scan_ref(states, decay)).max())
+    rows.append(("kernel_ssd_state_scan", us, f"max_err={err:.1e};C={C};H={H}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,98 @@
+"""DySkew technique → TPU: adaptive MoE dispatch vs the static baseline.
+
+Tokens route to experts with a Zipf-skewed distribution (the MoE analogue
+of the paper's skewed rows).  The static baseline (NEVER policy = uniform
+per-expert capacity, GShard-style) drops overflow tokens on hot experts
+while idle experts waste capacity; DySkew's per-EP-shard state machines
+commit to redistribution and re-allocate effective capacity
+load-proportionally inside the same buffer budget.
+
+Reported: dropped-token fraction (quality proxy) and capacity utilization
+(throughput proxy) over a training-step sequence, plus the step at which
+the state machines committed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ArchConfig, MoEConfig
+from repro.models.layers.moe import SpmdCtx, moe_apply, moe_specs, moe_state_init
+from repro.models.param import tree_materialize
+
+Row = Tuple[str, float, str]
+
+
+def _mk_cfg(adaptive: bool, E=32, k=8, d=128, ff=64) -> ArchConfig:
+    return ArchConfig(
+        name="bench", family="moe", num_layers=1, d_model=d, num_heads=4,
+        num_kv_heads=2, d_ff=ff, vocab_size=256,
+        moe=MoEConfig(num_experts=E, top_k=k, expert_ff=ff,
+                      capacity_factor=1.25, adaptive=adaptive),
+        dtype="float32",
+    )
+
+
+def _skewed_router_bias(E: int, alpha: float) -> jnp.ndarray:
+    """Zipf logit bias: makes low-index experts hot."""
+    probs = 1.0 / np.arange(1, E + 1) ** alpha
+    probs /= probs.sum()
+    return jnp.asarray(np.log(probs) - np.log(probs).mean(), jnp.float32)
+
+
+def run(quick: bool = False) -> List[Row]:
+    E, k = 32, 8
+    steps = 10 if quick else 30
+    B, S = 4, 256
+    ctx = SpmdCtx(num_groups=1, num_ep_shards=8)
+    rows: List[Row] = []
+
+    for alpha in (0.0, 0.8, 1.5):
+        results = {}
+        for mode in ("static", "dyskew"):
+            cfg = _mk_cfg(adaptive=(mode == "dyskew"), E=E, k=k)
+            p = tree_materialize(moe_specs(cfg), jax.random.PRNGKey(0),
+                                 dtype_override=jnp.float32)
+            # Inject routing skew via a router bias (simulates hot experts).
+            p = dict(p)
+            p["router"] = p["router"] + _skewed_router_bias(E, alpha)[None, :] * 0.5
+            state = moe_state_init(cfg, ctx)
+            dropped, imb, dist = [], [], []
+
+            @jax.jit
+            def step(state, x):
+                y, st, m = moe_apply(p, x, cfg=cfg, state=state, ctx=ctx)
+                return st, m
+
+            for i in range(steps):
+                x = jax.random.normal(
+                    jax.random.PRNGKey(100 + i), (B, S, cfg.d_model)
+                )
+                state, m = step(state, x)
+                dropped.append(float(m["moe_dropped_frac"]))
+                imb.append(float(m["moe_shard_imbalance"]))
+                dist.append(float(m["moe_distribute_frac"]))
+            results[mode] = dict(
+                dropped=float(np.mean(dropped[2:])),
+                imbalance=float(np.mean(imb[2:])),
+                distribute=float(np.mean(dist)),
+            )
+        s, dy = results["static"], results["dyskew"]
+        improvement = (s["dropped"] - dy["dropped"]) / max(s["dropped"], 1e-9)
+        rows.append((
+            f"moe_dispatch_alpha{alpha}",
+            0.0,
+            f"static_dropped={s['dropped']:.4f};dyskew_dropped={dy['dropped']:.4f};"
+            f"drop_reduction={improvement:+.2%};imbalance={s['imbalance']:.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` (or env
+REPRO_BENCH_QUICK=1) shrinks workloads for CI-speed runs.  Individual
+benches can be selected with ``--only <substring>``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "benchmarks.bench_cluster_scaling",   # Fig. 3
+    "benchmarks.bench_tpcxbb",            # Fig. 4
+    "benchmarks.bench_rollout",           # Fig. 5
+    "benchmarks.bench_heavy_rows",        # §III.B row-size case study
+    "benchmarks.bench_self_skip",         # §III.B forced-remote case study
+    "benchmarks.bench_moe_dispatch",      # technique → TPU (MoE adaptive dispatch)
+    "benchmarks.bench_kernels",           # Pallas kernel latencies (interpret)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    default=bool(os.environ.get("REPRO_BENCH_QUICK")))
+    ap.add_argument("--only", type=str, default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in BENCHES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+        except ModuleNotFoundError:
+            print(f"{mod_name},0,SKIP (module not present)")
+            continue
+        try:
+            for name, us, derived in mod.run(quick=args.quick):
+                print(f"{name},{us:.1f},{derived}")
+            print(f"{mod_name.split('.')[-1]}_wall,"
+                  f"{(time.time()-t0)*1e6:.0f},total bench wall time")
+        except Exception:
+            failures += 1
+            print(f"{mod_name},0,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: the DySkew adaptive link in 40 lines.
+
+Creates 4 sibling link instances, feeds a skewed stream of work items, and
+watches the state machines detect the skew and redistribute.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AdaptiveLink, AdaptiveLinkConfig, DySkewConfig, Policy
+
+link = AdaptiveLink(AdaptiveLinkConfig(
+    dyskew=DySkewConfig(policy=Policy.LATE, n_strikes=3, theta=0.5),
+    num_instances=4,
+))
+state = link.init_state()
+
+print("tick | states (0=INIT 1=DECIDING 2=DRAIN 3=DIST 5=DIST_TERM) | makespan")
+for tick in range(8):
+    # 32 items, all arriving at producer 0 (severe partition skew).
+    costs = jnp.ones(32) * 0.1
+    sizes = jnp.full(32, 1e3)
+    producer = jnp.zeros(32, jnp.int32)
+    state, plan = link.step(state, costs, sizes, producer)
+    loads = np.zeros(4)
+    np.add.at(loads, np.asarray(plan.dest), np.asarray(costs))
+    print(f"{tick:4d} | {np.asarray(state['state'])} | {loads.max():.2f} "
+          f"(balanced would be {float(costs.sum())/4:.2f})")
+
+print("\nThe LATE policy processed locally for 3 strikes, drained, then "
+      "committed to distributed mode — makespan drops 4x.")

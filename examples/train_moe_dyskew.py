@@ -1,0 +1,59 @@
+"""End-to-end training driver: ~100M-param MoE with DySkew adaptive
+dispatch, a few hundred steps on CPU.
+
+The MoE is granite-moe family (32 experts, top-8) scaled to ~100M params;
+DySkew's per-EP-shard state machines manage expert capacity live during
+training. Compares against the static-capacity baseline at the end.
+
+Run:  PYTHONPATH=src python examples/train_moe_dyskew.py --steps 200
+"""
+
+import argparse
+import dataclasses
+
+from repro.config.base import ArchConfig, MoEConfig
+from repro.data.pipeline import DataConfig
+from repro.optim.optimizers import OptimizerConfig
+from repro.train.loop import LoopConfig, train
+
+
+def make_cfg(adaptive: bool) -> ArchConfig:
+    # ~100M params: 8 layers, d=512, 32 experts × ff 512 top-8.
+    return ArchConfig(
+        name="moe-100m", family="moe", num_layers=8, d_model=512,
+        num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=8192,
+        rope_style="full", norm="rmsnorm", mlp_act="swiglu",
+        moe=MoEConfig(num_experts=32, top_k=8, expert_ff=512,
+                      capacity_factor=1.0, adaptive=adaptive),
+        optimizer="adamw", dtype="float32", remat=False,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    for mode in ("dyskew", "static"):
+        cfg = make_cfg(adaptive=(mode == "dyskew"))
+        n = sum(1 for _ in [0])  # placeholder
+        data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=1)
+        opt = OptimizerConfig(name="adamw", lr=1e-3,
+                              warmup_steps=20, total_steps=args.steps)
+        print(f"\n=== {mode} dispatch ===")
+        out = train(cfg, data, opt, LoopConfig(
+            steps=args.steps, log_every=max(args.steps // 10, 1)),
+            on_metrics=lambda s, m: print(
+                f"  step {s:4d} loss={m['loss']:.4f} "
+                f"dropped={m.get('moe_dropped_frac', 0):.4f} "
+                f"imbalance={m.get('moe_shard_imbalance', 0):.2f}"))
+        h = out["history"]
+        print(f"{mode}: loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}, "
+              f"final dropped={h[-1].get('moe_dropped_frac', 0):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""DySkew core: the paper's primary contribution as composable JAX modules.
+
+Public API:
+  types.DySkewConfig / Policy / LinkState / SkewModelKind
+  skew_models — Eq.(1) row-percentage, idle-time, Eq.(2) sync-slope,
+                N-strikes, batch-density Row Size Model
+  state_machine — per-link-instance adaptive state machine (Fig. 2)
+  redistribution — round_robin (legacy baseline), lpt_greedy, zigzag
+  cost_model — cost-aware redistribution gate
+  adaptive_link.AdaptiveLink — the assembled adaptive data link
+"""
+
+from repro.core.adaptive_link import AdaptiveLink, AdaptiveLinkConfig
+from repro.core.cost_model import CostModelConfig
+from repro.core.types import (
+    DySkewConfig,
+    LinkState,
+    Policy,
+    RoutingPlan,
+    SkewModelKind,
+    link_state_init,
+)
+
+__all__ = [
+    "AdaptiveLink",
+    "AdaptiveLinkConfig",
+    "CostModelConfig",
+    "DySkewConfig",
+    "LinkState",
+    "Policy",
+    "RoutingPlan",
+    "SkewModelKind",
+    "link_state_init",
+]

@@ -1,0 +1,176 @@
+"""AdaptiveLink — the paper's adaptive data link, as a reusable primitive.
+
+Ties together the per-instance state machines (`state_machine`), the skew
+models (`skew_models`), the routing planners (`redistribution`) and the
+cost gate (`cost_model`) for the generic setting:
+
+    n producer instances each hold a set of work items; each item has an
+    estimated cost (seconds of downstream compute) and a size (bytes to
+    move it).  Once per tick the link decides, per instance, whether that
+    instance keeps its items local or redistributes them, and — if so —
+    where each item goes.
+
+This host-level orchestration is used directly by the data pipeline
+(items = packed sequences) and the serving scheduler (items = requests).
+The MoE layer re-uses the state machine and planners in a fully in-graph
+SPMD form (see `repro.models.layers.moe`).
+
+Everything here is functionally pure and shape-static, so it can be jitted;
+it also runs fine on host numpy inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core import redistribution, state_machine
+from repro.core.types import DySkewConfig, RoutingPlan, link_state_init
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveLinkConfig:
+    dyskew: DySkewConfig = dataclasses.field(default_factory=DySkewConfig)
+    cost: cm.CostModelConfig = dataclasses.field(default_factory=cm.CostModelConfig)
+    # Estimated per-item compute used for batch-density normalization when a
+    # producer holds zero items this tick.
+    num_instances: int = 8
+
+
+class AdaptiveLink:
+    """Functional adaptive link over ``num_instances`` sibling instances."""
+
+    def __init__(self, config: AdaptiveLinkConfig):
+        self.config = config
+        self.n = config.num_instances
+
+    def init_state(self) -> Dict[str, jax.Array]:
+        return link_state_init(self.n, self.config.dyskew)
+
+    # ------------------------------------------------------------------ #
+
+    def _per_producer_metrics(
+        self,
+        item_costs: jax.Array,
+        item_sizes: jax.Array,
+        item_producer: jax.Array,
+        item_valid: jax.Array,
+    ) -> Dict[str, jax.Array]:
+        n = self.n
+        w = item_valid.astype(jnp.float32)
+        rows = jnp.zeros((n,), jnp.float32).at[item_producer].add(w)
+        sync = jnp.zeros((n,), jnp.float32).at[item_producer].add(
+            w * item_costs.astype(jnp.float32)
+        )
+        byts = jnp.zeros((n,), jnp.float32).at[item_producer].add(
+            w * item_sizes.astype(jnp.float32)
+        )
+        # One tick == one ingest batch per producer → density = rows/batch.
+        density = rows
+        bytes_per_row = jnp.where(rows > 0, byts / jnp.maximum(rows, 1.0), 0.0)
+        return dict(
+            rows=rows, sync=sync, density=density, bytes_per_row=bytes_per_row
+        )
+
+    def step(
+        self,
+        link: Dict[str, jax.Array],
+        item_costs: jax.Array,
+        item_sizes: jax.Array,
+        item_producer: jax.Array,
+        item_valid: jax.Array | None = None,
+    ) -> Tuple[Dict[str, jax.Array], RoutingPlan]:
+        """One link tick.
+
+        Args:
+          link: carried state from :meth:`init_state`.
+          item_costs: (num_items,) estimated downstream compute seconds.
+          item_sizes: (num_items,) bytes to move each item.
+          item_producer: (num_items,) int32 owning instance per item.
+          item_valid: (num_items,) bool; padding slots are False.
+
+        Returns (new_link_state, RoutingPlan).
+        """
+        cfg = self.config.dyskew
+        n = self.n
+        num_items = item_costs.shape[0]
+        if item_valid is None:
+            item_valid = jnp.ones((num_items,), bool)
+
+        per = self._per_producer_metrics(
+            item_costs, item_sizes, item_producer, item_valid
+        )
+
+        link, distribute = state_machine.tick(
+            link,
+            cfg,
+            rows_this_tick=per["rows"],
+            sync_time_this_tick=per["sync"],
+            batch_density=per["density"],
+            bytes_per_row=per["bytes_per_row"],
+        )
+
+        # ---- Routing plan -------------------------------------------- #
+        item_distributes = jnp.logical_and(distribute[item_producer], item_valid)
+        plan_costs = jnp.where(item_distributes, item_costs, 0.0)
+
+        # Base load: cost that is pinned to its producer (non-moving items).
+        pinned = jnp.logical_and(item_valid, jnp.logical_not(item_distributes))
+        base_loads = jnp.zeros((n,), jnp.float32).at[item_producer].add(
+            jnp.where(pinned, item_costs, 0.0).astype(jnp.float32)
+        )
+
+        dest_moved, loads_after = redistribution.zigzag(
+            plan_costs, n, base_loads=base_loads
+        )
+        if cfg.self_skip:
+            # Forced-remote ablation: an item may not land on its producer.
+            collide = dest_moved == item_producer
+            dest_moved = jnp.where(
+                collide, (dest_moved + 1) % n, dest_moved
+            ).astype(jnp.int32)
+
+        dest = jnp.where(item_distributes, dest_moved, item_producer).astype(
+            jnp.int32
+        )
+
+        # ---- Cost gate ------------------------------------------------ #
+        loads_before = jnp.zeros((n,), jnp.float32).at[item_producer].add(
+            jnp.where(item_valid, item_costs, 0.0).astype(jnp.float32)
+        )
+        moved = jnp.logical_and(dest != item_producer, item_valid)
+        bytes_moved = jnp.sum(jnp.where(moved, item_sizes, 0.0))
+        items_moved = jnp.sum(moved.astype(jnp.int32))
+        loads_planned = jnp.zeros((n,), jnp.float32).at[dest].add(
+            jnp.where(item_valid, item_costs, 0.0).astype(jnp.float32)
+        )
+        ok, saved, t_move = cm.admit(
+            loads_before, loads_planned, bytes_moved, items_moved, self.config.cost
+        )
+        dest = jnp.where(ok, dest, item_producer).astype(jnp.int32)
+
+        plan = RoutingPlan(
+            dest=dest,
+            distribute=jnp.logical_and(distribute, ok),
+            est_bytes_moved=jnp.where(ok, bytes_moved, 0.0),
+            est_time_saved=jnp.where(ok, saved, 0.0),
+        )
+        return link, plan
+
+
+def apply_plan_host(items: jax.Array, plan: RoutingPlan, num_instances: int):
+    """Host-side helper: bucket items by destination (python lists).
+
+    For the simulator and data pipeline; the SPMD path moves data with
+    all_to_all instead.
+    """
+    import numpy as np
+
+    dest = np.asarray(plan.dest)
+    return [
+        [items[i] for i in np.nonzero(dest == d)[0]] for d in range(num_instances)
+    ]

@@ -1,0 +1,65 @@
+"""Cost-aware redistribution gate (paper goal #3: 'low-overhead
+redistribution ... decisions should be cost-aware so that the overhead of
+transferring rows does not exceed the performance gains').
+
+The model prices a candidate redistribution in seconds on both sides:
+
+  transfer_time = bytes_moved / link_bandwidth
+                + items_moved * per_item_overhead      (serialization / RPC)
+  time_saved    = current_makespan - balanced_makespan
+
+and admits the move iff  time_saved > cost_gate * transfer_time.
+
+On TPU the 'network' is ICI (~50 GB/s/link); in the simulator it is the
+configured NIC bandwidth.  The same formula prices the three row-size
+regimes called out in the paper: ordinary rows (cheap), 100 GB+ blobs
+(§III.B — transfer dominates, gate rejects), and our TPU analogues
+(KV-cache migration, expert-weight replication).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelConfig:
+    link_bandwidth: float = 50e9     # bytes/s (TPU v5e ICI per link)
+    per_item_overhead: float = 5e-6  # s per moved item (serialize+route)
+    cost_gate: float = 1.0           # admit iff saved > gate * transfer
+
+
+def transfer_time(
+    bytes_moved: jax.Array,
+    items_moved: jax.Array,
+    cfg: CostModelConfig,
+) -> jax.Array:
+    return (
+        bytes_moved.astype(jnp.float32) / cfg.link_bandwidth
+        + items_moved.astype(jnp.float32) * cfg.per_item_overhead
+    )
+
+
+def balance_benefit(
+    loads_before: jax.Array,
+    loads_after: jax.Array,
+) -> jax.Array:
+    """Makespan reduction (seconds of straggler time removed)."""
+    return jnp.maximum(jnp.max(loads_before) - jnp.max(loads_after), 0.0)
+
+
+def admit(
+    loads_before: jax.Array,
+    loads_after: jax.Array,
+    bytes_moved: jax.Array,
+    items_moved: jax.Array,
+    cfg: CostModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (admit?, est_time_saved, est_transfer_time)."""
+    saved = balance_benefit(loads_before, loads_after)
+    t_move = transfer_time(bytes_moved, items_moved, cfg)
+    return saved > cfg.cost_gate * t_move, saved, t_move

@@ -1,0 +1,162 @@
+"""Routing planners: how redistributed rows are assigned to destinations.
+
+The paper's *previous* solution — static round-robin across all Python
+interpreter processes (§II.B, Fig. 1) — is kept as the legacy baseline.
+DySkew routes by observed load instead.  Three planners:
+
+  round_robin   — the legacy static strategy (baseline in every benchmark).
+  lpt_greedy    — Longest-Processing-Time greedy: sort items by estimated
+                  cost descending, assign each to the least-loaded
+                  destination (exact greedy, `lax.scan`-sequential).
+  zigzag        — vectorized near-LPT: sort descending, snake the sorted
+                  items across destinations (no scan; O(n log n), the
+                  in-graph default for large item counts).
+
+All planners accept a per-destination eligibility mask so the same code
+expresses the paper's self-skip ablation (§III.B 'Forced Remote
+Distribution') and locality restrictions.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def round_robin(
+    num_items: int,
+    num_instances: int,
+    offset: jax.Array | int = 0,
+    eligible: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Legacy static assignment: item k → (offset + k) mod n over eligible
+    destinations. With a full eligibility mask this is exactly Fig. 1."""
+    idx = jnp.arange(num_items, dtype=jnp.int32) + jnp.asarray(offset, jnp.int32)
+    if eligible is None:
+        return idx % num_instances
+    # Map the cyclic index into the compacted eligible set.
+    elig_ids = jnp.nonzero(
+        eligible, size=num_instances, fill_value=num_instances - 1
+    )[0].astype(jnp.int32)
+    n_elig = jnp.maximum(jnp.sum(eligible.astype(jnp.int32)), 1)
+    return elig_ids[idx % n_elig]
+
+
+def lpt_greedy(
+    costs: jax.Array,
+    num_instances: int,
+    base_loads: Optional[jax.Array] = None,
+    eligible: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact LPT greedy. Returns (dest, final_loads).
+
+    Sequential in the number of items (lax.scan); use for moderate item
+    counts (requests, batches) — tokens should use :func:`zigzag`.
+    """
+    n = num_instances
+    loads = (
+        jnp.zeros((n,), jnp.float32) if base_loads is None else base_loads.astype(jnp.float32)
+    )
+    mask = (
+        jnp.zeros((n,), jnp.float32)
+        if eligible is None
+        else jnp.where(eligible, 0.0, -_NEG).astype(jnp.float32)  # +1e30 for ineligible
+    )
+    order = jnp.argsort(-costs)
+    sorted_costs = costs[order].astype(jnp.float32)
+
+    def step(carry, c):
+        loads = carry
+        d = jnp.argmin(loads + mask).astype(jnp.int32)
+        loads = loads.at[d].add(c)
+        return loads, d
+
+    final_loads, dests_sorted = jax.lax.scan(step, loads, sorted_costs)
+    dest = jnp.zeros_like(dests_sorted).at[order].set(dests_sorted)
+    return dest, final_loads
+
+
+def zigzag(
+    costs: jax.Array,
+    num_instances: int,
+    base_loads: Optional[jax.Array] = None,
+    eligible: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized near-LPT ('boustrophedon') assignment.
+
+    Sort items by cost descending; walk destinations 0..n-1, n-1..0, ... so
+    each pass pairs a heavy item with the destination that got a light one
+    on the previous pass.  Ineligible destinations are excised by mapping
+    the snake over the compacted eligible set.  Destination ranks are
+    rotated by the rank of each destination's base load so pre-loaded
+    instances receive the lighter items first.
+    """
+    n = num_instances
+    num_items = costs.shape[0]
+    order = jnp.argsort(-costs)
+
+    if eligible is None:
+        elig_ids = jnp.arange(n, dtype=jnp.int32)
+        n_elig = n
+        n_elig_arr = jnp.asarray(n, jnp.int32)
+    else:
+        elig_ids = jnp.nonzero(eligible, size=n, fill_value=0)[0].astype(jnp.int32)
+        n_elig_arr = jnp.maximum(jnp.sum(eligible.astype(jnp.int32)), 1)
+        n_elig = None  # dynamic
+
+    k = jnp.arange(num_items, dtype=jnp.int32)
+    ne = n_elig_arr if n_elig is None else jnp.asarray(n_elig, jnp.int32)
+    pass_idx = k // ne
+    pos = k % ne
+    snaked = jnp.where(pass_idx % 2 == 0, pos, ne - 1 - pos)
+
+    if base_loads is not None:
+        # Least-loaded eligible destination should receive the heaviest item.
+        loads_e = base_loads[elig_ids]
+        if eligible is not None:
+            loads_e = jnp.where(jnp.arange(n) < ne, loads_e, jnp.inf)
+        rank = jnp.argsort(jnp.argsort(loads_e))  # rank of each slot by load
+        inv = jnp.argsort(rank)
+        snaked = inv[snaked]
+
+    dest_sorted = elig_ids[snaked]
+    dest = jnp.zeros_like(dest_sorted).at[order].set(dest_sorted)
+
+    loads0 = (
+        jnp.zeros((n,), jnp.float32) if base_loads is None else base_loads.astype(jnp.float32)
+    )
+    final_loads = loads0.at[dest].add(costs.astype(jnp.float32))
+    return dest, final_loads
+
+
+def eligibility_mask(
+    num_instances: int,
+    self_id: jax.Array | int,
+    self_skip: bool,
+) -> jax.Array:
+    """Destination eligibility for a given producer.
+
+    ``self_skip=True`` reproduces the generalized framework's forced-remote
+    behavior; ``False`` is the paper's Snowpark optimization (local worker is
+    a valid destination → no self-exclusion bias)."""
+    mask = jnp.ones((num_instances,), bool)
+    if self_skip:
+        mask = mask.at[jnp.asarray(self_id, jnp.int32)].set(False)
+    return mask
+
+
+def local_assignment(num_items: int, self_id: jax.Array | int) -> jax.Array:
+    """The default 1:1 producer→consumer link: everything stays local."""
+    return jnp.full((num_items,), jnp.asarray(self_id, jnp.int32))
+
+
+def makespan(dest: jax.Array, costs: jax.Array, num_instances: int) -> jax.Array:
+    """Max per-destination load — the quantity skew mitigation minimizes."""
+    loads = jnp.zeros((num_instances,), jnp.float32).at[dest].add(
+        costs.astype(jnp.float32)
+    )
+    return jnp.max(loads)

@@ -1,0 +1,202 @@
+"""The adaptive-link state machine (paper §III.A, Fig. 2).
+
+Each link instance is an independent state machine; the redistribution policy
+selects which transitions are reachable.  The machine is vectorized over
+instances (shape (n,)) and expressed with `jnp.where` so it advances inside a
+jitted SPMD step; the same code runs on host numpy arrays in the simulator.
+
+Transitions implemented (red default path + policy-gated paths):
+
+  NEVER:            INIT → LOCAL_TERMINAL
+  LATE (default):   INIT → DECIDING --N-strikes--> DRAINING → DISTRIBUTING
+                    → DISTRIBUTED_TERMINAL            (non-looping commit)
+                    DISTRIBUTING --N clean ticks--> DECIDING   (looping only)
+  EARLY:            INIT → DISTRIBUTING → DISTRIBUTED_TERMINAL
+  EAGER_SNOWPARK:   INIT → DISTRIBUTING (eager; stays adaptive)
+                    DISTRIBUTING --heavy-rows & not-skewed--> LOCAL_TERMINAL
+                    (the §III.B Row-Size-Model intervention)
+
+The DRAINING state is the paper's 'intermediate state': in the engine it
+completes in-flight file boundaries; in our synchronous setting it consumes
+exactly one tick, which models the one-batch drain delay and keeps the
+trace shape-stable.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import skew_models
+from repro.core.types import DySkewConfig, LinkState, Policy
+
+
+def routes_remote(state: jax.Array) -> jax.Array:
+    """Per-instance bool: does this state send rows to remote instances?"""
+    return jnp.logical_or(
+        state == int(LinkState.DISTRIBUTING),
+        state == int(LinkState.DISTRIBUTED_TERMINAL),
+    )
+
+
+def is_terminal(state: jax.Array) -> jax.Array:
+    return jnp.logical_or(
+        state == int(LinkState.LOCAL_TERMINAL),
+        state == int(LinkState.DISTRIBUTED_TERMINAL),
+    )
+
+
+def _advance_never(state: jax.Array) -> jax.Array:
+    return jnp.where(
+        state == int(LinkState.INIT), int(LinkState.LOCAL_TERMINAL), state
+    )
+
+
+def _advance_late(
+    state: jax.Array,
+    fire: jax.Array,
+    clean_fire: jax.Array,
+    looping: bool,
+) -> jax.Array:
+    s = state
+    out = s
+    # INIT → DECIDING
+    out = jnp.where(s == int(LinkState.INIT), int(LinkState.DECIDING), out)
+    # DECIDING → DRAINING on N-strikes fire
+    out = jnp.where(
+        jnp.logical_and(s == int(LinkState.DECIDING), fire),
+        int(LinkState.DRAINING),
+        out,
+    )
+    # DRAINING → DISTRIBUTING (one-tick drain)
+    out = jnp.where(s == int(LinkState.DRAINING), int(LinkState.DISTRIBUTING), out)
+    if looping:
+        # DISTRIBUTING → DECIDING after N consecutive clean ticks
+        out = jnp.where(
+            jnp.logical_and(s == int(LinkState.DISTRIBUTING), clean_fire),
+            int(LinkState.DECIDING),
+            out,
+        )
+    else:
+        # Non-looping: commit after one distributing tick.
+        out = jnp.where(
+            s == int(LinkState.DISTRIBUTING),
+            int(LinkState.DISTRIBUTED_TERMINAL),
+            out,
+        )
+    return out
+
+
+def _advance_early(state: jax.Array) -> jax.Array:
+    s = state
+    out = jnp.where(s == int(LinkState.INIT), int(LinkState.DISTRIBUTING), s)
+    out = jnp.where(
+        s == int(LinkState.DISTRIBUTING),
+        int(LinkState.DISTRIBUTED_TERMINAL),
+        out,
+    )
+    return out
+
+
+def _advance_eager_snowpark(state: jax.Array, heavy: jax.Array) -> jax.Array:
+    s = state
+    out = jnp.where(s == int(LinkState.INIT), int(LinkState.DISTRIBUTING), s)
+    # §III.B: not skewed AND batch density collapsed → disable redistribution.
+    out = jnp.where(
+        jnp.logical_and(s == int(LinkState.DISTRIBUTING), heavy),
+        int(LinkState.LOCAL_TERMINAL),
+        out,
+    )
+    return out
+
+
+def advance(
+    link: Dict[str, jax.Array],
+    config: DySkewConfig,
+) -> Dict[str, jax.Array]:
+    """Advance every sibling instance's state machine by one tick.
+
+    ``link`` is the pytree from ``types.link_state_init`` whose ``metrics``
+    have already been updated for this tick (see
+    ``skew_models.update_metrics``).
+    """
+    state = link["state"]
+    strikes = link["strikes"]
+    metrics = link["metrics"]
+
+    skewed_now = skew_models.detect_skew(metrics, config)
+    fire, skew_strikes = skew_models.apply_n_strikes(
+        skewed_now, strikes, config.n_strikes
+    )
+    # Strikes only accumulate while the machine is actively DECIDING —
+    # INIT is 'before data processing begins' (paper phase 1).
+    deciding = state == int(LinkState.DECIDING)
+    fire = jnp.logical_and(fire, deciding)
+    # Clean-tick counter for looping fallback shares the strike register:
+    # while DISTRIBUTING we count *clean* ticks instead of skewed ones.
+    distributing = state == int(LinkState.DISTRIBUTING)
+    clean_now = jnp.logical_not(skewed_now)
+    clean_strikes = jnp.where(clean_now, strikes + 1, 0).astype(strikes.dtype)
+    clean_fire = clean_strikes >= config.n_strikes
+    new_strikes = jnp.where(
+        deciding,
+        skew_strikes,
+        jnp.where(distributing, clean_strikes, jnp.zeros_like(strikes)),
+    )
+
+    heavy = skew_models.heavy_row_disable(metrics, config)
+
+    policy = config.policy
+    if policy == Policy.NEVER:
+        new_state = _advance_never(state)
+    elif policy == Policy.LATE:
+        new_state = _advance_late(state, fire, clean_fire, config.looping)
+    elif policy == Policy.EARLY:
+        new_state = _advance_early(state)
+    elif policy == Policy.EAGER_SNOWPARK:
+        new_state = _advance_eager_snowpark(state, heavy)
+    else:  # pragma: no cover - config validation
+        raise ValueError(f"unknown policy {policy!r}")
+
+    became_remote = jnp.logical_and(
+        jnp.logical_not(routes_remote(state)), routes_remote(new_state)
+    )
+    transitions = link["transitions"] + became_remote.astype(jnp.int32)
+
+    return {
+        "state": new_state.astype(jnp.int32),
+        "strikes": new_strikes,
+        "metrics": metrics,
+        "transitions": transitions,
+        "tick": link["tick"] + 1,
+    }
+
+
+def tick(
+    link: Dict[str, jax.Array],
+    config: DySkewConfig,
+    *,
+    rows_this_tick: jax.Array,
+    sync_time_this_tick: jax.Array,
+    batch_density: jax.Array,
+    bytes_per_row: jax.Array,
+    signal_this_tick: jax.Array | None = None,
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Full per-tick update: metrics ingest + state-machine advance.
+
+    Returns (new_link_state, distribute_mask) where ``distribute_mask`` is
+    the per-instance bool for 'this producer routes remotely this tick'.
+    """
+    metrics = skew_models.update_metrics(
+        link["metrics"],
+        rows_this_tick=rows_this_tick,
+        sync_time_this_tick=sync_time_this_tick,
+        batch_density=batch_density,
+        bytes_per_row=bytes_per_row,
+        signal_this_tick=signal_this_tick,
+    )
+    link = dict(link, metrics=metrics)
+    new_link = advance(link, config)
+    return new_link, routes_remote(new_link["state"])

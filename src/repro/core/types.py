@@ -1,0 +1,175 @@
+"""Core types for the DySkew adaptive data link.
+
+The paper models each data-link instance as an independent state machine
+(Fig. 2) progressing through four phases.  We encode states and policies as
+integers so the whole machine is `jax.lax`-traceable and can be carried in a
+jitted training/serving step, while remaining usable from plain Python in the
+discrete-event simulator (`repro.sim`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class LinkState(enum.IntEnum):
+    """States of the adaptive-link state machine (paper §III.A, Fig. 2).
+
+    Phase 1: INIT — link configured with its policy, before data flows.
+    Phase 2: DECIDING — processing locally while the skew model evaluates.
+    Phase 3: DRAINING — intermediate: finish in-flight batch/file boundaries
+             before committing to distributed mode.
+    Phase 4: LOCAL_TERMINAL / DISTRIBUTED_TERMINAL — committed modes.
+             DISTRIBUTING is the active distributed state reachable before a
+             terminal commit in looping configurations.
+    """
+
+    INIT = 0
+    DECIDING = 1
+    DRAINING = 2
+    DISTRIBUTING = 3
+    LOCAL_TERMINAL = 4
+    DISTRIBUTED_TERMINAL = 5
+
+    @property
+    def is_terminal(self) -> bool:
+        return self in (LinkState.LOCAL_TERMINAL, LinkState.DISTRIBUTED_TERMINAL)
+
+    @property
+    def routes_remote(self) -> bool:
+        """Whether a link in this state sends rows to remote instances."""
+        return self in (LinkState.DISTRIBUTING, LinkState.DISTRIBUTED_TERMINAL)
+
+
+NUM_STATES = len(LinkState)
+
+
+class Policy(enum.IntEnum):
+    """Redistribution policy declared by the consumer operator (§III.A).
+
+    NEVER          — rows never leave the local instance (ordering / local
+                     state dependencies).
+    LATE           — default: process locally, redistribute only once the
+                     skew model fires (N strikes).
+    EARLY          — redistribute immediately; observation phase skipped.
+    EAGER_SNOWPARK — the paper's Snowpark policy: EARLY + row-size/batch-
+                     density guard (§III.B) + no self-skipping.
+    """
+
+    NEVER = 0
+    LATE = 1
+    EARLY = 2
+    EAGER_SNOWPARK = 3
+
+
+class SkewModelKind(enum.IntEnum):
+    ROW_PERCENTAGE = 0   # Eq. (1)
+    IDLE_TIME = 1
+    SYNC_TIME_SLOPE = 2  # Eq. (2)
+
+
+@dataclasses.dataclass(frozen=True)
+class DySkewConfig:
+    """Static configuration of the adaptive link (hashable; safe to close
+    over in jit)."""
+
+    policy: Policy = Policy.LATE
+    skew_model: SkewModelKind = SkewModelKind.ROW_PERCENTAGE
+    # Eq. (1)/(2) threshold θ: instance i is skewed when
+    #   metric_i * theta > mean(metric_{-i}).
+    theta: float = 0.5
+    # N-strikes framework: N consecutive detections before redistribution.
+    n_strikes: int = 3
+    # Idle-time model: a sibling is idle if it received no row/signal for
+    # `idle_grace` ticks; skew fires when >= `idle_sibling_frac` of siblings
+    # are idle while we are busy.
+    idle_grace: int = 2
+    idle_sibling_frac: float = 0.5
+    # Sync-time-slope model: sliding window length (measurements).
+    slope_window: int = 8
+    # Row Size Model (§III.B): target batch density (rows/batch) and the
+    # low-density trigger. Paper: normal batches carry thousands of rows;
+    # heavy-row batches drop density by >99 %.
+    target_batch_density: float = 4096.0
+    min_batch_density_frac: float = 0.01
+    # A batch counts as 'heavy-row' only if density collapsed BECAUSE rows
+    # are large (>= heavy_row_bytes); small end-of-stream remainder batches
+    # must not trip the guard.
+    heavy_row_bytes: float = 1e6
+    # Whether the local instance is a valid redistribution destination.
+    # Paper §III.B removes the self-skipping logic for Snowpark.
+    self_skip: bool = False
+    # Looping: terminal states may re-enter DECIDING (non-looping default).
+    looping: bool = False
+    # Cost model: refuse a redistribution whose estimated transfer time
+    # exceeds `cost_gate` × the estimated compute time saved.
+    cost_gate: float = 1.0
+
+    @property
+    def min_batch_density(self) -> float:
+        return self.target_batch_density * self.min_batch_density_frac
+
+    def replace(self, **kw: Any) -> "DySkewConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def link_metrics_zeros(num_instances: int, slope_window: int) -> Dict[str, jax.Array]:
+    """Per-instance runtime metrics observed by the skew models.
+
+    A pytree of arrays shaped (num_instances, ...) so a single SPMD program
+    holds every sibling's view (the paper's 'state machines can observe the
+    state of sibling instances').
+    """
+    n = num_instances
+    return {
+        # Cumulative rows processed by each instance (row-percentage model).
+        "rows": jnp.zeros((n,), jnp.float32),
+        # Ticks since each instance last received a row/signal (idle model).
+        "idle_ticks": jnp.zeros((n,), jnp.float32),
+        # Sliding window of per-tick synchronous processing time (slope model),
+        # newest entry last.
+        "sync_window": jnp.zeros((n, slope_window), jnp.float32),
+        # Rows per batch observed this tick (Row Size Model).
+        "batch_density": jnp.full((n,), 0.0, jnp.float32),
+        # Bytes per row observed this tick (Row Size Model / cost model).
+        "bytes_per_row": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def link_state_init(
+    num_instances: int,
+    config: DySkewConfig,
+) -> Dict[str, jax.Array]:
+    """Initial carried state for `num_instances` sibling link instances."""
+    n = num_instances
+    return {
+        "state": jnp.full((n,), int(LinkState.INIT), jnp.int32),
+        "strikes": jnp.zeros((n,), jnp.int32),
+        "metrics": link_metrics_zeros(n, config.slope_window),
+        # Count of redistribution transitions committed (telemetry; feeds the
+        # production-rollout benchmark's '% of queries redistributed').
+        "transitions": jnp.zeros((n,), jnp.int32),
+        "tick": jnp.zeros((), jnp.int32),
+    }
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoutingPlan:
+    """Result of a redistribution decision for one tick.
+
+    ``dest`` maps each work item to a destination instance; ``distribute``
+    is the per-instance boolean saying whether that producer is in a
+    remote-routing state this tick.  Registered as a pytree so plans flow
+    through jit/scan.
+    """
+
+    dest: jax.Array          # (num_items,) int32 destination instance ids
+    distribute: jax.Array    # (num_instances,) bool
+    est_bytes_moved: Optional[jax.Array] = None  # scalar, cost-model telemetry
+    est_time_saved: Optional[jax.Array] = None   # scalar, cost-model telemetry

@@ -1,0 +1,77 @@
+"""Pallas kernel: routing-plan gather — the redistribution data movement.
+
+Given activations ``x`` (T, D), a slot→source-token map ``src`` (S,) and a
+slot validity mask, produce the dispatch buffer (S, D) with invalid slots
+zeroed.  This is the hot inner loop of DySkew's redistribution on TPU: the
+(G, E, C, d) MoE dispatch buffer and the serving-side request migration
+buffers are both built from this primitive.
+
+Tiling: grid over (slot blocks × feature blocks).  Each program instance
+holds one (BLOCK_S, BLOCK_D) output tile and the full (T, BLOCK_D) stripe
+of ``x`` in VMEM; rows are fetched with dynamic slices.  BLOCK_D is chosen
+so the stripe fits VMEM (T·BLOCK_D·2 bytes ≤ ~4 MB for bf16); the MXU is
+not involved (pure data movement) so lane alignment (128) is what matters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dispatch_kernel(src_ref, valid_ref, x_ref, out_ref):
+    """One (BLOCK_S, BLOCK_D) output tile.
+
+    src_ref:   (BLOCK_S,) int32 — source row per slot
+    valid_ref: (BLOCK_S,) int32 — 1 if the slot is filled
+    x_ref:     (T, BLOCK_D)     — feature stripe of the source tokens
+    out_ref:   (BLOCK_S, BLOCK_D)
+    """
+    block_s = out_ref.shape[0]
+
+    def body(i, _):
+        idx = src_ref[i]
+        v = valid_ref[i]
+        row = x_ref[pl.dslice(idx, 1), :]
+        row = row * v.astype(row.dtype)
+        out_ref[pl.dslice(i, 1), :] = row
+        return 0
+
+    jax.lax.fori_loop(0, block_s, body, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "block_d", "interpret")
+)
+def dispatch_gather(
+    x: jax.Array,        # (T, D)
+    src: jax.Array,      # (S,) int32 in [0, T)
+    valid: jax.Array,    # (S,) bool/int
+    *,
+    block_s: int = 256,
+    block_d: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (S, D) dispatch buffer; invalid slots are zero."""
+    T, D = x.shape
+    S = src.shape[0]
+    block_s = min(block_s, S)
+    block_d = min(block_d, D)
+    assert S % block_s == 0 and D % block_d == 0, (S, block_s, D, block_d)
+    grid = (S // block_s, D // block_d)
+
+    return pl.pallas_call(
+        _dispatch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s,), lambda i, j: (i,)),
+            pl.BlockSpec((block_s,), lambda i, j: (i,)),
+            pl.BlockSpec((T, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((S, D), x.dtype),
+        interpret=interpret,
+    )(src.astype(jnp.int32), valid.astype(jnp.int32), x)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the dispatch gather."""
+
+import jax
+import jax.numpy as jnp
+
+
+def dispatch_gather_ref(x: jax.Array, src: jax.Array, valid: jax.Array) -> jax.Array:
+    """(T,D) × (S,) × (S,) → (S,D); invalid slots zeroed."""
+    rows = x[src.astype(jnp.int32)]
+    return rows * valid.astype(x.dtype)[:, None]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the load histogram."""
+
+import jax
+import jax.numpy as jnp
+
+
+def load_histogram_ref(ids: jax.Array, num_dest: int) -> jax.Array:
+    return jnp.zeros((num_dest,), jnp.float32).at[ids.astype(jnp.int32)].add(1.0)

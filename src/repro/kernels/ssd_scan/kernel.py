@@ -1,0 +1,69 @@
+"""Pallas kernel: Mamba-2 inter-chunk state recurrence.
+
+The chunked SSD algorithm reduces each chunk to a (H, P, N) state
+contribution plus a per-head decay; chaining them is a strictly sequential
+recurrence over chunks:
+
+    h_c = decay_c ⊙ h_{c-1} + s_c            (prefix of h fed back to chunk c)
+
+This kernel computes all prefix states in one pass.  Tiling: grid over
+(head blocks × P blocks); each program instance keeps its (C, BLOCK_H,
+BLOCK_P, N) slice of the contributions in VMEM and walks the C chunks with
+a fori_loop — the recurrence is latency-bound, so the win is keeping the
+whole walk on-chip instead of C round-trips to HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_scan_kernel(states_ref, decay_ref, out_ref):
+    """states_ref: (C, BH, BP, N); decay_ref: (C, BH); out_ref like states.
+
+    out[c] = prefix state BEFORE chunk c (h_{c-1} in the recurrence).
+    """
+    C = states_ref.shape[0]
+    h0 = jnp.zeros(states_ref.shape[1:], jnp.float32)
+
+    def body(c, h):
+        out_ref[pl.dslice(c, 1)] = h[None]
+        d = decay_ref[c]                               # (BH,)
+        s = states_ref[c]                              # (BH, BP, N)
+        return h * d[:, None, None] + s.astype(jnp.float32)
+
+    jax.lax.fori_loop(0, C, body, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "block_p", "interpret"))
+def ssd_state_scan(
+    states: jax.Array,    # (C, H, P, N) per-chunk contributions
+    decay: jax.Array,     # (C, H) per-chunk decays (exp of summed dA)
+    *,
+    block_h: int = 8,
+    block_p: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (C, H, P, N): the state entering each chunk."""
+    C, H, P, N = states.shape
+    block_h = min(block_h, H)
+    block_p = min(block_p, P)
+    assert H % block_h == 0 and P % block_p == 0
+    grid = (H // block_h, P // block_p)
+    return pl.pallas_call(
+        _ssd_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, block_h, block_p, N), lambda i, j: (0, i, j, 0)),
+            pl.BlockSpec((C, block_h), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec(
+            (C, block_h, block_p, N), lambda i, j: (0, i, j, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((C, H, P, N), jnp.float32),
+        interpret=interpret,
+    )(states, decay.astype(jnp.float32))

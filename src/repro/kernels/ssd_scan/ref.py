@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the SSD inter-chunk state recurrence."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_state_scan_ref(states: jax.Array, decay: jax.Array) -> jax.Array:
+    """(C,H,P,N), (C,H) → (C,H,P,N) prefix states (state entering chunk c)."""
+
+    def body(h, inp):
+        s, d = inp
+        out = h
+        h_new = h * d[:, None, None] + s.astype(jnp.float32)
+        return h_new, out
+
+    h0 = jnp.zeros(states.shape[1:], jnp.float32)
+    _, prefix = jax.lax.scan(body, h0, (states, decay.astype(jnp.float32)))
+    return prefix

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for fused top-k gating."""
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_gating_ref(logits: jax.Array, k: int):
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32)

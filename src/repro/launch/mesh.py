@@ -1,0 +1,38 @@
+"""Production mesh definitions.
+
+Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is an
+outer data-parallel axis crossing the DCN (gradient reduction over 'pod'
+is the compression target; see repro.optim.grad_compress).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            n *= mesh.shape[ax]
+    return n
+
+
+def model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,43 @@
+"""Serving launcher CLI: continuous batching with the DySkew scheduler.
+
+  python -m repro.launch.serve --arch starcoder2-3b --reduced --requests 64
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--scheduler", default="dyskew",
+                    choices=["dyskew", "round_robin", "least_loaded"])
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            rid=i,
+            prompt_len=int(rng.integers(64, 512)),
+            max_new_tokens=int(rng.integers(300, 400)) if i % 7 == 0
+            else int(rng.integers(20, 60)),
+            arrival=float(i) * 0.02,
+        )
+        for i in range(args.requests)
+    ]
+    cfg = ServeConfig(num_replicas=args.replicas, scheduler=args.scheduler)
+    res = ServingEngine(cfg).run(reqs)
+    for k, v in res.items():
+        print(f"{k}: {v:.4f}" if isinstance(v, float) else f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: unified transformer covering all assigned architectures."""

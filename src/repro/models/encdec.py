@@ -1,0 +1,192 @@
+"""Encoder-decoder transformer (Whisper-style backbone).
+
+The audio frontend (log-mel + conv subsampling) is a STUB per the
+assignment: ``input_specs`` provides precomputed frame embeddings
+(B, T_enc, d).  Positions are sinusoidal (keeps parameter shapes
+independent of the lowered sequence length; Whisper's learned decoder
+positions are a documented deviation in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models.layers import basic
+from repro.models.layers.attention import (
+    attention_apply,
+    attention_specs,
+    mlp_apply,
+    mlp_specs,
+)
+from repro.models.param import ParamSpec, is_spec
+from repro.models.transformer import _stack_specs
+
+
+def sinusoidal(positions: jax.Array, d: int, dtype) -> jax.Array:
+    """(S,) → (S, d) standard sin/cos embedding."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _enc_layer_specs(cfg: ArchConfig) -> Dict:
+    return {
+        "norm1": basic.norm_specs(cfg.d_model, cfg.norm),
+        "attn": attention_specs(cfg),
+        "norm2": basic.norm_specs(cfg.d_model, cfg.norm),
+        "ffn": mlp_specs(cfg),
+    }
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> Dict:
+    return {
+        "norm1": basic.norm_specs(cfg.d_model, cfg.norm),
+        "attn": attention_specs(cfg),
+        "norm_x": basic.norm_specs(cfg.d_model, cfg.norm),
+        "cross": attention_specs(cfg),
+        "norm2": basic.norm_specs(cfg.d_model, cfg.norm),
+        "ffn": mlp_specs(cfg),
+    }
+
+
+def model_specs(cfg: ArchConfig) -> Dict:
+    out = {
+        "embed": basic.embedding_specs(cfg.padded_vocab, cfg.d_model),
+        "enc_blocks": _stack_specs({"l0": _enc_layer_specs(cfg)}, cfg.encoder_layers),
+        "enc_final_norm": basic.norm_specs(cfg.d_model, cfg.norm),
+        "blocks": _stack_specs({"l0": _dec_layer_specs(cfg)}, cfg.num_layers),
+        "final_norm": basic.norm_specs(cfg.d_model, cfg.norm),
+    }
+    return out
+
+
+def encode(params: Dict, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, T_enc, d) stubbed frame embeddings → (B, T_enc, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    T = frames.shape[1]
+    x = frames.astype(dtype) + sinusoidal(jnp.arange(T), cfg.d_model, dtype)
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def body(x, bp):
+        lp = bp["l0"]
+        h = basic.norm_apply(lp["norm1"], x, cfg.norm)
+        a, _ = attention_apply(lp["attn"], h, cfg=cfg, positions=positions,
+                               causal=False)
+        x = x + a
+        h = basic.norm_apply(lp["norm2"], x, cfg.norm)
+        return x + mlp_apply(lp["ffn"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return basic.norm_apply(params["enc_final_norm"], x, cfg.norm)
+
+
+def decode_state_init(
+    cfg: ArchConfig, batch: int, max_seq: int, dtype
+) -> Dict:
+    nb = cfg.num_layers
+    K, hd = cfg.num_kv_heads, cfg.head_dim_
+    T = cfg.encoder_len
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "kv_self": {
+            "k": jnp.zeros((nb, batch, max_seq, K, hd), dtype),
+            "v": jnp.zeros((nb, batch, max_seq, K, hd), dtype),
+        },
+        # Cross K/V computed once from the encoder output at prefill.
+        "kv_cross": {
+            "k": jnp.zeros((nb, batch, T, K, hd), dtype),
+            "v": jnp.zeros((nb, batch, T, K, hd), dtype),
+        },
+    }
+
+
+def forward(
+    params: Dict,
+    tokens: jax.Array,                    # (B, S)
+    *,
+    cfg: ArchConfig,
+    enc_out: Optional[jax.Array] = None,  # (B, T, d); None during decode
+    decode_state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Decoder forward. During prefill pass enc_out (cross K/V get built and
+    cached); during decode pass decode_state only."""
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    if decode_state is not None:
+        start = decode_state["pos"]
+    else:
+        start = jnp.zeros((), jnp.int32)
+    positions = start + jnp.arange(S, dtype=jnp.int32)
+    x = basic.embed_apply(params["embed"], tokens, dtype)
+    x = x + sinusoidal(positions, cfg.d_model, dtype)
+
+    scanned: Dict[str, Any] = {"params": params["blocks"]}
+    use_cache = decode_state is not None
+    if use_cache:
+        scanned["kv_self"] = decode_state["kv_self"]
+        scanned["kv_cross"] = decode_state["kv_cross"]
+
+    def body(x, sc):
+        lp = sc["params"]["l0"]
+        h = basic.norm_apply(lp["norm1"], x, cfg.norm)
+        out_caches = {}
+        if use_cache:
+            a, new_self = attention_apply(
+                lp["attn"], h, cfg=cfg, positions=positions,
+                cache=sc["kv_self"], cache_index=start,
+            )
+            out_caches["kv_self"] = new_self
+        else:
+            a, _ = attention_apply(lp["attn"], h, cfg=cfg, positions=positions)
+        x = x + a
+
+        h = basic.norm_apply(lp["norm_x"], x, cfg.norm)
+        if enc_out is not None:
+            # Build cross K/V from the encoder output (prefill).
+            c, cross_kv = attention_apply(
+                lp["cross"], h, cfg=cfg, positions=positions, causal=False,
+                kv=enc_out,
+                cache=sc["kv_cross"] if use_cache else None,
+                cache_index=jnp.zeros((), jnp.int32) if use_cache else None,
+            )
+            if cross_kv is not None:
+                out_caches["kv_cross"] = cross_kv
+        else:
+            # Decode: attend against the cached cross K/V.
+            kc, vc = sc["kv_cross"]["k"], sc["kv_cross"]["v"]
+            from repro.models.layers.attention import decode_attention
+
+            H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"].astype(h.dtype))
+            qg = q.reshape(B, S, K, H // K, hd)
+            att = decode_attention(qg, kc, vc, kc.shape[1])
+            att = att.reshape(B, S, H, hd)
+            c = jnp.einsum("bshk,hkd->bsd", att, lp["cross"]["wo"].astype(h.dtype))
+            out_caches["kv_cross"] = sc["kv_cross"]
+        x = x + c
+
+        h = basic.norm_apply(lp["norm2"], x, cfg.norm)
+        x = x + mlp_apply(lp["ffn"], h, cfg)
+        return x, out_caches
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, stacked = jax.lax.scan(body, x, scanned)
+    x = basic.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = basic.logits_apply(params["embed"], x, cfg.vocab_size)
+
+    aux: Dict[str, Any] = {"metrics": {}}
+    if use_cache:
+        new_state = dict(decode_state)
+        new_state["kv_self"] = stacked["kv_self"]
+        new_state["kv_cross"] = stacked["kv_cross"]
+        new_state["pos"] = decode_state["pos"] + S
+        aux["decode_state"] = new_state
+    return logits, aux

@@ -1,0 +1,327 @@
+"""Grouped-query attention with chunked (flash-style) softmax and KV cache.
+
+The chunked path bounds the score-matrix working set to
+(q_chunk × kv_chunk) per head group so 32k-token prefill fits VMEM-scale
+memory budgets; XLA fuses the streaming softmax accumulators.  Decode
+attends a single query step against the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models.layers.basic import apply_rope
+from repro.models.param import spec
+from repro.models.perf_flags import get_flags
+
+NEG_INF = -1e30
+
+
+def quantize_kv(x: jax.Array):
+    """Symmetric int8 quantization per (batch, pos, kv-head) vector.
+    x: (B, S, K, hd) → (int8 values, fp32 scales (B, S, K))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def attention_specs(cfg: ArchConfig) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    out = {
+        "wq": spec((d, H, hd), ("embed", "heads", None)),
+        "wk": spec((d, K, hd), ("embed", "kv_heads", None)),
+        "wv": spec((d, K, hd), ("embed", "kv_heads", None)),
+        "wo": spec((H, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = spec((H, hd), ("heads", None), init="zeros")
+        out["bk"] = spec((K, hd), ("kv_heads", None), init="zeros")
+        out["bv"] = spec((K, hd), ("kv_heads", None), init="zeros")
+    return out
+
+
+def _project_qkv(p: Dict, x: jax.Array, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,              # (B, Sq, K, G, hd) grouped query heads
+    k: jax.Array,              # (B, Skv, K, hd)
+    v: jax.Array,              # (B, Skv, K, hd)
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    kv_len: Optional[jax.Array] = None,  # valid kv prefix length
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    k_scale: Optional[jax.Array] = None,   # (B, Skv, K) for int8 caches
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Streaming-softmax attention over kv chunks. Returns (B,Sq,K,G,hd).
+    int8 k/v are dequantized per chunk inside the scan (bounded temps)."""
+    B, Sq, K, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = hd ** -0.5
+    q = q * scale
+
+    def _pick_chunk(n: int, target: int) -> int:
+        # Largest divisor of n that is <= target (sequence lengths like
+        # whisper's 1500 are not powers of two).
+        for c in range(min(target, n), 0, -1):
+            if n % c == 0:
+                return c
+        return n
+
+    q_chunk = _pick_chunk(Sq, q_chunk)
+    kv_chunk = _pick_chunk(Skv, kv_chunk)
+    nq = Sq // q_chunk
+    nkv = Skv // kv_chunk
+
+    qc = q.reshape(B, nq, q_chunk, K, G, hd)
+    kc = k.reshape(B, nkv, kv_chunk, K, hd)
+    vc = v.reshape(B, nkv, kv_chunk, K, hd)
+    ksc = (
+        k_scale.reshape(B, nkv, kv_chunk, K) if k_scale is not None else
+        jnp.zeros((B, nkv, kv_chunk, 0), jnp.float32)
+    )
+    vsc = (
+        v_scale.reshape(B, nkv, kv_chunk, K) if v_scale is not None else
+        jnp.zeros((B, nkv, kv_chunk, 0), jnp.float32)
+    )
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+    # H1 (perf): with a static q_offset and causal masking, kv chunks
+    # beyond the diagonal are fully masked — the triangular schedule skips
+    # them with per-q-chunk static trip counts (exact flop accounting).
+    causal_skip = (
+        get_flags().causal_skip and causal and isinstance(q_offset, int)
+    )
+
+    def one_q_chunk(qi, qblk, nkv_active=None):
+        # qblk: (B, q_chunk, K, G, hd)
+        q_pos = q_pos_base + qi * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk, ksblk, vsblk = inputs
+            if kblk.dtype == jnp.int8:
+                kblk = kblk.astype(qblk.dtype) * ksblk[..., None].astype(qblk.dtype)
+                vblk = vblk.astype(qblk.dtype) * vsblk[..., None].astype(qblk.dtype)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qblk, kblk).astype(jnp.float32)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+            if kv_len is not None:
+                mask = jnp.logical_and(mask, (k_pos < kv_len)[None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(qblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, hd), qblk.dtype)
+        n_act = nkv if nkv_active is None else nkv_active
+        ks = jnp.arange(n_act, dtype=jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(kc[:, :n_act], 1, 0),
+             jnp.moveaxis(vc[:, :n_act], 1, 0),
+             jnp.moveaxis(ksc[:, :n_act], 1, 0),
+             jnp.moveaxis(vsc[:, :n_act], 1, 0)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))  # (B, q_chunk, K, G, hd)
+
+    if causal_skip:
+        outs = []
+        for qi in range(nq):
+            last_pos = q_offset + (qi + 1) * q_chunk - 1
+            n_act = min(nkv, last_pos // kv_chunk + 1)
+            outs.append(one_q_chunk(
+                jnp.asarray(qi, jnp.int32), qc[:, qi], nkv_active=n_act
+            ))
+        return jnp.stack(outs, axis=1).reshape(B, Sq, K, G, hd)
+
+    outs = jax.lax.map(
+        lambda args: one_q_chunk(*args),
+        (jnp.arange(nq, dtype=jnp.int32), jnp.moveaxis(qc, 1, 0)),
+    )  # (nq, B, q_chunk, K, G, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, K, G, hd)
+
+
+def decode_attention(
+    q: jax.Array,             # (B, 1, K, G, hd)
+    k_cache: jax.Array,       # (B, S, K, hd) — model dtype or int8
+    v_cache: jax.Array,
+    kv_len: jax.Array,        # scalar/int — valid cache length (inclusive)
+    k_scale: Optional[jax.Array] = None,   # (B, S, K) for int8 caches
+    v_scale: Optional[jax.Array] = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    kc = k_cache.astype(q.dtype) if k_cache.dtype == jnp.int8 else k_cache
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q * hd ** -0.5, kc)
+    s = s.astype(jnp.float32)
+    if k_scale is not None:
+        # scores scale linearly in k: apply the per-(pos, head) scale after
+        # the int8 dot (keeps the cache int8 end-to-end).
+        s = s * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, None, :]
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where((pos < kv_len)[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    vc = v_cache.astype(q.dtype) if v_cache.dtype == jnp.int8 else v_cache
+    if v_scale is not None:
+        p = p * jnp.transpose(v_scale, (0, 2, 1))[:, :, None, None, :].astype(p.dtype)
+    out = jnp.einsum("bkgqc,bckh->bqkgh", p, vc)
+    return out
+
+
+def attention_apply(
+    p: Dict,
+    x: jax.Array,             # (B, S, d)
+    *,
+    cfg: ArchConfig,
+    positions: jax.Array,     # (S,) or (B, S)
+    causal: bool = True,
+    cache: Optional[Dict] = None,  # {'k','v'[,'k_scale','v_scale']}
+    cache_index: Optional[jax.Array] = None,              # write offset
+    kv: Optional[jax.Array] = None,   # cross-attention source (B, Skv, d)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Returns (output (B,S,d), updated cache or None)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    G = H // K
+
+    if kv is None:
+        q, k, v = _project_qkv(p, x, cfg)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", kv, p["wk"].astype(kv.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", kv, p["wv"].astype(kv.dtype))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(x.dtype)
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+
+    if kv is None:  # self-attention gets RoPE
+        pos_b = positions if positions.ndim == 2 else positions[None, :]
+        q = apply_rope(q, pos_b, cfg.rope_theta, cfg.rope_style)
+        k_pos = pos_b
+        k = apply_rope(k, k_pos, cfg.rope_theta, cfg.rope_style)
+
+    qg = q.reshape(B, S, K, G, hd)
+
+    new_cache = None
+    if cache is not None:
+        flags = get_flags()
+        if flags.constrain_kv and flags.kv_pspec is not None:
+            # H3: match the cache's (batch, seq→model) layout BEFORE the
+            # dynamic_update_slice so GSPMD reshards the small fresh K/V
+            # instead of involuntarily rematerializing the cache.
+            k = jax.lax.with_sharding_constraint(k, flags.kv_pspec)
+            v = jax.lax.with_sharding_constraint(v, flags.kv_pspec)
+        quantized = "k_scale" in cache
+        idx = cache_index if cache_index is not None else 0
+        if quantized:
+            kq, ks_new = quantize_kv(k)
+            vq, vs_new = quantize_kv(v)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kq, idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vq, idx, axis=1)
+            k_scale = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks_new, idx, axis=1)
+            v_scale = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs_new, idx, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache,
+                         "k_scale": k_scale, "v_scale": v_scale}
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, idx, axis=1)
+            k_scale = v_scale = None
+            new_cache = {"k": k_cache, "v": v_cache}
+        kv_len = (cache_index if cache_index is not None else 0) + S
+        flags = get_flags()
+        if (
+            S > 1 and flags.causal_skip and flags.kv_pspec is not None
+        ):
+            # H1 companion: materialize the (seq-sharded) cache locally
+            # ONCE per layer before the unrolled triangular q-chunk loop —
+            # otherwise every chunk re-gathers its slice (9× collective
+            # blowup measured on qwen prefill_32k).
+            from jax.sharding import PartitionSpec as _P
+
+            gather_spec = _P(flags.kv_pspec[0], None, None, None)
+            k_cache = jax.lax.with_sharding_constraint(k_cache, gather_spec)
+            v_cache = jax.lax.with_sharding_constraint(v_cache, gather_spec)
+        if S == 1:
+            out = decode_attention(qg, k_cache, v_cache, kv_len,
+                                   k_scale=k_scale, v_scale=v_scale)
+        else:
+            out = chunked_attention(
+                qg, k_cache, v_cache, causal=causal, q_offset=idx,
+                kv_len=kv_len, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                k_scale=k_scale, v_scale=v_scale,
+            )
+    else:
+        out = chunked_attention(
+            qg, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+
+    out = out.reshape(B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ------------------------------- MLP ---------------------------------- #
+
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": spec((d, f), ("embed", "mlp")),
+            "w_up": spec((d, f), ("embed", "mlp")),
+            "w_down": spec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": spec((d, f), ("embed", "mlp")),
+        "w_down": spec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        inner = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+        h = inner(x @ p["w_gate"].astype(x.dtype)) * (
+            x @ p["w_up"].astype(x.dtype)
+        )
+    else:
+        from repro.models.layers.basic import act
+
+        h = act(cfg.mlp_act, x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)

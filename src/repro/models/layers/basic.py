@@ -1,0 +1,102 @@
+"""Norms, activations, embeddings, positional encodings."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import spec
+
+
+# ----------------------------- norms --------------------------------- #
+
+def norm_specs(d: int, kind: str) -> Dict:
+    if kind == "rmsnorm":
+        return {"scale": spec((d,), (None,), init="ones")}
+    return {
+        "scale": spec((d,), (None,), init="ones"),
+        "bias": spec((d,), (None,), init="zeros"),
+    }
+
+
+def norm_apply(p: Dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def act(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+# --------------------------- embeddings ------------------------------- #
+
+def embedding_specs(vocab_padded: int, d: int) -> Dict:
+    return {"table": spec((vocab_padded, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed_apply(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def logits_apply(
+    p: Dict, x: jax.Array, true_vocab: int
+) -> jax.Array:
+    """Tied/untied output head; pad-vocab logits masked to -inf."""
+    table = p["table"].astype(x.dtype)
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    vpad = table.shape[0]
+    if vpad != true_vocab:
+        mask = jnp.arange(vpad) < true_vocab
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+# ------------------------------ RoPE ---------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float, style: str) -> jax.Array:
+    """Inverse frequencies. 'half' (ChatGLM 2-d RoPE) rotates only the
+    first half of the head dim; 'full' rotates everything."""
+    rot = head_dim if style == "full" else head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(
+    x: jax.Array,            # (..., S, n, head_dim)
+    positions: jax.Array,    # (..., S) int32
+    theta: float,
+    style: str,
+) -> jax.Array:
+    if style == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if style == "full" else hd // 2
+    inv = rope_freqs(hd, theta, style)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv     # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    if rot == hd:
+        return rotated.astype(x.dtype)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)

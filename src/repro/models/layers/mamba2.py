@@ -1,0 +1,282 @@
+"""Mamba-2 (SSD — state-space duality) layer.
+
+Train/prefill uses the chunked SSD algorithm (arXiv:2405.21060): quadratic
+attention-like computation inside fixed-size chunks, linear recurrent state
+passing between chunks (lax.scan), so memory is O(chunk²) per step instead
+of O(S²).  Decode is the O(1) recurrent update.  A Pallas kernel for the
+chunk computation lives in repro.kernels.ssd_scan; this module is the
+reference path used by the models.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models.layers.basic import norm_apply
+from repro.models.param import spec
+from repro.models.perf_flags import get_flags
+
+
+def _dims(cfg: ArchConfig):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.d_inner(d)
+    nh = mc.num_heads(d)
+    hd = mc.head_dim
+    g = max(nh // 8, 1)            # B/C groups (GQA-style state sharing)
+    n = mc.d_state
+    return d, di, nh, hd, g, n
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict:
+    d, di, nh, hd, g, n = _dims(cfg)
+    w = cfg.mamba.conv_width
+    return {
+        "w_z": spec((d, di), ("embed", "mlp")),
+        "w_x": spec((d, di), ("embed", "mlp")),
+        "w_B": spec((d, g, n), ("embed", None, None)),
+        "w_C": spec((d, g, n), ("embed", None, None)),
+        "w_dt": spec((d, nh), ("embed", "ssm_heads")),
+        "dt_bias": spec((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": spec((nh,), ("ssm_heads",), init="zeros"),
+        "D": spec((nh,), ("ssm_heads",), init="ones"),
+        "conv_x": spec((w, di), ("conv", "mlp"), scale=0.5),
+        "conv_B": spec((w, g, n), ("conv", None, None), scale=0.5),
+        "conv_C": spec((w, g, n), ("conv", None, None), scale=0.5),
+        "norm_scale": spec((di,), (None,), init="ones"),
+        "w_out": spec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv along axis 1. x: (B, S, C), kernel: (W, C)."""
+    w = kernel.shape[0]
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + pad[:, i : i + x.shape[1], :] * kernel[i]
+    return out
+
+
+def ssd_chunked(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)  (post-softplus)
+    A: jax.Array,     # (H,)  (negative)
+    Bm: jax.Array,    # (B, S, G, N)
+    Cm: jax.Array,    # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    L = chunk
+
+    xc = x.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    Bc = Bm.reshape(Bsz, nc, L, G, N)
+    Cc = Cm.reshape(Bsz, nc, L, G, N)
+    head_group = jnp.arange(H) // hpg
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def body(hstate, inp):
+        xk, dtk, Bk, Ck = inp          # (B,L,H,P), (B,L,H), (B,L,G,N)
+        da = (dtk * A).astype(jnp.float32)          # (B,L,H)
+        da_cs = jnp.cumsum(da, axis=1)              # (B,L,H)
+        da_total = da_cs[:, -1, :]                  # (B,H)
+
+        # Intra-chunk (quadratic within chunk):
+        CB = jnp.einsum("blgn,bmgn->bglm", Ck, Bk).astype(jnp.float32)
+        CBh = CB[:, head_group]                     # (B,H,L,L)
+        # Clamp the exponent: entries with i<j are masked out below, but
+        # an inf forward value would still poison the backward pass
+        # (0 * inf = NaN through the where).
+        decay = jnp.exp(
+            jnp.minimum(da_cs[:, :, None, :] - da_cs[:, None, :, :], 0.0)
+        )                                           # (B,L,M,H) i>=j valid
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        Smat = (
+            CBh
+            * jnp.transpose(decay, (0, 3, 1, 2))
+            * dtk.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        )
+        Smat = jnp.where(mask[None, None], Smat, 0.0)
+        y_intra = jnp.einsum(
+            "bhlm,bmhp->blhp", Smat, xk.astype(jnp.float32)
+        )
+
+        # Inter-chunk: contribution of the incoming state.
+        Ch = Ck[:, :, head_group % G]               # (B,L,H,N)
+        state_decay = jnp.exp(da_cs)                # (B,L,H)
+        y_state = jnp.einsum(
+            "blhn,bhpn->blhp", Ch * state_decay[..., None], hstate
+        )
+
+        # New state.
+        w_in = jnp.exp(da_total[:, None, :] - da_cs) * dtk.astype(jnp.float32)
+        Bh = Bk[:, :, head_group % G]               # (B,L,H,N)
+        h_new = hstate * jnp.exp(da_total)[:, :, None, None] + jnp.einsum(
+            "blhn,blhp->bhpn", Bh * w_in[..., None], xk.astype(jnp.float32)
+        )
+        return h_new, (y_intra + y_state).astype(x.dtype)
+
+    hT, ys = jax.lax.scan(
+        body,
+        h0,
+        (
+            jnp.moveaxis(xc, 1, 0),
+            jnp.moveaxis(dtc, 1, 0),
+            jnp.moveaxis(Bc, 1, 0),
+            jnp.moveaxis(Cc, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def mamba_apply(
+    p: Dict,
+    xin: jax.Array,                 # (B, S, d)
+    *,
+    cfg: ArchConfig,
+    state: Optional[Dict] = None,   # decode state {"ssm", "conv_x", "conv_B", "conv_C"}
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence (train/prefill) when state is None; single-step decode
+    otherwise. Returns (y (B,S,d), new_state or None)."""
+    d, di, nh, hd, g, n = _dims(cfg)
+    mc = cfg.mamba
+    B, S, _ = xin.shape
+    dtype = xin.dtype
+
+    z = xin @ p["w_z"].astype(dtype)                      # (B,S,di)
+    xproj = xin @ p["w_x"].astype(dtype)                  # (B,S,di)
+    Bproj = jnp.einsum("bsd,dgn->bsgn", xin, p["w_B"].astype(dtype))
+    Cproj = jnp.einsum("bsd,dgn->bsgn", xin, p["w_C"].astype(dtype))
+    dt = xin @ p["w_dt"].astype(dtype)                    # (B,S,nh)
+
+    flags = get_flags()
+    if flags.constrain_mamba_acts and flags.act_pspec is not None:
+        # H11: pin projection outputs to the batch-sharded layout so GSPMD
+        # gathers the (small) FSDP weights instead of all-reducing the
+        # (B,S,d_inner) partial products.
+        z = jax.lax.with_sharding_constraint(z, flags.act_pspec)
+        xproj = jax.lax.with_sharding_constraint(xproj, flags.act_pspec)
+        dt = jax.lax.with_sharding_constraint(dt, flags.act_pspec)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    if state is None or S > 1:
+        # Full-sequence path (train, or prefill seeding a decode state).
+        # Conv left-context comes from the carried window (zeros at pos 0).
+        w = mc.conv_width
+
+        def conv_full(xs, kernel, window):
+            if window is not None:
+                pad = jnp.concatenate([window.astype(dtype), xs], axis=1)
+                out = jnp.zeros_like(xs)
+                for i in range(w):
+                    out = out + pad[:, i : i + S, :] * kernel[i]
+                return out
+            return _causal_conv(xs, kernel)
+
+        st = state or {}
+        xconv = jax.nn.silu(
+            conv_full(xproj, p["conv_x"].astype(dtype), st.get("conv_x"))
+        )
+        Bco = jax.nn.silu(
+            conv_full(
+                Bproj.reshape(B, S, g * n),
+                p["conv_B"].reshape(-1, g * n).astype(dtype),
+                st.get("conv_B"),
+            )
+        ).reshape(B, S, g, n)
+        Cco = jax.nn.silu(
+            conv_full(
+                Cproj.reshape(B, S, g * n),
+                p["conv_C"].reshape(-1, g * n).astype(dtype),
+                st.get("conv_C"),
+            )
+        ).reshape(B, S, g, n)
+        xh = xconv.reshape(B, S, nh, hd)
+        y, hT = ssd_chunked(
+            xh, dt, A, Bco, Cco, min(mc.chunk, S), h0=st.get("ssm")
+        )
+        y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+        if state is not None:
+            # Carry conv windows (last w-1 pre-activation inputs) + state.
+            def tail(win, xs):
+                full = jnp.concatenate([win.astype(dtype), xs], axis=1)
+                return full[:, -(w - 1):, :]
+
+            new_state = {
+                "ssm": hT,
+                "conv_x": tail(state["conv_x"], xproj),
+                "conv_B": tail(state["conv_B"], Bproj.reshape(B, S, g * n)),
+                "conv_C": tail(state["conv_C"], Cproj.reshape(B, S, g * n)),
+            }
+        else:
+            new_state = None
+    else:
+        # Decode: roll conv windows, recurrent SSM update. S == 1.
+        w = mc.conv_width
+
+        def conv_step(window, xt, kernel):
+            # window: (B, w-1, C); xt: (B, 1, C)
+            full = jnp.concatenate([window, xt], axis=1)      # (B, w, C)
+            out = jnp.einsum("bwc,wc->bc", full, kernel.astype(dtype))
+            return full[:, 1:], out[:, None]
+
+        cw_x, xconv = conv_step(state["conv_x"], xproj, p["conv_x"])
+        cw_B, Bco = conv_step(
+            state["conv_B"], Bproj.reshape(B, 1, g * n),
+            p["conv_B"].reshape(w, g * n),
+        )
+        cw_C, Cco = conv_step(
+            state["conv_C"], Cproj.reshape(B, 1, g * n),
+            p["conv_C"].reshape(w, g * n),
+        )
+        xconv = jax.nn.silu(xconv)
+        Bco = jax.nn.silu(Bco).reshape(B, g, n)
+        Cco = jax.nn.silu(Cco).reshape(B, g, n)
+        xh = xconv.reshape(B, nh, hd)
+
+        hpg = nh // g
+        head_group = jnp.arange(nh) // hpg
+        dt1 = dt[:, 0]                                       # (B,nh)
+        da = jnp.exp(dt1 * A)                                # (B,nh)
+        Bh = Bco[:, head_group % g]                          # (B,nh,n)
+        Ch = Cco[:, head_group % g]
+        h_prev = state["ssm"]                                # (B,nh,hd,n)
+        h_new = h_prev * da[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bh * dt1[..., None], xh.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+        y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+        y = y[:, None]                                       # (B,1,nh,hd)
+        new_state = {"ssm": h_new, "conv_x": cw_x, "conv_B": cw_B, "conv_C": cw_C}
+
+    y = y.reshape(B, S, di).astype(dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_apply({"scale": p["norm_scale"]}, y, "rmsnorm")
+    return y @ p["w_out"].astype(dtype), new_state
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    d, di, nh, hd, g, n = _dims(cfg)
+    w = cfg.mamba.conv_width
+    return {
+        "ssm": jnp.zeros((batch, nh, hd, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, g * n), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, g * n), dtype),
+    }

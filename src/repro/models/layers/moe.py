@@ -1,0 +1,248 @@
+"""Mixture-of-Experts with DySkew adaptive dispatch.
+
+This is the paper's technique mapped to its TPU-native habitat: token →
+expert routing under expert parallelism is exactly the 'rows → workers'
+problem of Snowpark UDFs — arbitrary routing skew, opaque downstream cost,
+and a fixed set of parallel consumers (the EP shards).
+
+Mapping (DESIGN.md §2/§3):
+  row            → token
+  worker         → expert-parallel shard (model axis)
+  link instance  → per-EP-shard state machine, carried across train steps
+  legacy static  → uniform per-expert capacity (drops overflow, GShard)
+  DySkew         → load-proportional effective capacity inside a fixed
+                   buffer: idle shards' unused capacity is reassigned to
+                   hot experts when the state machines commit to
+                   redistribution (EAGER for training, LATE selectable)
+
+Shapes are fully static: the dispatch buffer is (groups, E, C_buf, d) with
+C_buf = headroom × uniform capacity; the *effective* per-expert capacity is
+data, not shape.  Dispatch is gather-based (sort by expert, rank within
+segment), so with batch sharded over ('pod','data') and experts over
+'model', GSPMD tiles expert compute on the 2-D mesh without resharding the
+buffer; only the expert outputs are gathered back per data shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.core import state_machine
+from repro.core.types import DySkewConfig, Policy, link_state_init
+from repro.models.param import spec
+from repro.models.perf_flags import get_flags
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdCtx:
+    """Static SPMD layout facts the layers need at trace time."""
+
+    num_groups: int = 1        # data-parallel shards (token groups)
+    num_ep_shards: int = 1     # expert-parallel shards (model axis)
+    # Mesh axis names for activation sharding constraints (empty = no
+    # constraints; requires an active mesh context when non-empty).
+    batch_axes: tuple = ()
+    model_axis: str = ""
+
+
+def moe_dyskew_config(adaptive: bool) -> DySkewConfig:
+    """EAGER = adaptive capacity from step 0 (the Snowpark policy);
+    NEVER = the static uniform-capacity baseline."""
+    return DySkewConfig(
+        policy=Policy.EAGER_SNOWPARK if adaptive else Policy.NEVER,
+        n_strikes=2,
+        theta=0.7,
+        # Token 'rows' are uniform d_model-sized vectors: the batch-density
+        # heavy-row guard must never fire here.
+        min_batch_density_frac=0.0,
+        heavy_row_bytes=float("inf"),
+    )
+
+
+def moe_specs(cfg: ArchConfig) -> Dict:
+    assert cfg.moe is not None
+    d, E, f = cfg.d_model, cfg.moe.num_experts, cfg.moe.expert_ff
+    # Expert weights use a dedicated logical axis for their d_model dim:
+    # by default it follows the FSDP rule ('embed'); the H10 hillclimb
+    # change maps it to None (replicated) so the expert einsums contract
+    # over an unsharded d and no data-axis partial reductions appear.
+    return {
+        "router": spec((d, E), ("embed", "experts"), scale=0.02),
+        "w_gate": spec((E, d, f), ("experts", "expert_embed", None)),
+        "w_up": spec((E, d, f), ("experts", "expert_embed", None)),
+        "w_down": spec((E, f, d), ("experts", None, "expert_embed")),
+    }
+
+
+def moe_state_init(cfg: ArchConfig, ctx: SpmdCtx) -> Dict:
+    """Carried DySkew state for ONE MoE layer (stack across layers outside)."""
+    assert cfg.moe is not None
+    dk = moe_dyskew_config(cfg.moe.adaptive)
+    return {
+        "link": link_state_init(ctx.num_ep_shards, dk),
+        "ema_loads": jnp.full(
+            (cfg.moe.num_experts,), 1.0 / cfg.moe.num_experts, jnp.float32
+        ),
+    }
+
+
+def capacities(cfg: ArchConfig, tokens_per_group: int) -> Tuple[int, int]:
+    """(uniform effective capacity, buffer capacity with DySkew headroom)."""
+    moe = cfg.moe
+    c_static = max(
+        1,
+        int(moe.capacity_factor * tokens_per_group * moe.top_k / moe.num_experts),
+    )
+    headroom = 2 if moe.adaptive else 1
+    return c_static, c_static * headroom
+
+
+def moe_apply(
+    p: Dict,
+    x: jax.Array,                    # (B, S, d)
+    *,
+    cfg: ArchConfig,
+    state: Dict,                     # from moe_state_init
+    ctx: SpmdCtx = SpmdCtx(),
+) -> Tuple[jax.Array, Dict, Dict]:
+    """Returns (y, new_state, metrics)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    G = ctx.num_groups
+    T = B * S
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    N = Tg * k
+    c_static, c_buf = capacities(cfg, Tg)
+
+    xt = x.reshape(G, Tg, d)
+
+    # ---- Router ------------------------------------------------------- #
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, k)              # (G, Tg, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- Sibling-observable load metrics (per EP shard) --------------- #
+    flat_e = gate_e.reshape(G, N)
+    counts = jnp.zeros((G, E), jnp.float32).at[
+        jnp.arange(G)[:, None], flat_e
+    ].add(1.0)
+    # Global expert loads: the sum over (sharded) groups — GSPMD inserts the
+    # cross-shard reduction ('state machines observe sibling instances').
+    loads_e = counts.sum(axis=0)                           # (E,)
+    per_shard = loads_e.reshape(ctx.num_ep_shards, E // ctx.num_ep_shards)
+    shard_loads = per_shard.sum(axis=-1)                   # (n_ep,)
+
+    # ---- DySkew state machines (one per EP shard) --------------------- #
+    dk = moe_dyskew_config(moe.adaptive)
+    bytes_per_row = jnp.full_like(shard_loads, 2.0 * d)
+    new_link, distribute = state_machine.tick(
+        state["link"],
+        dk,
+        rows_this_tick=shard_loads,
+        sync_time_this_tick=shard_loads,   # cost ∝ tokens (uniform experts)
+        batch_density=shard_loads,
+        bytes_per_row=bytes_per_row,
+        signal_this_tick=shard_loads > 0,
+    )
+    ema = 0.9 * state["ema_loads"] + 0.1 * loads_e / jnp.maximum(loads_e.sum(), 1.0)
+    new_state = {"link": new_link, "ema_loads": ema}
+
+    # ---- Effective capacity: the redistribution decision --------------- #
+    # Static mode: uniform c_static. Distributing: load-proportional caps
+    # inside the same total budget (idle capacity flows to hot experts).
+    adaptive_caps = jnp.clip(
+        jnp.round(ema * E * c_static), 1, c_buf
+    ).astype(jnp.int32)
+    n_ep = ctx.num_ep_shards
+    shard_distribute = distribute.astype(jnp.int32)        # (n_ep,)
+    expert_shard = jnp.arange(E) // (E // n_ep)
+    use_adaptive = shard_distribute[expert_shard] > 0      # (E,)
+    cap_e = jnp.where(use_adaptive, adaptive_caps, c_static)
+
+    # ---- Sorted gather dispatch ---------------------------------------- #
+    order = jnp.argsort(flat_e, axis=-1, stable=True)      # (G, N)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((G, 1), jnp.float32), jnp.cumsum(counts, axis=-1)[:, :-1]],
+        axis=-1,
+    )
+    ranks = jnp.arange(N)[None, :] - jnp.take_along_axis(
+        seg_start.astype(jnp.int32), sorted_e, axis=-1
+    )
+    keep = ranks < cap_e[sorted_e]
+    slot_sorted = jnp.where(keep, sorted_e * c_buf + ranks, E * c_buf)
+
+    g_idx = jnp.arange(G)[:, None]
+    tok_sorted = order // k
+    src = jnp.zeros((G, E * c_buf + 1), jnp.int32).at[g_idx, slot_sorted].set(
+        tok_sorted.astype(jnp.int32), mode="drop"
+    )
+    filled = jnp.zeros((G, E * c_buf + 1), jnp.float32).at[
+        g_idx, slot_sorted
+    ].add(1.0, mode="drop")
+    valid = (filled[:, : E * c_buf] > 0).astype(x.dtype)
+
+    buf = jnp.take_along_axis(
+        xt, src[:, : E * c_buf, None], axis=1
+    ) * valid[..., None]
+    buf = buf.reshape(G, E, c_buf, d)
+
+    # ---- Expert computation (tiled on the (data × model) mesh) -------- #
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(x.dtype))
+    ) * jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(x.dtype))
+    y_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    y_flat = y_buf.reshape(G, E * c_buf, d)
+
+    if get_flags().moe_scatter_combine:
+        # ---- H9 combine: scatter-add by token with weights placed on the
+        # slots, producing per-EP-shard partials that reduce over the model
+        # axis (T·d wire) instead of gathering the whole (E, C, d) buffer
+        # (E·C·d wire) to every data shard.
+        w_sorted = jnp.take_along_axis(
+            gate_w.reshape(G, N), order, axis=-1
+        ) * keep
+        w_slot = jnp.zeros((G, E * c_buf + 1), jnp.float32).at[
+            g_idx, slot_sorted
+        ].add(w_sorted.astype(jnp.float32), mode="drop")
+        contrib = y_flat * w_slot[:, : E * c_buf, None].astype(x.dtype)
+        y = jnp.zeros((G, Tg, d), x.dtype).at[
+            g_idx, src[:, : E * c_buf]
+        ].add(contrib, mode="drop")
+    else:
+        # ---- Combine (unrolled over k to bound gather temporaries) ----- #
+        slot_unsorted = jnp.zeros((G, N), jnp.int32).at[g_idx, order].set(
+            slot_sorted
+        )
+        keep_unsorted = jnp.zeros((G, N), bool).at[g_idx, order].set(keep)
+        slot_tk = slot_unsorted.reshape(G, Tg, k)
+        keep_tk = keep_unsorted.reshape(G, Tg, k)
+        y = jnp.zeros((G, Tg, d), x.dtype)
+        for j in range(k):
+            sj = jnp.minimum(slot_tk[:, :, j], E * c_buf - 1)
+            yj = jnp.take_along_axis(y_flat, sj[:, :, None], axis=1)
+            wj = (gate_w[:, :, j] * keep_tk[:, :, j]).astype(x.dtype)
+            y = y + yj * wj[:, :, None]
+
+    # ---- Telemetry ------------------------------------------------------ #
+    dropped = 1.0 - keep.astype(jnp.float32).mean()
+    imbalance = shard_loads.max() / jnp.maximum(shard_loads.mean(), 1.0)
+    # Standard load-balancing auxiliary loss (Switch/GShard): E·Σ f_e·P_e.
+    frac_tokens = loads_e / jnp.maximum(loads_e.sum(), 1.0)
+    mean_prob = probs.mean(axis=(0, 1))
+    aux_loss = E * jnp.sum(frac_tokens * mean_prob)
+    metrics = {
+        "moe_dropped_frac": dropped,
+        "moe_shard_imbalance": imbalance,
+        "moe_distribute_frac": distribute.astype(jnp.float32).mean(),
+        "moe_aux_loss": aux_loss,
+    }
+    return y.reshape(B, S, d), new_state, metrics

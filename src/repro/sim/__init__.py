@@ -1,0 +1,25 @@
+"""Discrete-event simulator: the paper-faithful reproduction layer.
+
+engine   — workers / adaptive links / network event loop
+workload — synthetic suites matching the paper's evaluation scenarios
+replay   — strategy comparison + aggregate statistics
+"""
+
+from repro.sim.engine import (
+    Batch,
+    ClusterConfig,
+    QueryResult,
+    Simulator,
+    StrategyConfig,
+)
+from repro.sim.workload import QueryProfile, generate_query
+
+__all__ = [
+    "Batch",
+    "ClusterConfig",
+    "QueryProfile",
+    "QueryResult",
+    "Simulator",
+    "StrategyConfig",
+    "generate_query",
+]

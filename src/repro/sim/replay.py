@@ -1,0 +1,147 @@
+"""Replay harness: run workload suites under competing strategies and
+aggregate the statistics the paper reports (mean / P99 latency deltas,
+utilization, redistribution-applied fraction)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import DySkewConfig, Policy, SkewModelKind
+from repro.sim.engine import ClusterConfig, QueryResult, Simulator, StrategyConfig
+from repro.sim.workload import QueryProfile, generate_query
+
+# Strategy resolution for the legacy-vs-DySkew A/B the paper evaluates:
+#
+#   legacy: static round-robin for queries where it is safe; the default
+#           1:1 link for locality-constrained queries (§II.B: the static
+#           solution 'cannot be safely applied to all Snowpark UDF use
+#           cases').
+#   dyskew: the adaptive link with the query's declared policy (Eager for
+#           ordinary Snowpark UDFs, Distribute-Late for
+#           locality-constrained plans, Never where ordering forbids it).
+
+
+def legacy_strategy(prof: QueryProfile) -> StrategyConfig:
+    if prof.locality_constrained or prof.policy == Policy.NEVER:
+        return StrategyConfig(kind="none")
+    return StrategyConfig(kind="static_rr")
+
+
+def dyskew_strategy(prof: QueryProfile) -> StrategyConfig:
+    policy = prof.policy
+    if prof.locality_constrained and policy == Policy.EAGER_SNOWPARK:
+        policy = Policy.LATE
+    model = (
+        SkewModelKind.IDLE_TIME
+        if policy in (Policy.LATE, Policy.EAGER_SNOWPARK)
+        else SkewModelKind.ROW_PERCENTAGE
+    )
+    return StrategyConfig(
+        kind="dyskew",
+        dyskew=DySkewConfig(policy=policy, skew_model=model, n_strikes=2),
+    )
+
+
+def default_strategies() -> Dict[str, StrategyConfig]:
+    return {
+        "none": StrategyConfig(kind="none"),
+        "static_rr": StrategyConfig(kind="static_rr"),
+        "dyskew": StrategyConfig(
+            kind="dyskew",
+            dyskew=DySkewConfig(policy=Policy.EAGER_SNOWPARK, idle_grace=2),
+        ),
+    }
+
+
+@dataclasses.dataclass
+class SuiteResult:
+    strategy: str
+    results: List[QueryResult]
+
+    @property
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency for r in self.results])
+
+    def mean_latency(self) -> float:
+        return float(self.latencies.mean())
+
+    def p(self, q: float) -> float:
+        return float(np.percentile(self.latencies, q))
+
+    def mean_utilization(self) -> float:
+        return float(np.mean([r.utilization for r in self.results]))
+
+    def applied_fraction(self) -> float:
+        return float(np.mean([r.redistribution_applied for r in self.results]))
+
+
+def scan_arrival_gap(
+    prof: QueryProfile, cluster: ClusterConfig, feed_factor: float = 2.0
+) -> float:
+    """Backpressured-scan model: batches arrive spread over the query's
+    ideal (perfectly balanced) duration, `feed_factor`x faster than the
+    workers can drain them in aggregate."""
+    ideal = prof.n_rows * prof.mean_row_cost / cluster.num_workers
+    nbatches = max(prof.n_rows // min(prof.batch_rows, prof.n_rows), 1)
+    return ideal / (feed_factor * nbatches)
+
+
+def run_suite(
+    profiles: Sequence[QueryProfile],
+    cluster: ClusterConfig,
+    strategy: StrategyConfig,
+    seed: int = 0,
+    per_query_strategy: Optional[Dict[str, StrategyConfig]] = None,
+    feed_factor: float = 2.0,
+) -> SuiteResult:
+    results = []
+    for i, prof in enumerate(profiles):
+        st = strategy
+        if per_query_strategy and prof.name in per_query_strategy:
+            st = per_query_strategy[prof.name]
+        sim = Simulator(cluster, st, seed=seed + i)
+        batches = generate_query(prof, cluster.num_workers, seed=seed * 1000 + i)
+        gap = scan_arrival_gap(prof, cluster, feed_factor)
+        results.append(sim.run_query(batches, arrival_gap=gap))
+    return SuiteResult(strategy=strategy.kind, results=results)
+
+
+def improvement(base: float, new: float) -> float:
+    """Positive = new is faster, as a fraction of base."""
+    return (base - new) / base
+
+
+def compare_suites(
+    profiles: Sequence[QueryProfile],
+    cluster: ClusterConfig,
+    strategies: Dict[str, StrategyConfig],
+    seed: int = 0,
+) -> Dict[str, SuiteResult]:
+    return {
+        name: run_suite(profiles, cluster, st, seed=seed)
+        for name, st in strategies.items()
+    }
+
+
+def run_ab(
+    profiles: Sequence[QueryProfile],
+    cluster: ClusterConfig,
+    seed: int = 0,
+    feed_factor: float = 2.0,
+) -> Dict[str, SuiteResult]:
+    """The paper's A/B: legacy system vs DySkew, with per-query strategy
+    resolution (locality constraints, declared policies)."""
+    out: Dict[str, SuiteResult] = {}
+    for name, resolve in (("legacy", legacy_strategy), ("dyskew", dyskew_strategy)):
+        results = []
+        for i, prof in enumerate(profiles):
+            st = resolve(prof)
+            sim = Simulator(cluster, st, seed=seed + i)
+            batches = generate_query(prof, cluster.num_workers, seed=seed * 1000 + i)
+            gap = scan_arrival_gap(prof, cluster, feed_factor)
+            results.append(sim.run_query(batches, arrival_gap=gap))
+        out[name] = SuiteResult(strategy=name, results=results)
+    return out

@@ -1,0 +1,264 @@
+"""Synthetic workload generators for the paper's evaluation scenarios.
+
+Snowflake's customer workloads are proprietary; we generate synthetic
+workloads with matched *skew characteristics* and verify the paper's
+qualitative claims (see DESIGN.md §8).  Two independent skew axes:
+
+  partition skew — rows concentrated on few producers (uneven scan
+                   partitioning; the classic case), controlled by a Zipf
+                   exponent / hot-partition fraction;
+  cost skew      — heavy-tailed per-row UDF cost (lognormal sigma), the
+                   'arbitrary user code' effect of §I.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.types import Policy
+from repro.sim.engine import Batch
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryProfile:
+    name: str
+    n_rows: int = 20_000
+    mean_row_cost: float = 2e-3       # seconds of UDF compute per row
+    cost_sigma: float = 0.5           # lognormal sigma (cost skew)
+    partition_alpha: float = 0.0      # Zipf exponent over producers (0 = uniform)
+    hot_fraction: float = 0.0         # extra mass pinned to producer 0
+    row_bytes: float = 512.0
+    row_bytes_sigma: float = 0.3
+    batch_rows: int = 128             # scan batching target (row count)
+    batch_bytes_target: float = 16e6  # scan batching target (bytes)
+    udf: bool = True                  # Snowpark UDF operator present?
+    # §II.B: the legacy static round-robin 'cannot be safely applied' where
+    # data locality is required for correctness; the legacy system falls
+    # back to the default 1:1 link for such queries. DySkew's per-link
+    # state machines handle them (Distribute-Late + intermediate states).
+    locality_constrained: bool = False
+    # Redistribution policy declared by the consumer operator (§III.A).
+    policy: Policy = Policy.EAGER_SNOWPARK
+
+
+def _partition_rows(
+    rng: np.random.Generator, n_rows: int, n_producers: int,
+    alpha: float, hot_fraction: float,
+) -> np.ndarray:
+    """Row → producer assignment with the requested skew."""
+    if alpha <= 0.0 and hot_fraction <= 0.0:
+        return rng.integers(0, n_producers, n_rows)
+    probs = np.ones(n_producers)
+    if alpha > 0.0:
+        probs = 1.0 / np.arange(1, n_producers + 1) ** alpha
+    probs = probs / probs.sum()
+    if hot_fraction > 0.0:
+        probs = (1.0 - hot_fraction) * probs
+        probs[0] += hot_fraction
+    # Randomize which physical producer is 'hot' to avoid positional bias.
+    perm = rng.permutation(n_producers)
+    return perm[rng.choice(n_producers, size=n_rows, p=probs)]
+
+
+def generate_query(
+    profile: QueryProfile, n_producers: int, seed: int
+) -> List[List[Batch]]:
+    """Materialize one query's per-producer batch streams."""
+    rng = np.random.default_rng(seed)
+    owner = _partition_rows(
+        rng, profile.n_rows, n_producers, profile.partition_alpha,
+        profile.hot_fraction,
+    )
+    mu = np.log(profile.mean_row_cost) - 0.5 * profile.cost_sigma**2
+    costs = rng.lognormal(mu, profile.cost_sigma, profile.n_rows)
+    smu = np.log(profile.row_bytes) - 0.5 * profile.row_bytes_sigma**2
+    sizes = rng.lognormal(smu, profile.row_bytes_sigma, profile.n_rows)
+
+    # The scan batches rows per producer, capped by rows AND bytes — huge
+    # rows collapse the observed batch density exactly as in §III.B.
+    streams: List[List[Batch]] = []
+    for p in range(n_producers):
+        idx = np.nonzero(owner == p)[0]
+        stream: List[Batch] = []
+        i = 0
+        while i < len(idx):
+            take, acc = 0, 0.0
+            while (
+                i + take < len(idx)
+                and take < profile.batch_rows
+                and (take == 0 or acc + sizes[idx[i + take]] <= profile.batch_bytes_target)
+            ):
+                acc += sizes[idx[i + take]]
+                take += 1
+            sel = idx[i : i + take]
+            stream.append(Batch(costs=costs[sel].copy(), sizes=sizes[sel].copy()))
+            i += take
+        streams.append(stream)
+    return streams
+
+
+# --------------------------------------------------------------------- #
+# Paper-evaluation workload suites
+# --------------------------------------------------------------------- #
+
+
+def customer_replay_suite(num_queries: int = 150, seed: int = 7) -> List[QueryProfile]:
+    """Fig. 3: ~150 replayed customer queries, mixed skew levels.
+
+    Mix: ~1/3 well-balanced, ~1/3 partition-skewed, ~1/3 cost-skewed (with
+    overlap), spanning 2 decades of per-row cost.  About 30 % of queries
+    are locality-constrained (the legacy static round-robin could not be
+    applied to them — §II.B); DySkew runs them with the Distribute-Late
+    policy instead.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for q in range(num_queries):
+        r = rng.random()
+        alpha = 0.0
+        hot = 0.0
+        sigma = 0.4
+        constrained = False
+        n_rows = int(rng.integers(6_000, 24_000))
+        if r < 0.55:
+            # Balanced bulk — includes the biggest (P99-setting) queries.
+            n_rows = int(rng.integers(12_000, 30_000))
+            sigma = float(rng.uniform(0.3, 0.8))
+        elif r < 0.80:
+            alpha = float(rng.uniform(0.1, 0.3))  # partition skew (mild)
+            hot = float(rng.uniform(0.005, 0.02))
+            constrained = bool(rng.random() < 0.35)
+        else:
+            sigma = float(rng.uniform(1.0, 1.8))  # cost skew (heavy tail)
+            if rng.random() < 0.4:
+                alpha = float(rng.uniform(0.1, 0.4))
+        out.append(
+            QueryProfile(
+                name=f"cust_{q:03d}",
+                n_rows=n_rows,
+                mean_row_cost=float(10 ** rng.uniform(-3.3, -2.4)),
+                cost_sigma=sigma,
+                partition_alpha=alpha,
+                hot_fraction=hot,
+                row_bytes=float(10 ** rng.uniform(2.0, 3.5)),
+                locality_constrained=constrained,
+            )
+        )
+    return out
+
+
+#: Fig. 4 — TPCx-BB: 30 queries; Q10 and Q19 run sentiment-analysis-style
+#: UDFs over review text with heavily skewed groupings; the other UDF
+#: queries are comparatively balanced.
+def tpcxbb_suite(seed: int = 11) -> List[QueryProfile]:
+    rng = np.random.default_rng(seed)
+    suite = []
+    for q in range(1, 31):
+        if q == 10:   # sentiment UDF over skewed review groups; the complex
+            # plan is locality-constrained, so the legacy static round-robin
+            # could not be applied (§II.B) — DySkew runs Distribute-Late.
+            suite.append(QueryProfile(
+                name="q10", n_rows=24_000, mean_row_cost=4e-3, cost_sigma=1.4,
+                partition_alpha=0.0, hot_fraction=0.045, row_bytes=2_000,
+                locality_constrained=True,
+            ))
+        elif q == 19:  # review-sentiment UDF, store-returns skew
+            suite.append(QueryProfile(
+                name="q19", n_rows=18_000, mean_row_cost=3e-3, cost_sigma=1.4,
+                partition_alpha=0.0, hot_fraction=0.026, row_bytes=1_500,
+                locality_constrained=True,
+            ))
+        else:
+            suite.append(QueryProfile(
+                name=f"q{q:02d}",
+                n_rows=int(rng.integers(8_000, 16_000)),
+                mean_row_cost=float(10 ** rng.uniform(-3.5, -2.8)),
+                cost_sigma=0.4,
+                partition_alpha=0.0,
+                hot_fraction=float(rng.uniform(0.0, 0.02)),
+                row_bytes=800.0,
+            ))
+    return suite
+
+
+def production_mix(num_queries: int = 200, seed: int = 23) -> List[QueryProfile]:
+    """Fig. 5: production Snowpark population.
+
+    The redistribution policy is declared per consumer operator (§III.A):
+    ~30 % of the population are Snowpark UDF operators running Eager, ~55 %
+    run the generalized Distribute-Late default (fires only when skew is
+    detected), and ~15 % declare Never (ordering / local-state deps).
+    'Applied' — the paper's 37.6 % — counts queries that actually moved a
+    meaningful fraction of rows."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for q in range(num_queries):
+        r = rng.random()
+        pol = rng.random()
+        if pol < 0.25:
+            policy, constrained = Policy.EAGER_SNOWPARK, False
+        elif pol < 0.80:
+            policy, constrained = Policy.LATE, bool(rng.random() < 0.4)
+        else:
+            policy, constrained = Policy.NEVER, False
+        if r < 0.30:  # skewed — redistribution should engage
+            out.append(QueryProfile(
+                name=f"prod_skew_{q:03d}",
+                n_rows=int(rng.integers(10_000, 24_000)),
+                mean_row_cost=float(10 ** rng.uniform(-3.0, -2.2)),
+                cost_sigma=float(rng.uniform(0.9, 1.8)),
+                partition_alpha=float(rng.uniform(0.2, 0.6)),
+                hot_fraction=float(rng.uniform(0.02, 0.07)),
+                policy=policy, locality_constrained=constrained,
+            ))
+        elif r < 0.90:  # balanced bulk work — Late never fires
+            out.append(QueryProfile(
+                name=f"prod_bal_{q:03d}",
+                n_rows=int(rng.integers(6_000, 12_000)),
+                mean_row_cost=float(10 ** rng.uniform(-3.6, -3.0)),
+                cost_sigma=0.3,
+                policy=policy, locality_constrained=constrained,
+            ))
+        else:  # heavy-row blob processing — density guard territory
+            out.append(QueryProfile(
+                name=f"prod_blob_{q:03d}",
+                n_rows=int(rng.integers(24, 64)),
+                mean_row_cost=float(10 ** rng.uniform(-1.5, -0.7)),
+                cost_sigma=0.4,
+                row_bytes=float(10 ** rng.uniform(7.5, 8.5)),  # 30–300 MB rows
+                batch_rows=4096,
+                policy=policy, locality_constrained=constrained,
+            ))
+    return out
+
+
+def heavy_rows_case(row_gb: float = 2.0, n_rows: int = 48) -> QueryProfile:
+    """§III.B regression case: large objects (high-res images / JSON blobs);
+    ~100 GB total moved unnecessarily by unguarded eager redistribution."""
+    return QueryProfile(
+        name="heavy_rows",
+        n_rows=n_rows,
+        mean_row_cost=80e-3,     # real but modest compute per blob
+        cost_sigma=0.3,
+        partition_alpha=0.0,     # NO skew — redistribution has no benefit
+        row_bytes=row_gb * 1e9,
+        row_bytes_sigma=0.05,
+        batch_rows=4096,
+    )
+
+
+def self_skip_case() -> QueryProfile:
+    """§III.B forced-remote study: mild skew on a small cluster, where
+    skipping the local worker wastes local CPU and network."""
+    return QueryProfile(
+        name="self_skip",
+        n_rows=12_000,
+        mean_row_cost=2e-3,
+        cost_sigma=0.8,
+        partition_alpha=0.3,
+        hot_fraction=0.04,
+        row_bytes=64_000.0,   # sizeable rows: forced-remote NIC cost shows
+    )

@@ -1,0 +1,73 @@
+"""Training loop: data pipeline → jitted train step → checkpoint/telemetry.
+
+Runs on any mesh (1 CPU device for the examples, a pod in production).
+Integrates: DySkew data balancing, async checkpointing, fault-runtime
+heartbeats, and per-step DySkew MoE telemetry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config.base import ArchConfig
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.models.layers.moe import SpmdCtx
+from repro.models.model_api import build
+from repro.optim.optimizers import OptimizerConfig
+from repro.train.step import StepConfig, make_train_step, train_state_init
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+
+
+def train(
+    cfg: ArchConfig,
+    data_cfg: DataConfig,
+    opt_cfg: OptimizerConfig,
+    loop_cfg: LoopConfig,
+    on_metrics: Optional[Callable[[int, Dict], None]] = None,
+) -> Dict:
+    model = build(cfg)
+    ctx = SpmdCtx()
+    step_fn = jax.jit(make_train_step(model, opt_cfg, StepConfig(), ctx))
+    state = train_state_init(model, opt_cfg, jax.random.PRNGKey(loop_cfg.seed), ctx)
+
+    ckpt = None
+    start_step = 0
+    if loop_cfg.checkpoint_dir:
+        ckpt = CheckpointManager(loop_cfg.checkpoint_dir)
+        if ckpt.latest_step() is not None:
+            state = ckpt.restore(state)
+            start_step = int(state["step"])
+
+    pipe = DataPipeline(data_cfg).start()
+    history = []
+    t0 = time.time()
+    for step in range(start_step, loop_cfg.steps):
+        batch = next(pipe)
+        state, metrics = step_fn(state, batch)
+        if (step + 1) % loop_cfg.log_every == 0 or step == start_step:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step + 1
+            m["wall_s"] = round(time.time() - t0, 1)
+            history.append(m)
+            if on_metrics:
+                on_metrics(step + 1, m)
+        if ckpt and (step + 1) % loop_cfg.checkpoint_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.save(loop_cfg.steps, state, blocking=True)
+    pipe.stop()
+    return {"state": state, "history": history}

@@ -1,0 +1,166 @@
+"""Training / serving step builders.
+
+``make_train_step`` returns the jit-able function the launcher and the
+multi-pod dry-run lower: forward + backward + (optionally compressed)
+gradient reduction + optimizer update + DySkew link-state advance, with
+optional microbatched gradient accumulation (lax.scan) for activation-
+memory control.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ArchConfig
+from repro.models.layers.moe import SpmdCtx
+from repro.models.model_api import Model
+from repro.models.perf_flags import get_flags
+from repro.optim.optimizers import OptimizerConfig, opt_init, opt_update
+from repro.optim.specs import opt_state_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    num_microbatches: int = 1
+    grad_compression: bool = False   # int8+error-feedback cross-pod reduce
+
+
+def train_state_init(
+    model: Model, opt_cfg: OptimizerConfig, key: jax.Array,
+    ctx: SpmdCtx = SpmdCtx(),
+) -> Dict:
+    params = model.init(key)
+    state = {
+        "params": params,
+        "opt": opt_init(opt_cfg, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    dk = model.dyskew_init(ctx)
+    if dk is not None:
+        state["dyskew"] = dk
+    return state
+
+
+def train_state_specs(
+    model: Model, opt_cfg: OptimizerConfig
+) -> Dict:
+    """ParamSpec tree mirroring train_state_init (dry-run shardings).
+    DySkew states and the step counter are small → handled as replicated
+    abstract leaves by the dry-run."""
+    pspecs = model.specs()
+    return {
+        "params": pspecs,
+        "opt": opt_state_specs(opt_cfg, pspecs),
+    }
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: OptimizerConfig,
+    step_cfg: StepConfig = StepConfig(),
+    ctx: SpmdCtx = SpmdCtx(),
+    param_pspecs: Optional[Dict] = None,
+) -> Callable[[Dict, Dict], Tuple[Dict, Dict]]:
+    """Returns train_step(state, batch) -> (new_state, metrics)."""
+
+    def loss_fn(params, batch, dyskew):
+        if get_flags().cast_before_gather:
+            # H2: cast fp32 masters to bf16 while still FSDP-sharded, so
+            # the per-layer weight all-gathers move half the bytes. The
+            # sharding constraint pins the convert's OUTPUT to the FSDP
+            # layout — otherwise sharding propagation marks it replicated
+            # and GSPMD gathers the fp32 input instead.
+            def cast(p, spec=None):
+                if p.dtype != jnp.float32:
+                    return p
+                c = p.astype(jnp.bfloat16)
+                if spec is not None:
+                    c = jax.lax.with_sharding_constraint(c, spec)
+                return c
+
+            if param_pspecs is not None:
+                params = jax.tree.map(cast, params, param_pspecs)
+            else:
+                params = jax.tree.map(cast, params)
+        loss, aux = model.loss(params, batch, dyskew=dyskew, ctx=ctx)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        dyskew = state.get("dyskew")
+
+        nm = step_cfg.num_microbatches
+        if nm == 1:
+            (loss, aux), grads = grad_fn(params, batch, dyskew)
+            if get_flags().constrain_grads and param_pspecs is not None:
+                # H8: pin gradient shardings to the parameter layout so the
+                # batch-axis reduction lowers as reduce-scatter.
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, param_pspecs,
+                )
+            new_dyskew = aux.get("dyskew")
+            metrics = aux["metrics"]
+        else:
+            # Gradient accumulation: scan over microbatches; DySkew links
+            # tick once per microbatch (finer-grained adaptation).
+            def micro(carry, mb):
+                acc, dk = carry
+                (loss, aux), g = grad_fn(params, mb, dk)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), acc, g
+                )
+                return (acc, aux.get("dyskew", dk)), (loss, aux["metrics"])
+
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, new_dyskew), (losses, mmetrics) = jax.lax.scan(
+                micro, (zeros, dyskew), mbatch
+            )
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), mmetrics)
+
+        new_params, new_opt, stats = opt_update(
+            opt_cfg, grads, state["opt"], params, state["step"]
+        )
+        new_state = dict(
+            state,
+            params=new_params,
+            opt=new_opt,
+            step=state["step"] + 1,
+        )
+        if new_dyskew is not None:
+            new_state["dyskew"] = new_dyskew
+        metrics = dict(metrics, **stats, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, ctx: SpmdCtx = SpmdCtx()):
+    def prefill_step(params, state, inputs):
+        logits, new_state = model.prefill(params, inputs, state, ctx=ctx)
+        return logits[:, -1:], new_state
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, ctx: SpmdCtx = SpmdCtx()):
+    def decode_step(params, state, token):
+        logits, new_state = model.decode_step(params, state, token, ctx=ctx)
+        return logits, new_state
+
+    return decode_step

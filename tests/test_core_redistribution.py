@@ -1,0 +1,181 @@
+"""Tests for routing planners + cost model + assembled AdaptiveLink."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import redistribution as rd
+from repro.core.adaptive_link import AdaptiveLink, AdaptiveLinkConfig
+from repro.core.types import DySkewConfig, Policy
+
+
+class TestPlanners:
+    def test_round_robin_cycles(self):
+        dest = rd.round_robin(8, 4)
+        np.testing.assert_array_equal(np.asarray(dest), [0, 1, 2, 3, 0, 1, 2, 3])
+
+    def test_round_robin_eligibility(self):
+        elig = jnp.array([True, False, True, False])
+        dest = np.asarray(rd.round_robin(6, 4, eligible=elig))
+        assert set(dest.tolist()) <= {0, 2}
+        np.testing.assert_array_equal(dest, [0, 2, 0, 2, 0, 2])
+
+    def test_lpt_beats_round_robin_on_skewed_costs(self):
+        costs = jnp.array([10.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+        rr = rd.makespan(rd.round_robin(8, 4), costs, 4)
+        lpt_dest, _ = rd.lpt_greedy(costs, 4)
+        lpt = rd.makespan(lpt_dest, costs, 4)
+        assert float(lpt) <= float(rr)
+        assert float(lpt) == 10.0  # heavy item alone on one instance
+
+    def test_lpt_respects_base_loads(self):
+        costs = jnp.array([5.0, 5.0])
+        base = jnp.array([100.0, 0.0, 0.0, 100.0])
+        dest, loads = rd.lpt_greedy(costs, 4, base_loads=base)
+        assert set(np.asarray(dest).tolist()) == {1, 2}
+
+    def test_lpt_eligibility(self):
+        costs = jnp.ones((6,))
+        elig = jnp.array([False, True, True, False])
+        dest, _ = rd.lpt_greedy(costs, 4, eligible=elig)
+        assert set(np.asarray(dest).tolist()) <= {1, 2}
+
+    def test_zigzag_near_lpt(self):
+        key = jax.random.PRNGKey(0)
+        costs = jax.random.exponential(key, (64,)) + 0.01
+        zz_dest, _ = rd.zigzag(costs, 8)
+        lpt_dest, _ = rd.lpt_greedy(costs, 8)
+        zz = float(rd.makespan(zz_dest, costs, 8))
+        lpt = float(rd.makespan(lpt_dest, costs, 8))
+        lower = float(jnp.sum(costs)) / 8
+        # zigzag within 30% of exact greedy (both near the mean lower bound).
+        assert zz <= 1.3 * max(lpt, lower)
+
+    def test_zigzag_prefers_lightly_loaded(self):
+        costs = jnp.array([8.0])
+        base = jnp.array([10.0, 0.0, 5.0, 7.0])
+        dest, _ = rd.zigzag(costs, 4, base_loads=base)
+        assert int(dest[0]) == 1
+
+    def test_local_assignment(self):
+        dest = rd.local_assignment(5, 3)
+        assert np.all(np.asarray(dest) == 3)
+
+    def test_eligibility_mask_self_skip(self):
+        m = rd.eligibility_mask(4, 2, self_skip=True)
+        np.testing.assert_array_equal(np.asarray(m), [True, True, False, True])
+        m = rd.eligibility_mask(4, 2, self_skip=False)
+        assert bool(jnp.all(m))
+
+
+class TestCostModel:
+    def test_cheap_move_admitted(self):
+        cfg = cm.CostModelConfig(link_bandwidth=50e9, per_item_overhead=1e-6)
+        before = jnp.array([10.0, 0.0])
+        after = jnp.array([5.0, 5.0])
+        ok, saved, t = cm.admit(before, after, jnp.array(1e6), jnp.array(100), cfg)
+        assert bool(ok)
+        assert float(saved) == pytest.approx(5.0)
+
+    def test_heavy_row_rejected(self):
+        # The §III.B pathology: 100 GB row, tiny balance benefit.
+        cfg = cm.CostModelConfig(link_bandwidth=50e9)
+        before = jnp.array([1.1, 1.0])
+        after = jnp.array([1.05, 1.05])
+        ok, saved, t = cm.admit(
+            before, after, jnp.array(100e9), jnp.array(1), cfg
+        )
+        assert not bool(ok)
+        assert float(t) == pytest.approx(2.0, rel=0.01)  # 100GB / 50GB/s
+
+
+class TestAdaptiveLink:
+    def _mk(self, policy=Policy.EAGER_SNOWPARK, n=4, **kw):
+        cfg = AdaptiveLinkConfig(
+            dyskew=DySkewConfig(policy=policy, **kw), num_instances=n
+        )
+        return AdaptiveLink(cfg)
+
+    def test_eager_balances_skewed_items(self):
+        link = self._mk()
+        state = link.init_state()
+        # All 16 items start on producer 0 with equal cost.
+        costs = jnp.ones((16,))
+        sizes = jnp.full((16,), 1e3)
+        producer = jnp.zeros((16,), jnp.int32)
+        state, plan = link.step(state, costs, sizes, producer)
+        loads = np.zeros(4)
+        np.add.at(loads, np.asarray(plan.dest), 1.0)
+        assert loads.max() == 4  # perfectly balanced 16/4
+
+    def test_never_policy_keeps_local(self):
+        link = self._mk(policy=Policy.NEVER)
+        state = link.init_state()
+        costs = jnp.ones((16,))
+        producer = jnp.zeros((16,), jnp.int32)
+        state, plan = link.step(state, costs, jnp.ones((16,)), producer)
+        assert np.all(np.asarray(plan.dest) == 0)
+
+    def test_late_policy_waits_for_strikes(self):
+        link = self._mk(policy=Policy.LATE, n_strikes=3, theta=0.5)
+        state = link.init_state()
+        costs = jnp.ones((12,))
+        producer = jnp.zeros((12,), jnp.int32)
+        for i in range(4):
+            state, plan = link.step(state, costs, jnp.ones((12,)), producer)
+            if i < 3:
+                assert np.all(np.asarray(plan.dest) == 0), f"tick {i}"
+        # DRAINING consumed a tick; next tick distributes.
+        state, plan = link.step(state, costs, jnp.ones((12,)), producer)
+        assert len(set(np.asarray(plan.dest).tolist())) > 1
+
+    def test_cost_gate_blocks_giant_rows(self):
+        link = self._mk()
+        state = link.init_state()
+        costs = jnp.ones((4,))            # 1s of compute each
+        sizes = jnp.full((4,), 200e9)     # 200 GB each → 4s transfer each
+        producer = jnp.zeros((4,), jnp.int32)
+        state, plan = link.step(state, costs, sizes, producer)
+        assert np.all(np.asarray(plan.dest) == 0)
+        assert float(plan.est_bytes_moved) == 0.0
+
+    def test_self_skip_ablation_avoids_self(self):
+        link = self._mk(self_skip=True)
+        state = link.init_state()
+        costs = jnp.ones((8,))
+        producer = jnp.zeros((8,), jnp.int32)
+        state, plan = link.step(state, costs, jnp.ones((8,)), producer)
+        dest = np.asarray(plan.dest)
+        assert not np.any(dest == 0)  # forced remote: self excluded
+
+    def test_no_self_skip_uses_local(self):
+        link = self._mk(self_skip=False)
+        state = link.init_state()
+        costs = jnp.ones((8,))
+        producer = jnp.zeros((8,), jnp.int32)
+        state, plan = link.step(state, costs, jnp.ones((8,)), producer)
+        assert np.any(np.asarray(plan.dest) == 0)
+
+    def test_padding_items_never_move(self):
+        link = self._mk()
+        state = link.init_state()
+        costs = jnp.ones((8,))
+        producer = jnp.zeros((8,), jnp.int32)
+        valid = jnp.array([True] * 4 + [False] * 4)
+        state, plan = link.step(state, costs, jnp.ones((8,)), producer, valid)
+        assert np.all(np.asarray(plan.dest)[4:] == 0)
+
+    def test_jit_compatible(self):
+        link = self._mk()
+        state = link.init_state()
+
+        @jax.jit
+        def run(state, costs, sizes, producer):
+            return link.step(state, costs, sizes, producer)
+
+        state2, plan = run(
+            state, jnp.ones((16,)), jnp.ones((16,)), jnp.zeros((16,), jnp.int32)
+        )
+        assert plan.dest.shape == (16,)

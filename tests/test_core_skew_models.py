@@ -1,0 +1,173 @@
+"""Unit tests for the DySkew skew-detection models (paper §III.A/B)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import skew_models
+from repro.core.types import DySkewConfig, SkewModelKind, link_metrics_zeros
+
+
+def _metrics(n=4, window=8):
+    return link_metrics_zeros(n, window)
+
+
+class TestRowPercentage:
+    def test_balanced_not_skewed(self):
+        m = _metrics()
+        m["rows"] = jnp.array([100.0, 100.0, 100.0, 100.0])
+        skewed = skew_models.row_percentage_skew(m, theta=0.5)
+        assert not bool(jnp.any(skewed))
+
+    def test_hot_instance_detected(self):
+        # Eq. (1): R_i * theta > mean(R_-i). theta=0.5 fires at >2x sibling avg.
+        m = _metrics()
+        m["rows"] = jnp.array([500.0, 100.0, 100.0, 100.0])
+        skewed = skew_models.row_percentage_skew(m, theta=0.5)
+        assert bool(skewed[0])
+        assert not bool(jnp.any(skewed[1:]))
+
+    def test_threshold_edge(self):
+        m = _metrics()
+        # R_0 = 200, siblings avg = 100: 200*0.5 = 100 is NOT > 100.
+        m["rows"] = jnp.array([200.0, 100.0, 100.0, 100.0])
+        assert not bool(skew_models.row_percentage_skew(m, theta=0.5)[0])
+        m["rows"] = jnp.array([201.0, 100.0, 100.0, 100.0])
+        assert bool(skew_models.row_percentage_skew(m, theta=0.5)[0])
+
+    def test_single_instance_never_skewed(self):
+        m = _metrics(n=1)
+        m["rows"] = jnp.array([1e9])
+        assert not bool(jnp.any(skew_models.row_percentage_skew(m, theta=0.5)))
+
+
+class TestIdleTime:
+    def test_busy_among_idle_siblings(self):
+        m = _metrics()
+        m["idle_ticks"] = jnp.array([0.0, 5.0, 5.0, 5.0])
+        skewed = skew_models.idle_time_skew(m, idle_grace=2, idle_sibling_frac=0.5)
+        assert bool(skewed[0])
+        # idle instances themselves are not 'skewed' (they have no work).
+        assert not bool(jnp.any(skewed[1:]))
+
+    def test_all_busy_not_skewed(self):
+        m = _metrics()
+        m["idle_ticks"] = jnp.zeros(4)
+        skewed = skew_models.idle_time_skew(m, idle_grace=2, idle_sibling_frac=0.5)
+        assert not bool(jnp.any(skewed))
+
+    def test_sibling_fraction_threshold(self):
+        m = _metrics()
+        # Only 1/3 siblings idle < 0.5 threshold → no skew.
+        m["idle_ticks"] = jnp.array([0.0, 5.0, 0.0, 0.0])
+        skewed = skew_models.idle_time_skew(m, idle_grace=2, idle_sibling_frac=0.5)
+        assert not bool(jnp.any(skewed))
+
+
+class TestSyncSlope:
+    def test_accelerating_instance_detected(self):
+        m = _metrics()
+        t = jnp.arange(8, dtype=jnp.float32)
+        # Instance 0's cumulative sync time grows 10x faster.
+        m["sync_window"] = jnp.stack([10.0 * t, t, t, t])
+        skewed = skew_models.sync_time_slope_skew(m, theta=0.5)
+        assert bool(skewed[0])
+        assert not bool(jnp.any(skewed[1:]))
+
+    def test_flat_windows_do_not_fire(self):
+        m = _metrics()
+        skewed = skew_models.sync_time_slope_skew(m, theta=0.5)
+        assert not bool(jnp.any(skewed))
+
+    def test_slope_computation(self):
+        w = jnp.array([[0.0, 1.0, 2.0, 3.0], [0.0, 2.0, 4.0, 6.0]])
+        s = skew_models.sync_slope(w)
+        np.testing.assert_allclose(np.asarray(s), [1.0, 2.0], rtol=1e-6)
+
+
+class TestNStrikes:
+    def test_requires_n_consecutive(self):
+        strikes = jnp.zeros((2,), jnp.int32)
+        skewed = jnp.array([True, False])
+        for i in range(3):
+            fire, strikes = skew_models.apply_n_strikes(skewed, strikes, n_strikes=3)
+            if i < 2:
+                assert not bool(fire[0])
+        assert bool(fire[0])
+        assert not bool(fire[1])
+
+    def test_reset_on_clean_tick(self):
+        strikes = jnp.array([2, 0], jnp.int32)
+        fire, strikes = skew_models.apply_n_strikes(
+            jnp.array([False, False]), strikes, n_strikes=3
+        )
+        assert int(strikes[0]) == 0
+        assert not bool(jnp.any(fire))
+
+
+class TestRowSizeModel:
+    def test_density_collapse_detected(self):
+        cfg = DySkewConfig(target_batch_density=4096.0, min_batch_density_frac=0.01)
+        m = _metrics()
+        # >99% density drop: 4096 -> 10 rows/batch, rows are 100 MB blobs.
+        m["batch_density"] = jnp.array([10.0, 4096.0, 4096.0, 4096.0])
+        m["bytes_per_row"] = jnp.array([100e6, 500.0, 500.0, 500.0])
+        heavy = skew_models.batch_density_heavy_rows(m, cfg)
+        assert bool(heavy[0]) and not bool(jnp.any(heavy[1:]))
+
+    def test_small_remainder_batch_not_heavy(self):
+        # A 10-row batch of ordinary 500 B rows (end-of-stream remainder)
+        # must NOT count as heavy-row density collapse.
+        cfg = DySkewConfig()
+        m = _metrics()
+        m["batch_density"] = jnp.array([10.0, 4096.0, 4096.0, 4096.0])
+        m["bytes_per_row"] = jnp.array([500.0, 500.0, 500.0, 500.0])
+        heavy = skew_models.batch_density_heavy_rows(m, cfg)
+        assert not bool(jnp.any(heavy))
+
+    def test_zero_density_is_not_evidence(self):
+        cfg = DySkewConfig()
+        m = _metrics()
+        heavy = skew_models.batch_density_heavy_rows(m, cfg)
+        assert not bool(jnp.any(heavy))
+
+    def test_disable_requires_not_skewed(self):
+        # Paper: disable only when NOT skewed AND density low.
+        cfg = DySkewConfig()
+        m = _metrics()
+        m["batch_density"] = jnp.array([10.0, 10.0, 10.0, 10.0])
+        m["bytes_per_row"] = jnp.full((4,), 100e6)
+        # Instance 0 busy while others idle → skewed → must NOT disable.
+        m["idle_ticks"] = jnp.array([0.0, 5.0, 5.0, 5.0])
+        disable = skew_models.heavy_row_disable(m, cfg)
+        assert not bool(disable[0])
+        # The idle ones are not skewed and have low density → disable fires.
+        assert bool(disable[1])
+
+
+class TestMetricsUpdate:
+    def test_idle_tick_accounting(self):
+        m = _metrics(n=3)
+        m2 = skew_models.update_metrics(
+            m,
+            rows_this_tick=jnp.array([5.0, 0.0, 2.0]),
+            sync_time_this_tick=jnp.array([1.0, 0.0, 1.0]),
+            batch_density=jnp.array([5.0, 0.0, 2.0]),
+            bytes_per_row=jnp.array([100.0, 0.0, 100.0]),
+        )
+        np.testing.assert_allclose(np.asarray(m2["idle_ticks"]), [0.0, 1.0, 0.0])
+        np.testing.assert_allclose(np.asarray(m2["rows"]), [5.0, 0.0, 2.0])
+
+    def test_sync_window_slides_cumulative(self):
+        m = _metrics(n=1, window=4)
+        for step in range(4):
+            m = skew_models.update_metrics(
+                m,
+                rows_this_tick=jnp.array([1.0]),
+                sync_time_this_tick=jnp.array([2.0]),
+                batch_density=jnp.array([1.0]),
+                bytes_per_row=jnp.array([8.0]),
+            )
+        np.testing.assert_allclose(
+            np.asarray(m["sync_window"][0]), [2.0, 4.0, 6.0, 8.0]
+        )

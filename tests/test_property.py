@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import skew_models, state_machine
+from repro.core.types import DySkewConfig, LinkState, Policy, link_state_init
+from repro.kernels.topk_gating.ref import topk_gating_ref
+from repro.optim.grad_compress import dequantize_int8, quantize_int8
+from repro.roofline.analysis import shape_bytes
+from repro.sim.engine import waterfill_counts
+
+# Keep runs fast on 1 CPU.
+FAST = settings(max_examples=25, deadline=None)
+
+
+class TestStateMachineInvariants:
+    @FAST
+    @given(
+        policy=st.sampled_from(list(Policy)),
+        n=st.integers(2, 8),
+        ticks=st.integers(1, 12),
+        seed=st.integers(0, 1000),
+    )
+    def test_states_always_valid_and_terminals_absorb(self, policy, n, ticks, seed):
+        cfg = DySkewConfig(policy=policy, n_strikes=2)
+        link = link_state_init(n, cfg)
+        rng = np.random.default_rng(seed)
+        was_terminal = np.zeros(n, bool)
+        prev_state = np.asarray(link["state"])
+        for _ in range(ticks):
+            rows = jnp.asarray(rng.exponential(10, n).astype(np.float32))
+            link, dist = state_machine.tick(
+                link, cfg,
+                rows_this_tick=rows,
+                sync_time_this_tick=rows,
+                batch_density=rows,
+                bytes_per_row=jnp.full((n,), 8.0),
+            )
+            s = np.asarray(link["state"])
+            assert ((0 <= s) & (s < 6)).all()
+            # non-looping: terminal states absorb
+            terminal = (s == int(LinkState.LOCAL_TERMINAL)) | (
+                s == int(LinkState.DISTRIBUTED_TERMINAL)
+            )
+            assert (terminal | ~was_terminal).all() or (
+                s[was_terminal] == prev_state[was_terminal]
+            ).all()
+            was_terminal |= terminal
+            prev_state = s
+            # distribute mask only from remote-routing states
+            d = np.asarray(dist)
+            routing = (s == int(LinkState.DISTRIBUTING)) | (
+                s == int(LinkState.DISTRIBUTED_TERMINAL)
+            )
+            assert (d == routing).all()
+
+    @FAST
+    @given(n=st.integers(2, 6), strikes_needed=st.integers(1, 5))
+    def test_n_strikes_never_fires_early(self, n, strikes_needed):
+        strikes = jnp.zeros((n,), jnp.int32)
+        skewed = jnp.ones((n,), bool)
+        for i in range(strikes_needed):
+            fire, strikes = skew_models.apply_n_strikes(
+                skewed, strikes, strikes_needed
+            )
+            if i < strikes_needed - 1:
+                assert not bool(fire.any())
+        assert bool(fire.all())
+
+
+class TestRedistributionInvariants:
+    @FAST
+    @given(
+        n=st.integers(1, 32),
+        k=st.integers(0, 500),
+        seed=st.integers(0, 999),
+    )
+    def test_waterfill_conserves_items(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        bl = rng.exponential(5.0, n)
+        counts = waterfill_counts(bl, k, 0.5)
+        assert counts.sum() == k
+        assert (counts >= 0).all()
+
+    @FAST
+    @given(k=st.integers(1, 200), seed=st.integers(0, 999))
+    def test_waterfill_levels_within_one_unit(self, k, seed):
+        rng = np.random.default_rng(seed)
+        n = 8
+        bl = np.zeros(n)
+        counts = waterfill_counts(bl, k, 1.0)
+        assert counts.max() - counts.min() <= 1
+
+
+class TestQuantizationInvariants:
+    @FAST
+    @given(seed=st.integers(0, 999), n=st.integers(1, 2048))
+    def test_int8_roundtrip_error_bound(self, seed, n):
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(0, 3, n).astype(np.float32))
+        q, s = quantize_int8(g)
+        err = np.abs(np.asarray(dequantize_int8(q, s) - g))
+        assert err.max() <= float(s) * 0.5 + 1e-7
+        assert np.asarray(q).min() >= -127 and np.asarray(q).max() <= 127
+
+
+class TestGatingInvariants:
+    @FAST
+    @given(
+        t=st.integers(1, 64),
+        e=st.integers(2, 64),
+        seed=st.integers(0, 99),
+    )
+    def test_topk_weights_normalized_and_indices_unique(self, t, e, seed):
+        import jax
+
+        k = min(4, e)
+        logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+        w, idx = topk_gating_ref(logits, k)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+        idx = np.asarray(idx)
+        for row in idx:
+            assert len(set(row.tolist())) == k  # no duplicate experts
+
+
+class TestHloParserInvariants:
+    @FAST
+    @given(
+        dims=st.lists(st.integers(1, 512), min_size=0, max_size=4),
+        dtype=st.sampled_from(["f32", "bf16", "s8", "pred", "s32"]),
+    )
+    def test_shape_bytes_matches_numpy(self, dims, dtype):
+        import numpy as np
+
+        sizes = {"f32": 4, "bf16": 2, "s8": 1, "pred": 1, "s32": 4}
+        expect = int(np.prod(dims)) * sizes[dtype] if dims else sizes[dtype]
+        got = shape_bytes(dtype, ",".join(map(str, dims)))
+        assert got == expect
