@@ -9,24 +9,38 @@ Paper claims reproduced:
 
 from __future__ import annotations
 
+import os
 import time
 from typing import List, Tuple
 
 from repro.sim.engine import ClusterConfig
-from repro.sim.replay import improvement, run_ab
+from repro.sim.replay import improvement, run_ab, warm_pool
 from repro.sim.workload import customer_replay_suite
 
 Row = Tuple[str, float, str]
 
 
+def _workers() -> int:
+    """Simulations are per-query independent; fan out across cores unless
+    REPRO_BENCH_WORKERS pins it (0/1 = serial).  Capped: each worker is a
+    full Python+jax process, and past ~8 the spawn cost outweighs the
+    parallelism for quick-mode suites."""
+    env = os.environ.get("REPRO_BENCH_WORKERS")
+    if env is not None:
+        return int(env)
+    return min(os.cpu_count() or 1, 8)
+
+
 def run(quick: bool = False) -> List[Row]:
     num_queries = 40 if quick else 150
+    workers = _workers()
+    warm_pool(workers)  # overlap worker spawn with profile generation
     profiles = customer_replay_suite(num_queries=num_queries)
     rows: List[Row] = []
     for nodes in (2, 4, 8):
         cluster = ClusterConfig(num_nodes=nodes)
         t0 = time.time()
-        suites = run_ab(profiles, cluster, seed=nodes)
+        suites = run_ab(profiles, cluster, seed=nodes, workers=workers)
         rr, dk = suites["legacy"], suites["dyskew"]
         mean_impr = improvement(rr.mean_latency(), dk.mean_latency())
         p99_impr = improvement(rr.p(99), dk.p(99))

@@ -1,0 +1,62 @@
+"""Multi-tenant scenario — N concurrent queries on ONE shared cluster.
+
+The paper's production setting runs many Snowpark queries against the
+same virtual warehouse at once; the interesting question is how a noisy
+(skewed) neighbour degrades everyone else's latency, and how much of that
+DySkew claws back versus the legacy static round-robin.  This bench
+interleaves the `multi_tenant_suite` tenants with staggered arrivals over
+shared interpreter pools and NIC uplinks (`MultiQuerySimulator`) and
+reports per-query p50/p99 latency for legacy vs DySkew.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.sim.engine import ClusterConfig
+from repro.sim.replay import improvement, run_multi_tenant_ab
+from repro.sim.workload import multi_tenant_suite
+
+Row = Tuple[str, float, str]
+
+
+def run(quick: bool = False) -> List[Row]:
+    num_tenants = 4 if quick else 8
+    rounds = 2 if quick else 4
+    cluster = ClusterConfig(num_nodes=4)
+    rows: List[Row] = []
+    t0 = time.time()
+    lat = {"legacy": [], "dyskew": []}
+    redist_frac = []
+    for r in range(rounds):
+        profiles = multi_tenant_suite(num_tenants, seed=41 + r)
+        suites = run_multi_tenant_ab(profiles, cluster, seed=r)
+        for name, suite in suites.items():
+            lat[name].extend(suite.latencies.tolist())
+        redist_frac.append(suites["dyskew"].applied_fraction())
+    leg = np.array(lat["legacy"])
+    dk = np.array(lat["dyskew"])
+    for q in (50, 99):
+        lq, dq = float(np.percentile(leg, q)), float(np.percentile(dk, q))
+        rows.append((
+            f"multi_tenant_{num_tenants}q_p{q}_latency_dyskew",
+            dq * 1e6,
+            f"p{q}_legacy_us={lq * 1e6:.1f};p{q}_improvement="
+            f"{improvement(lq, dq):+.3f}",
+        ))
+    rows.append((
+        f"multi_tenant_{num_tenants}q_mean_latency_dyskew",
+        float(dk.mean()) * 1e6,
+        f"mean_improvement={improvement(float(leg.mean()), float(dk.mean())):+.3f};"
+        f"applied_frac={float(np.mean(redist_frac)):.2f};"
+        f"wall_s={time.time() - t0:.1f}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

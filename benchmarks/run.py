@@ -14,8 +14,16 @@ import sys
 import time
 import traceback
 
+# Make `python benchmarks/run.py` work from anywhere: the repo root (for
+# the `benchmarks` package) and src/ (for `repro`) must be importable.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 BENCHES = [
     "benchmarks.bench_cluster_scaling",   # Fig. 3
+    "benchmarks.bench_multi_tenant",      # concurrent queries, shared cluster
     "benchmarks.bench_tpcxbb",            # Fig. 4
     "benchmarks.bench_rollout",           # Fig. 5
     "benchmarks.bench_heavy_rows",        # §III.B row-size case study

@@ -7,10 +7,13 @@ Public API:
   state_machine — per-link-instance adaptive state machine (Fig. 2)
   redistribution — round_robin (legacy baseline), lpt_greedy, zigzag
   cost_model — cost-aware redistribution gate
+  admission — shared host-side per-batch admission planner (density
+              guard, cost gate, self-skip eligibility)
   adaptive_link.AdaptiveLink — the assembled adaptive data link
 """
 
 from repro.core.adaptive_link import AdaptiveLink, AdaptiveLinkConfig
+from repro.core.admission import AdmissionDecision, BatchAdmission
 from repro.core.cost_model import CostModelConfig
 from repro.core.types import (
     DySkewConfig,
@@ -24,6 +27,8 @@ from repro.core.types import (
 __all__ = [
     "AdaptiveLink",
     "AdaptiveLinkConfig",
+    "AdmissionDecision",
+    "BatchAdmission",
     "CostModelConfig",
     "DySkewConfig",
     "LinkState",

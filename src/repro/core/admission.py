@@ -1,0 +1,154 @@
+"""Shared per-batch admission planner for DySkew redistribution.
+
+One host-side implementation of the three admission guards every DySkew
+call-site needs before it may move work off its producer:
+
+  density guard — the Row Size Model (§III.B): a batch whose density
+      collapsed *because rows are huge* stays local unless enough sibling
+      interpreters are idle to make the move worthwhile;
+  cost gate     — goal 3 (§I): refuse a redistribution whose estimated
+      transfer time exceeds the estimated straggler time saved;
+  self-skip     — destination eligibility for the §III.B forced-remote
+      ablation (the producer — or its whole node — is excluded).
+
+Historically `sim/engine.py`, `serving/engine.py` and `data/pipeline.py`
+each re-implemented this gating by hand; they now all call this planner.
+The jax-traced twin of the cost gate lives in `repro.core.cost_model`
+(used inside `AdaptiveLink.step`); the formulas here are kept identical
+but run on plain Python/numpy scalars so they are cheap inside the
+simulator's per-batch hot loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import numpy as np
+
+from repro.core.types import DySkewConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of a per-batch admission check (telemetry-friendly)."""
+
+    admit: bool
+    reason: str = "ok"      # ok | density_guard | cost_gate
+    est_transfer: float = 0.0
+    est_saved: float = 0.0
+
+
+def transfer_seconds(
+    bytes_moved: float,
+    rows_moved: int,
+    bandwidth: float,
+    per_row_overhead: float,
+) -> float:
+    """Estimated seconds to move ``rows_moved`` rows of ``bytes_moved``
+    total bytes over a link (serialization priced per row)."""
+    return bytes_moved / bandwidth + rows_moved * per_row_overhead
+
+
+def straggler_savings(
+    est_row_cost: float, rows_moved: int, num_instances: int
+) -> float:
+    """Estimated straggler seconds removed by spreading ``rows_moved``
+    rows (of opaque estimated cost) across ``num_instances`` workers."""
+    return est_row_cost * rows_moved * (1.0 - 1.0 / max(num_instances, 1))
+
+
+class BatchAdmission:
+    """The DySkew admission guards, bound to one :class:`DySkewConfig`.
+
+    ``enable_density_guard`` / ``enable_cost_gate`` exist for the paper's
+    ablations; a disabled guard admits everything.
+    """
+
+    def __init__(
+        self,
+        cfg: DySkewConfig,
+        *,
+        enable_density_guard: bool = True,
+        enable_cost_gate: bool = True,
+    ):
+        self.cfg = cfg
+        self.enable_density_guard = enable_density_guard
+        self.enable_cost_gate = enable_cost_gate
+
+    # -- Row Size Model (§III.B) ------------------------------------- #
+
+    def density_guard_blocks(
+        self,
+        num_rows: int,
+        bytes_per_row: float,
+        idle_sibling_frac: Union[float, Callable[[], float]] = 0.0,
+    ) -> bool:
+        """True → keep the batch local: density collapsed because rows are
+        heavy and siblings are not idle enough to justify moving them.
+
+        ``idle_sibling_frac`` may be a callable so callers can defer the
+        (O(n)) sibling scan until the cheap size checks have passed.
+        """
+        cfg = self.cfg
+        if not (
+            self.enable_density_guard
+            and num_rows < cfg.min_batch_density
+            and bytes_per_row >= cfg.heavy_row_bytes
+        ):
+            return False
+        frac = idle_sibling_frac() if callable(idle_sibling_frac) else idle_sibling_frac
+        return frac < cfg.idle_sibling_frac
+
+    # -- Cost gate (§I goal 3) ---------------------------------------- #
+
+    def cost_gate_blocks(self, est_saved: float, est_transfer: float) -> bool:
+        """True → the move is refused: savings do not clear the gate."""
+        if not self.enable_cost_gate:
+            return False
+        return est_saved <= self.cfg.cost_gate * est_transfer
+
+    def admit_move(
+        self,
+        bytes_moved: float,
+        rows_moved: int,
+        est_row_cost: float,
+        num_instances: int,
+        bandwidth: float,
+        per_row_overhead: float,
+    ) -> AdmissionDecision:
+        """Full cost-gate decision for a candidate redistribution."""
+        t_move = transfer_seconds(
+            bytes_moved, rows_moved, bandwidth, per_row_overhead
+        )
+        saved = straggler_savings(est_row_cost, rows_moved, num_instances)
+        if self.cost_gate_blocks(saved, t_move):
+            return AdmissionDecision(False, "cost_gate", t_move, saved)
+        return AdmissionDecision(True, "ok", t_move, saved)
+
+    # -- Self-skip eligibility (§III.B forced-remote) ------------------ #
+
+    def eligible_destinations(
+        self,
+        num_instances: int,
+        producer: int,
+        node_of: Optional[Callable[[int], int]] = None,
+    ) -> np.ndarray:
+        """Bool mask of valid destinations for ``producer``.
+
+        With ``self_skip`` unset (the paper's Snowpark optimization) every
+        instance is eligible.  With it set, the producer is excluded — or,
+        when ``node_of`` is given, every interpreter on the producer's
+        node (Fig. 1: redistribution targets *other* VW nodes).
+        """
+        mask = np.ones(num_instances, bool)
+        if not self.cfg.self_skip:
+            return mask
+        if node_of is None:
+            mask[producer] = False
+        else:
+            own = node_of(producer)
+            for w in range(num_instances):
+                if node_of(w) == own:
+                    mask[w] = False
+        return mask

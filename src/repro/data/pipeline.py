@@ -17,7 +17,13 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.core import AdaptiveLink, AdaptiveLinkConfig, DySkewConfig, Policy
+from repro.core import (
+    AdaptiveLink,
+    AdaptiveLinkConfig,
+    BatchAdmission,
+    DySkewConfig,
+    Policy,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +103,10 @@ class DataPipeline:
             num_instances=max(cfg.num_shards, 1),
         ))
         self.link_state = self.link.init_state()
+        # Shared admission planner (same guards as repro.sim / repro.serving):
+        # the Row Size Model keeps pathological huge-sequence batches local
+        # instead of paying the reshard.
+        self.admission = BatchAdmission(self.link.config.dyskew)
         self._q: "queue.Queue" = queue.Queue(maxsize=cfg.prefetch)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -108,9 +118,17 @@ class DataPipeline:
         seqs = pack_documents(self.docs, cfg.seq_len, cfg.global_batch)
         tokens = np.stack(seqs)
         if cfg.dyskew_balance and cfg.num_shards > 1:
+            lens = (tokens != 0).sum(axis=1).astype(np.float32)
+            balance = not self.admission.density_guard_blocks(
+                num_rows=cfg.global_batch // max(cfg.num_shards, 1),
+                bytes_per_row=float(lens.sum()) * 4.0
+                / max(cfg.global_batch, 1),
+            )
+        else:
+            balance = False
+        if balance:
             import jax.numpy as jnp
 
-            lens = (tokens != 0).sum(axis=1).astype(np.float32)
             costs = lens**2 / float(cfg.seq_len) ** 2
             sizes = lens * 4.0
             producer = (
@@ -149,6 +167,11 @@ class DataPipeline:
 
     def stop(self):
         self._stop.set()
+        if self._thread is not None:
+            # Join: a daemon thread mid-jax-call at interpreter exit
+            # aborts the process (SIGABRT in XLA teardown).
+            self._thread.join(timeout=2.0)
+            self._thread = None
 
     def __iter__(self):
         return self

@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import AdaptiveLink, AdaptiveLinkConfig, CostModelConfig
+from repro.core import AdaptiveLink, AdaptiveLinkConfig, BatchAdmission, CostModelConfig
 from repro.core.types import DySkewConfig, Policy
 
 
@@ -33,7 +33,8 @@ class Request:
     arrival: float
     # runtime fields
     replica: int = -1
-    generated: int = 0
+    generated: int = 0       # whole tokens emitted (integral by invariant)
+    progress: float = 0.0    # fractional decode progress, in tokens
     done_at: float = -1.0
 
     @property
@@ -78,14 +79,20 @@ class ServingScheduler:
             num_instances=n,
         ))
         self.link_state = self.link.init_state()
+        # Shared per-batch admission planner (same guards the simulator and
+        # the data pipeline use): prices queued-request migrations.
+        self.admission = BatchAdmission(self.link.config.dyskew)
         self._rr = 0
 
     def place(self, req: Request, load_tokens: np.ndarray) -> int:
         """Choose a replica for a NEW request (no KV yet → free to move)."""
         cfg = self.cfg
         if cfg.scheduler == "round_robin":
-            self._rr = (self._rr + 1) % cfg.num_replicas
-            return self._rr
+            # Use the current slot, then advance — replica 0 must receive
+            # the first request (seed bug skipped it).
+            rep = self._rr
+            self._rr = (rep + 1) % cfg.num_replicas
+            return rep
         # least-loaded by outstanding token estimate (dyskew placement is
         # least-loaded too: eager + zero-size row always clears the gate).
         return int(np.argmin(load_tokens))
@@ -118,9 +125,21 @@ class ServingScheduler:
             jnp.asarray(costs), jnp.asarray(sizes), jnp.asarray(producer),
         )
         dest = np.asarray(plan.dest)
-        return {
-            r.rid: int(d) for r, d in zip(queued, dest) if d != r.replica
-        }
+        # Per-request cost gate via the shared admission planner: a queued
+        # request whose KV transfer costs more than the straggler time its
+        # move would save stays put (heavy-KV 'rows' must not thrash).
+        moves: Dict[int, int] = {}
+        n = self.cfg.num_replicas
+        for r, d, cost, size in zip(queued, dest, costs, sizes):
+            if int(d) == r.replica:
+                continue
+            dec = self.admission.admit_move(
+                float(size), 1, float(cost), n,
+                self.cfg.interconnect_bw, self.cfg.migration_latency,
+            )
+            if dec.admit:
+                moves[r.rid] = int(d)
+        return moves
 
 
 class ServingEngine:
@@ -165,19 +184,25 @@ class ServingEngine:
                 [r for q in queues for r in q], load_tokens()
             )
             if moves:
+                # Detach movers first, append after: appending to a queue
+                # that is iterated later in the same pass re-visits the
+                # moved request and loops forever (moves to higher replicas).
+                moved = []
                 for rep in range(n):
                     stay = []
                     for r in queues[rep]:
-                        if r.rid in moves:
+                        if moves.get(r.rid, rep) != rep:
                             migrations += 1
                             migrated_bytes += r.kv_bytes(
                                 cfg.kv_bytes_per_token
                             )
                             r.replica = moves[r.rid]
-                            queues[moves[r.rid]].append(r)
+                            moved.append(r)
                         else:
                             stay.append(r)
                     queues[rep] = stay
+                for r in moved:
+                    queues[r.replica].append(r)
             # run each replica for dt
             for rep in range(n):
                 while len(running[rep]) < cfg.max_batch and queues[rep]:
@@ -188,7 +213,11 @@ class ServingEngine:
                 per_slot = cfg.decode_rate * dt / len(running[rep])
                 still = []
                 for r in running[rep]:
-                    r.generated += per_slot
+                    # Tokens are integral: accumulate fractional decode
+                    # progress separately and clamp `generated` so
+                    # kv_len/kv_bytes keep whole-token semantics.
+                    r.progress += per_slot
+                    r.generated = min(int(r.progress), r.max_new_tokens)
                     if r.generated >= r.max_new_tokens:
                         r.done_at = t + dt
                         done.append(r)

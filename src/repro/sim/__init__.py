@@ -1,25 +1,33 @@
 """Discrete-event simulator: the paper-faithful reproduction layer.
 
-engine   — workers / adaptive links / network event loop
+engine   — array-backed workers / adaptive links / network event loop,
+           plus the multi-tenant concurrent-query engine
+legacy   — the seed list-of-tuples engine, kept as the equivalence
+           reference for the array-backed core
 workload — synthetic suites matching the paper's evaluation scenarios
-replay   — strategy comparison + aggregate statistics
+replay   — strategy comparison + aggregate statistics (single- and
+           multi-tenant), with optional process-pool fan-out
 """
 
 from repro.sim.engine import (
     Batch,
     ClusterConfig,
+    MultiQuerySimulator,
     QueryResult,
     Simulator,
     StrategyConfig,
+    TenantQuery,
 )
 from repro.sim.workload import QueryProfile, generate_query
 
 __all__ = [
     "Batch",
     "ClusterConfig",
+    "MultiQuerySimulator",
     "QueryProfile",
     "QueryResult",
     "Simulator",
     "StrategyConfig",
+    "TenantQuery",
     "generate_query",
 ]

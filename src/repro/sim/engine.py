@@ -13,14 +13,33 @@ jitted once per configuration and driven with host numpy arrays, so the
 simulator and the SPMD training/serving paths share one algorithm.  State
 machines tick on a fixed virtual-time cadence (`tick_interval`), modelling
 the engine's metrics subsystem; batch routing consults the latest
-distribute mask plus two per-batch admission guards (the Row Size Model and
-the cost gate).
+distribute mask plus the shared per-batch admission planner
+(`repro.core.admission`: Row Size Model density guard, cost gate,
+self-skip eligibility — the same planner the serving engine and the data
+pipeline call).
+
+The engine core is array-backed: queued rows live in contiguous per-worker
+ring buffers (`_RowRing`), batch routing groups rows per destination with
+one stable sort instead of per-destination masking, and event payloads are
+numpy segments rather than per-row Python tuples.  The original
+list-of-tuples implementation is preserved in `repro.sim.legacy` and the
+two are pinned against each other by `tests/test_sim_equivalence.py`.
 
 Strategies:
   none       — default 1:1 link (no redistribution)
   static_rr  — the legacy Snowpark solution: per-row round-robin across all
                interpreters from the start (paper §II.B, Fig. 1)
   dyskew     — the paper's adaptive link (configurable policy/models)
+
+Multi-tenant execution: `MultiQuerySimulator` interleaves N concurrent
+queries (tenants) over ONE shared cluster — shared interpreter pools and
+shared per-node NIC occupancy — while each tenant keeps its own
+`AdaptiveLinkSim`, cost estimator, flow-control window and strategy, as in
+the paper's production setting where many Snowpark queries contend for the
+same virtual warehouse.  Tenants arrive staggered in virtual time; the
+result is one `QueryResult` per tenant (latency measured from the tenant's
+arrival), which `benchmarks/bench_multi_tenant.py` aggregates into
+per-query p50/p99 under legacy vs DySkew scheduling.
 """
 
 from __future__ import annotations
@@ -34,7 +53,8 @@ import jax
 import numpy as np
 
 from repro.core import state_machine
-from repro.core.types import DySkewConfig, Policy, link_state_init
+from repro.core.admission import BatchAdmission
+from repro.core.types import DySkewConfig, Policy
 
 
 # --------------------------------------------------------------------- #
@@ -85,7 +105,12 @@ class Batch:
 
     @property
     def total_bytes(self) -> float:
-        return float(self.sizes.sum())
+        # Cached: batches are immutable in practice and re-routed often
+        # (once per strategy under comparison).
+        tb = self.__dict__.get("_total_bytes")
+        if tb is None:
+            tb = self.__dict__["_total_bytes"] = float(self.sizes.sum())
+        return tb
 
 
 @dataclasses.dataclass
@@ -132,6 +157,24 @@ def _tick_impl(link, rows, sync, density, bpr, signal, *, cfg):
     )
 
 
+def _host_link_state(n: int, cfg: DySkewConfig) -> Dict[str, np.ndarray]:
+    """Host-numpy mirror of `types.link_state_init` (same tree/dtypes, no
+    device round-trip — the simulator creates one link per query)."""
+    return {
+        "state": np.zeros((n,), np.int32),  # LinkState.INIT == 0
+        "strikes": np.zeros((n,), np.int32),
+        "metrics": {
+            "rows": np.zeros((n,), np.float32),
+            "idle_ticks": np.zeros((n,), np.float32),
+            "sync_window": np.zeros((n, cfg.slope_window), np.float32),
+            "batch_density": np.zeros((n,), np.float32),
+            "bytes_per_row": np.zeros((n,), np.float32),
+        },
+        "transitions": np.zeros((n,), np.int32),
+        "tick": np.zeros((), np.int32),
+    }
+
+
 class AdaptiveLinkSim:
     """Host-side wrapper around the core state machines for all producer
     link instances of one query (they are siblings of each other)."""
@@ -139,29 +182,30 @@ class AdaptiveLinkSim:
     def __init__(self, cfg: DySkewConfig, n: int):
         self.cfg = cfg
         self.n = n
-        self.state = jax.device_get(link_state_init(n, cfg))
+        # State lives on-device between ticks; only the distribute mask is
+        # pulled back each tick (the state tree round-trip dominated the
+        # metrics-subsystem cost in the seed implementation).
+        self.state = _host_link_state(n, cfg)
         self._tick = _JittedMachine.get(cfg, n)
 
     def tick(self, rows, sync, density, bpr, signal) -> np.ndarray:
-        self.state, distribute = jax.device_get(
-            self._tick(
-                self.state,
-                rows.astype(np.float32),
-                sync.astype(np.float32),
-                density.astype(np.float32),
-                bpr.astype(np.float32),
-                signal.astype(bool),
-            )
+        self.state, distribute = self._tick(
+            self.state,
+            rows.astype(np.float32),
+            sync.astype(np.float32),
+            density.astype(np.float32),
+            bpr.astype(np.float32),
+            signal.astype(bool),
         )
         return np.asarray(distribute)
 
     @property
     def states(self) -> np.ndarray:
-        return np.asarray(self.state["state"])
+        return np.asarray(jax.device_get(self.state["state"]))
 
     @property
     def transitions(self) -> np.ndarray:
-        return np.asarray(self.state["transitions"])
+        return np.asarray(jax.device_get(self.state["transitions"]))
 
 
 # --------------------------------------------------------------------- #
@@ -171,7 +215,14 @@ class AdaptiveLinkSim:
 
 def waterfill_counts(backlog: np.ndarray, k: int, unit: float) -> np.ndarray:
     """Assign ``k`` unit-cost rows to bins so resulting loads are as level
-    as possible (vectorized least-backlog greedy for identical costs)."""
+    as possible (vectorized least-backlog greedy for identical costs).
+
+    The continuous water level is solved in closed form (with the j lowest
+    backlogs submerged, level_j = (k*unit + sum of those backlogs) / j; the
+    true level is the largest j consistent with its own submerged set) and
+    the integer counts are floored from it, so no bisection loop is needed;
+    the trim/top-up passes below repair the floor rounding exactly.
+    """
     n = len(backlog)
     finite = np.isfinite(backlog)
     out = np.zeros(n, np.int64)
@@ -181,17 +232,10 @@ def waterfill_counts(backlog: np.ndarray, k: int, unit: float) -> np.ndarray:
         out[0] = k
         return out
     bl = backlog.copy()
-    lo = float(bl[finite].min())
-    hi = float(bl[finite].max()) + (k + 1) * unit
-    for _ in range(60):
-        mid = 0.5 * (lo + hi)
-        cap = np.floor(np.maximum(mid - bl, 0.0) / unit)
-        cap[~finite] = 0
-        if cap.sum() >= k:
-            hi = mid
-        else:
-            lo = mid
-    counts = np.floor(np.maximum(hi - bl, 0.0) / unit)
+    blf = np.sort(bl[finite])
+    levels = (k * unit + np.cumsum(blf)) / np.arange(1, len(blf) + 1)
+    j = int(np.nonzero(levels >= blf)[0][-1])  # always valid at j=0
+    counts = np.floor(np.maximum(levels[j] - bl, 0.0) / unit)
     counts[~finite] = 0
     counts = counts.astype(np.int64)
     diff = int(counts.sum()) - k
@@ -213,11 +257,108 @@ def waterfill_counts(backlog: np.ndarray, k: int, unit: float) -> np.ndarray:
     return counts
 
 
+class _RowRing:
+    """Contiguous FIFO ring of queued row costs for ONE worker.
+
+    Segments are appended with a single vectorized copy; service bursts
+    pop a contiguous view.  Popped views must be consumed before the next
+    push (a push may compact the buffer).  When ``track_qids`` is set a
+    parallel int32 lane records the owning tenant of each row (used by
+    `MultiQuerySimulator` for per-query accounting in shared pools).
+    """
+
+    __slots__ = ("buf", "qbuf", "head", "tail")
+
+    def __init__(self, cap: int = 256, track_qids: bool = False):
+        self.buf = np.empty(cap, np.float64)
+        self.qbuf = np.empty(cap, np.int32) if track_qids else None
+        self.head = 0
+        self.tail = 0
+
+    def __len__(self) -> int:
+        return self.tail - self.head
+
+    def push(self, costs: np.ndarray, qid: int = 0) -> None:
+        k = len(costs)
+        if self.tail + k > self.buf.size:
+            self._compact_grow(k)
+        self.buf[self.tail:self.tail + k] = costs
+        if self.qbuf is not None:
+            self.qbuf[self.tail:self.tail + k] = qid
+        self.tail += k
+
+    def _compact_grow(self, k: int) -> None:
+        live = self.tail - self.head
+        cap = self.buf.size
+        while cap < live + k:
+            cap *= 2
+        if cap > self.buf.size:
+            new = np.empty(cap, np.float64)
+            new[:live] = self.buf[self.head:self.tail]
+            self.buf = new
+            if self.qbuf is not None:
+                newq = np.empty(cap, np.int32)
+                newq[:live] = self.qbuf[self.head:self.tail]
+                self.qbuf = newq
+        elif live:
+            # Slide live region to the front (copy src first if overlapping).
+            src = self.buf[self.head:self.tail]
+            self.buf[:live] = src.copy() if self.head < live else src
+            if self.qbuf is not None:
+                qsrc = self.qbuf[self.head:self.tail]
+                self.qbuf[:live] = qsrc.copy() if self.head < live else qsrc
+        self.head = 0
+        self.tail = live
+
+    def pop(self, k: int) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        k = min(k, self.tail - self.head)
+        i = self.head
+        self.head += k
+        costs = self.buf[i:i + k]
+        qids = self.qbuf[i:i + k] if self.qbuf is not None else None
+        return costs, qids
+
+
+def _transfer_delay(c: ClusterConfig, src_worker: int, dst_worker: int,
+                    nbytes: float, nrows: int) -> float:
+    """Contention-free transfer latency (NIC occupancy handled by the
+    caller when model_contention is on).  Shared by the single-query and
+    multi-tenant engines so the network model cannot diverge."""
+    ser = nrows * c.per_row_serialize
+    if c.node_of(src_worker) == c.node_of(dst_worker):
+        if src_worker == dst_worker:
+            return ser  # stays in-process pipeline; serialization only
+        return c.ipc_latency + nbytes / c.ipc_bandwidth + ser
+    return c.network_latency + nbytes / c.network_bandwidth + ser
+
+
+def _group_by_dest(
+    dests: np.ndarray, costs: np.ndarray, sizes: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Group a batch's rows by destination with ONE stable sort.
+
+    Returns (sorted_dests, starts, ends, costs_sorted, sizes_sorted);
+    group j covers rows [starts[j], ends[j]) of the sorted arrays and all
+    go to destination sorted_dests[starts[j]].  Destinations come out
+    ascending and rows keep their in-batch order within a group — the
+    same grouping the legacy per-destination boolean masks produced.
+    """
+    order = np.argsort(dests, kind="stable")
+    sd = dests[order]
+    bounds = np.flatnonzero(sd[1:] != sd[:-1]) + 1
+    starts = np.concatenate(([0], bounds))
+    ends = np.concatenate((bounds, [len(sd)]))
+    return sd, starts, ends, costs[order], sizes[order]
+
+
 # --------------------------------------------------------------------- #
 # The simulator
 # --------------------------------------------------------------------- #
 
 _TICK, _ARRIVAL, _ENQUEUE, _DONE = 0, 1, 2, 3
+
+#: Rows per service burst (completion-ack granularity).
+_SERVICE_CHUNK = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,6 +380,14 @@ class StrategyConfig:
     enable_density_guard: bool = True
     enable_cost_gate: bool = True
 
+    def admission(self) -> BatchAdmission:
+        """The shared `repro.core` admission planner for this strategy."""
+        return BatchAdmission(
+            self.dyskew,
+            enable_density_guard=self.enable_density_guard,
+            enable_cost_gate=self.enable_cost_gate,
+        )
+
 
 class Simulator:
     def __init__(
@@ -255,15 +404,8 @@ class Simulator:
 
     def _transfer_delay(self, src_worker: int, dst_worker: int, nbytes: float,
                         nrows: int) -> float:
-        """Contention-free transfer latency (NIC occupancy handled by the
-        caller when model_contention is on)."""
-        c = self.cluster
-        ser = nrows * c.per_row_serialize
-        if c.node_of(src_worker) == c.node_of(dst_worker):
-            if src_worker == dst_worker:
-                return ser  # stays in-process pipeline; serialization only
-            return c.ipc_latency + nbytes / c.ipc_bandwidth + ser
-        return c.network_latency + nbytes / c.network_bandwidth + ser
+        return _transfer_delay(self.cluster, src_worker, dst_worker,
+                               nbytes, nrows)
 
     # -- main entry ------------------------------------------------------ #
 
@@ -281,30 +423,44 @@ class Simulator:
         c = self.cluster
         st = self.strategy
         cfg = st.dyskew
+        admission = st.admission()
         n = c.num_workers
+        # Hot-loop locals: node lookup table, flat network constants, and
+        # plain-Python scalar accumulators (single-element numpy indexing
+        # is ~10x a list index at this event grain).  Vector math converts
+        # the lists once per tick / per routed batch instead.
+        node = [w // c.interpreters_per_node for w in range(n)]
+        net_bw, net_lat = c.network_bandwidth, c.network_latency
+        ipc_bw, ipc_lat = c.ipc_bandwidth, c.ipc_latency
+        ser = c.per_row_serialize
+        contention = c.model_contention
+        flow_window = c.flow_window_rows
+        static_rr = st.kind == "static_rr"
+        cost_ema = st.cost_ema
+        heappush, heappop = heapq.heappush, heapq.heappop
 
-        # Worker state.
-        queue_rows: List[List[Tuple[float, float]]] = [[] for _ in range(n)]
-        busy_time = np.zeros(n)
-        rows_done = np.zeros(n)
+        # Worker state: queued row costs in contiguous per-worker rings.
+        rings = [_RowRing() for _ in range(n)]
+        busy_time = [0.0] * n
+        rows_done = [0] * n
         worker_running = [False] * n
 
         # Metric accumulators between state-machine ticks.
-        recv_in_tick = np.zeros(n)        # rows received by each consumer
-        sync_in_tick = np.zeros(n)        # sync time per consumer
-        rows_arr_in_tick = np.zeros(n)    # rows arrived at each producer
-        batches_arr_in_tick = np.zeros(n)
-        bytes_arr_in_tick = np.zeros(n)
+        recv_in_tick = [0.0] * n          # rows received by each consumer
+        sync_in_tick = [0.0] * n          # sync time per consumer
+        rows_arr_in_tick = [0.0] * n      # rows arrived at each producer
+        batches_arr_in_tick = [0.0] * n
+        bytes_arr_in_tick = [0.0] * n
 
         # Opaque-cost estimator (global EMA of observed per-row time).
         est_row_cost = 1e-3
         # Observable backlog: rows sent to each consumer minus rows acked
         # complete (the producer sees its own sends and completion acks; it
         # never sees the hidden per-row costs).
-        outstanding_rows = np.zeros(n)
+        outstanding_rows = [0.0] * n
 
         link: Optional[AdaptiveLinkSim] = None
-        distribute_mask = np.zeros(n, bool)
+        distribute_mask = [False] * n
         if st.kind == "dyskew":
             link = AdaptiveLinkSim(cfg, n)
 
@@ -314,88 +470,77 @@ class Simulator:
         rr_counter = 0
         num_ticks = 0
         # Per-node egress NIC occupancy (heavy-row saturation, §III.B).
-        nic_free_at = np.zeros(c.num_nodes)
+        nic_free_at = [0.0] * c.num_nodes
 
         remaining_arrivals = sum(len(s) for s in batches_per_producer)
         in_flight = 0
+        queued_rows_total = 0
 
         events: List[Tuple[float, int, int, int, object]] = []
         seq = 0
 
-        def push(t: float, kind: int, who: int, payload: object):
-            nonlocal seq
-            heapq.heappush(events, (t, seq, kind, who, payload))
-            seq += 1
-
         # Seed the first tick BEFORE any arrival (same timestamp, lower
         # seq): eager links redistribute from the operator's first row.
         if link is not None:
-            push(0.0, _TICK, 0, None)
+            heappush(events, (0.0, seq, _TICK, 0, None))
+            seq += 1
         # Arrivals are chained per producer: batch k+1 is scheduled only
         # after batch k is routed, delayed by scan production time plus
         # credit-based backpressure against the destination backlog.
         streams = batches_per_producer
         for p, stream in enumerate(streams):
             if stream:
-                push(0.0, _ARRIVAL, p, 0)
-
-        def active() -> bool:
-            return (
-                remaining_arrivals > 0
-                or in_flight > 0
-                or any(worker_running)
-                or any(queue_rows[w] for w in range(n))
-            )
-
-        service_chunk = 16  # rows per service burst (ack granularity)
+                heappush(events, (0.0, seq, _ARRIVAL, p, 0))
+                seq += 1
 
         def start_worker(w: int, now: float):
-            if worker_running[w] or not queue_rows[w]:
+            nonlocal queued_rows_total, seq
+            if worker_running[w]:
                 return
-            rows = queue_rows[w][:service_chunk]
-            queue_rows[w] = queue_rows[w][service_chunk:]
-            total = sum(cst for cst, _ in rows)
+            ring = rings[w]
+            if ring.tail == ring.head:
+                return
+            chunk, _ = ring.pop(_SERVICE_CHUNK)
+            queued_rows_total -= len(chunk)
+            # Sequential Python-float sum: bit-identical to the legacy
+            # engine's per-tuple accumulation, so the two engines stay on
+            # the same event trajectory (tiny rounding differences amplify
+            # chaotically through routing decisions).
+            total = sum(chunk.tolist())
             worker_running[w] = True
-            push(now + total, _DONE, w, rows)
+            heappush(events, (now + total, seq, _DONE, w, (total, len(chunk))))
+            seq += 1
 
         def siblings_idle_frac(p: int) -> float:
-            idle = [
-                (not worker_running[w]) and (not queue_rows[w])
-                for w in range(n) if w != p
-            ]
-            return sum(idle) / max(len(idle), 1)
+            idle = 0
+            for w in range(n):
+                if w != p and not worker_running[w] and rings[w].tail == rings[w].head:
+                    idle += 1
+            return idle / max(n - 1, 1)
 
         def route_batch(p: int, b: Batch, now: float) -> None:
-            nonlocal bytes_moved, rows_redist, rr_counter, in_flight
-            if st.kind == "static_rr":
+            nonlocal rr_counter, bytes_moved, rows_redist, in_flight, seq
+            dests: Optional[np.ndarray] = None
+            if static_rr:
                 dests = (rr_counter + np.arange(b.num_rows)) % n
                 rr_counter += b.num_rows
-            elif not distribute_mask[p]:
-                dests = np.full(b.num_rows, p)
-            else:
-                dests = None
+            elif distribute_mask[p]:
                 # Row Size Model admission guard (§III.B): low batch density
                 # + no skew benefit visible → keep the heavy rows local.
                 bpr = b.total_bytes / max(b.num_rows, 1)
-                if (
-                    st.enable_density_guard
-                    and b.num_rows < cfg.min_batch_density
-                    and bpr >= cfg.heavy_row_bytes
-                    and siblings_idle_frac(p) < cfg.idle_sibling_frac
+                if not admission.density_guard_blocks(
+                    b.num_rows, bpr, lambda: siblings_idle_frac(p)
                 ):
-                    dests = np.full(b.num_rows, p)
-                if dests is None:
-                    bl = outstanding_rows * est_row_cost
+                    bl = np.asarray(outstanding_rows) * est_row_cost
                     if cfg.self_skip:
                         # Forced-remote ablation (§III.B): the producer must
                         # bypass its own node's interpreters entirely
                         # (Fig. 1 — redistribution targets interpreters on
                         # *other* VW nodes), leaving local CPU idle.
-                        bl = bl.copy()
-                        own = c.node_of(p)
-                        for w in range(n):
-                            if c.node_of(w) == own:
-                                bl[w] = np.inf
+                        bl = np.where(
+                            admission.eligible_destinations(n, p, c.node_of),
+                            bl, np.inf,
+                        )
                     counts = waterfill_counts(
                         bl, b.num_rows, max(est_row_cost, 1e-9)
                     )
@@ -404,67 +549,82 @@ class Simulator:
                         # Cost gate (§I goal 3): refuse when estimated
                         # movement time exceeds estimated straggler savings.
                         moving = dests != p
-                        mv_bytes = float(b.sizes[moving].sum())
-                        t_move = (
-                            mv_bytes / c.network_bandwidth
-                            + int(moving.sum()) * c.per_row_serialize
+                        dec = admission.admit_move(
+                            float(b.sizes[moving].sum()), int(moving.sum()),
+                            est_row_cost, n,
+                            net_bw, ser,
                         )
-                        saved = (
-                            est_row_cost * float(moving.sum()) * (1.0 - 1.0 / n)
-                        )
-                        if saved <= cfg.cost_gate * t_move:
-                            dests = np.full(b.num_rows, p)
+                        if not dec.admit:
+                            dests = None
 
-            for d in np.unique(dests):
-                d = int(d)
-                m = dests == d
-                nbytes = float(b.sizes[m].sum())
-                nrows = int(m.sum())
-                cross_node = c.node_of(d) != c.node_of(p)
-                if d != p:
-                    rows_redist += nrows
-                    if cross_node:
-                        bytes_moved += nbytes
-                arrive = now + self._transfer_delay(p, d, nbytes, nrows)
-                if cross_node and c.model_contention:
-                    # Serialize on the source node's uplink.
-                    src_node = c.node_of(p)
-                    start = max(now, nic_free_at[src_node])
-                    occupy = nbytes / c.network_bandwidth
-                    nic_free_at[src_node] = start + occupy
-                    arrive = start + occupy + c.network_latency \
-                        + nrows * c.per_row_serialize
-                payload = list(zip(b.costs[m].tolist(), b.sizes[m].tolist()))
+            if dests is None:
+                # All-local fast path (no redistribution this batch):
+                # in-process pipeline, serialization delay only.
+                nrows = b.num_rows
                 in_flight += 1
-                push(arrive, _ENQUEUE, d, payload)
+                heappush(events, (now + nrows * ser, seq, _ENQUEUE, p, b.costs))
+                seq += 1
+                outstanding_rows[p] += nrows
+                return
+            sd, starts, ends, costs_s, sizes_s = _group_by_dest(
+                dests, b.costs, b.sizes
+            )
+            # Per-group pairwise .sum() matches the legacy masked sums
+            # bit-for-bit (same elements, same order, same algorithm).
+            src_node = node[p]
+            for j in range(len(starts)):
+                lo, hi = starts[j], ends[j]
+                d = int(sd[lo])
+                nrows = hi - lo
+                nbytes = float(sizes_s[lo:hi].sum())
+                if node[d] != src_node:
+                    rows_redist += nrows
+                    bytes_moved += nbytes
+                    if contention:
+                        # Serialize on the source node's uplink.
+                        nf = nic_free_at[src_node]
+                        start = now if now > nf else nf
+                        occupy = nbytes / net_bw
+                        nic_free_at[src_node] = start + occupy
+                        arrive = start + occupy + net_lat + nrows * ser
+                    else:
+                        arrive = now + net_lat + nbytes / net_bw + nrows * ser
+                elif d == p:
+                    arrive = now + nrows * ser
+                else:
+                    rows_redist += nrows
+                    arrive = now + ipc_lat + nbytes / ipc_bw + nrows * ser
+                in_flight += 1
+                heappush(events, (arrive, seq, _ENQUEUE, d, costs_s[lo:hi]))
+                seq += 1
                 outstanding_rows[d] += nrows
 
         now = 0.0
         last_work_done = 0.0
         while events:
-            now, _, kind, who, payload = heapq.heappop(events)
-            if kind == _TICK:
-                num_ticks += 1
-                rows_arr = rows_arr_in_tick
-                density = np.where(
-                    batches_arr_in_tick > 0,
-                    rows_arr / np.maximum(batches_arr_in_tick, 1),
-                    0.0,
-                )
-                bpr = np.where(
-                    rows_arr > 0, bytes_arr_in_tick / np.maximum(rows_arr, 1), 0.0
-                )
-                signal = np.array(worker_running, dtype=bool)
-                distribute_mask = link.tick(
-                    recv_in_tick, sync_in_tick, density, bpr, signal
-                )
-                recv_in_tick[:] = 0.0
-                sync_in_tick[:] = 0.0
-                rows_arr_in_tick[:] = 0.0
-                batches_arr_in_tick[:] = 0.0
-                bytes_arr_in_tick[:] = 0.0
-                if active():
-                    push(now + st.tick_interval, _TICK, 0, None)
+            now, _, kind, who, payload = heappop(events)
+            if kind == _ENQUEUE:
+                w = who
+                in_flight -= 1
+                k = len(payload)
+                rings[w].push(payload)
+                queued_rows_total += k
+                recv_in_tick[w] += k
+                if not worker_running[w]:
+                    start_worker(w, now)
+            elif kind == _DONE:
+                w = who
+                total, nrows = payload
+                busy_time[w] += total
+                rows_done[w] += nrows
+                sync_in_tick[w] += total
+                avg = total / nrows if nrows else 0.0
+                est_row_cost = (1 - cost_ema) * est_row_cost + cost_ema * avg
+                left = outstanding_rows[w] - nrows
+                outstanding_rows[w] = left if left > 0.0 else 0.0
+                worker_running[w] = False
+                last_work_done = now
+                start_worker(w, now)
             elif kind == _ARRIVAL:
                 p, k = who, payload
                 b = streams[p][k]
@@ -479,35 +639,48 @@ class Simulator:
                 if k + 1 < len(streams[p]):
                     # Flow control: pace against the least-backlogged valid
                     # destination (own consumer when routing locally).
-                    if st.kind == "static_rr" or distribute_mask[p]:
-                        bl = float(outstanding_rows.min())
+                    if static_rr or distribute_mask[p]:
+                        bl = min(outstanding_rows)
                     else:
-                        bl = float(outstanding_rows[p])
-                    backpressure = max(0.0, bl - c.flow_window_rows) * est_row_cost
-                    push(now + arrival_gap + backpressure, _ARRIVAL, p, k + 1)
-            elif kind == _ENQUEUE:
-                w = who
-                in_flight -= 1
-                queue_rows[w].extend(payload)
-                recv_in_tick[w] += len(payload)
-                start_worker(w, now)
-            else:  # _DONE
-                w = who
-                rows = payload
-                total = sum(cst for cst, _ in rows)
-                busy_time[w] += total
-                rows_done[w] += len(rows)
-                sync_in_tick[w] += total
-                avg = total / max(len(rows), 1)
-                est_row_cost = (1 - st.cost_ema) * est_row_cost + st.cost_ema * avg
-                outstanding_rows[w] = max(outstanding_rows[w] - len(rows), 0.0)
-                worker_running[w] = False
-                last_work_done = now
-                start_worker(w, now)
+                        bl = outstanding_rows[p]
+                    backpressure = max(0.0, bl - flow_window) * est_row_cost
+                    heappush(events, (now + arrival_gap + backpressure,
+                                      seq, _ARRIVAL, p, k + 1))
+                    seq += 1
+            else:  # _TICK
+                num_ticks += 1
+                rows_arr = np.asarray(rows_arr_in_tick)
+                batches_arr = np.asarray(batches_arr_in_tick)
+                density = np.where(
+                    batches_arr > 0,
+                    rows_arr / np.maximum(batches_arr, 1),
+                    0.0,
+                )
+                bpr = np.where(
+                    rows_arr > 0,
+                    np.asarray(bytes_arr_in_tick) / np.maximum(rows_arr, 1),
+                    0.0,
+                )
+                distribute_mask = link.tick(
+                    np.asarray(recv_in_tick), np.asarray(sync_in_tick),
+                    density, bpr, np.asarray(worker_running, bool),
+                ).tolist()
+                recv_in_tick[:] = [0.0] * n
+                sync_in_tick[:] = [0.0] * n
+                rows_arr_in_tick[:] = [0.0] * n
+                batches_arr_in_tick[:] = [0.0] * n
+                bytes_arr_in_tick[:] = [0.0] * n
+                if (
+                    remaining_arrivals > 0 or in_flight > 0
+                    or queued_rows_total > 0 or any(worker_running)
+                ):
+                    heappush(events, (now + st.tick_interval, seq, _TICK, 0, None))
+                    seq += 1
 
         makespan = max(last_work_done, 1e-12)
+        busy_time = np.asarray(busy_time)
         util = float(busy_time.sum() / (makespan * n))
-        total_rows = int(rows_done.sum())
+        total_rows = int(sum(rows_done))
         applied = rows_redist > 0.01 * max(total_rows, 1)
         return QueryResult(
             latency=makespan,
@@ -519,3 +692,275 @@ class Simulator:
             decision_overhead=decision_overhead_total,
             num_ticks=num_ticks,
         )
+
+
+# --------------------------------------------------------------------- #
+# Multi-tenant simulation (concurrent query streams, shared cluster)
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class TenantQuery:
+    """One tenant of a multi-query run: its input streams, its strategy,
+    and when it arrives on the shared cluster (virtual seconds)."""
+
+    name: str
+    streams: List[List[Batch]]
+    strategy: StrategyConfig
+    arrival: float = 0.0
+    arrival_gap: float = 1e-4
+
+
+class MultiQuerySimulator:
+    """Interleaves N concurrent queries over ONE shared cluster.
+
+    Workers (interpreter pools) and per-node NIC uplinks are shared across
+    tenants — a straggler pipeline of one query delays everyone behind it
+    in the same ring, which is exactly the contention the paper's
+    production setting implies.  Each tenant keeps private link state
+    machines, cost estimator, backlog counters and tick cadence, so
+    redistribution decisions stay per-query.
+    """
+
+    def __init__(self, cluster: ClusterConfig):
+        # Fully deterministic given the tenants (streams/arrivals carry
+        # their own seeds), so no RNG state is held here.
+        self.cluster = cluster
+
+    def _transfer_delay(self, src: int, dst: int, nbytes: float,
+                        nrows: int) -> float:
+        return _transfer_delay(self.cluster, src, dst, nbytes, nrows)
+
+    def run(self, tenants: List[TenantQuery]) -> List[QueryResult]:
+        c = self.cluster
+        n = c.num_workers
+        nq = len(tenants)
+
+        rings = [_RowRing(track_qids=True) for _ in range(n)]
+        worker_running = np.zeros(n, bool)
+        nic_free_at = np.zeros(c.num_nodes)
+
+        # Per-tenant state (axis 0 = tenant).
+        admissions = [t.strategy.admission() for t in tenants]
+        links: List[Optional[AdaptiveLinkSim]] = [
+            AdaptiveLinkSim(t.strategy.dyskew, n)
+            if t.strategy.kind == "dyskew" else None
+            for t in tenants
+        ]
+        distribute_mask = np.zeros((nq, n), bool)
+        est_row_cost = np.full(nq, 1e-3)
+        outstanding = np.zeros((nq, n))
+        recv_in_tick = np.zeros((nq, n))
+        sync_in_tick = np.zeros((nq, n))
+        rows_arr_in_tick = np.zeros((nq, n))
+        batches_arr_in_tick = np.zeros((nq, n))
+        bytes_arr_in_tick = np.zeros((nq, n))
+        busy = np.zeros((nq, n))
+        rows_done = np.zeros((nq, n))
+        rr_counter = np.zeros(nq, np.int64)
+        bytes_moved = np.zeros(nq)
+        rows_redist = np.zeros(nq, np.int64)
+        dec_overhead = np.zeros(nq)
+        num_ticks = np.zeros(nq, np.int64)
+        remaining_arrivals = np.array(
+            [sum(len(s) for s in t.streams) for t in tenants], np.int64
+        )
+        rows_total = np.array(
+            [sum(b.num_rows for s in t.streams for b in s) for t in tenants],
+            np.int64,
+        )
+        rows_completed = np.zeros(nq, np.int64)
+        last_done = np.array([t.arrival for t in tenants])
+
+        events: List[Tuple[float, int, int, int, int, object]] = []
+        seq = 0
+
+        def push(t: float, kind: int, qid: int, who: int, payload: object):
+            nonlocal seq
+            heapq.heappush(events, (t, seq, kind, qid, who, payload))
+            seq += 1
+
+        for q, t in enumerate(tenants):
+            # Tick first (lower seq) so eager links distribute from row one.
+            if links[q] is not None:
+                push(t.arrival, _TICK, q, 0, None)
+            for p, stream in enumerate(t.streams):
+                if stream:
+                    push(t.arrival, _ARRIVAL, q, p, 0)
+
+        def tenant_active(q: int) -> bool:
+            return (
+                remaining_arrivals[q] > 0
+                or rows_completed[q] < rows_total[q]
+            )
+
+        def start_worker(w: int, now: float):
+            ring = rings[w]
+            if worker_running[w] or not len(ring):
+                return
+            chunk, qids = ring.pop(_SERVICE_CHUNK)
+            total = float(chunk.sum())
+            counts = np.bincount(qids, minlength=nq)
+            totals = np.bincount(qids, weights=chunk, minlength=nq)
+            worker_running[w] = True
+            push(now + total, _DONE, 0, w, (counts, totals))
+
+        def siblings_idle_frac(p: int) -> float:
+            idle = 0
+            for w in range(n):
+                if w != p and not worker_running[w] and not len(rings[w]):
+                    idle += 1
+            return idle / max(n - 1, 1)
+
+        def emit(q: int, p: int, d: int, seg_costs: np.ndarray,
+                 nbytes: float, now: float) -> None:
+            nrows = len(seg_costs)
+            cross_node = c.node_of(d) != c.node_of(p)
+            if d != p:
+                rows_redist[q] += nrows
+                if cross_node:
+                    bytes_moved[q] += nbytes
+            arrive = now + self._transfer_delay(p, d, nbytes, nrows)
+            if cross_node and c.model_contention:
+                src_node = c.node_of(p)
+                start = max(now, nic_free_at[src_node])
+                occupy = nbytes / c.network_bandwidth
+                nic_free_at[src_node] = start + occupy
+                arrive = start + occupy + c.network_latency \
+                    + nrows * c.per_row_serialize
+            push(arrive, _ENQUEUE, q, d, seg_costs)
+            outstanding[q, d] += nrows
+
+        def route_batch(q: int, p: int, b: Batch, now: float) -> None:
+            st = tenants[q].strategy
+            cfg = st.dyskew
+            admission = admissions[q]
+            dests: Optional[np.ndarray] = None
+            if st.kind == "static_rr":
+                dests = (rr_counter[q] + np.arange(b.num_rows)) % n
+                rr_counter[q] += b.num_rows
+            elif distribute_mask[q, p]:
+                bpr = b.total_bytes / max(b.num_rows, 1)
+                if not admission.density_guard_blocks(
+                    b.num_rows, bpr, lambda: siblings_idle_frac(p)
+                ):
+                    bl = outstanding[q] * est_row_cost[q]
+                    if cfg.self_skip:
+                        bl = np.where(
+                            admission.eligible_destinations(n, p, c.node_of),
+                            bl, np.inf,
+                        )
+                    counts = waterfill_counts(
+                        bl, b.num_rows, max(est_row_cost[q], 1e-9)
+                    )
+                    dests = np.repeat(np.arange(n), counts)
+                    if st.enable_cost_gate:
+                        moving = dests != p
+                        dec = admission.admit_move(
+                            float(b.sizes[moving].sum()), int(moving.sum()),
+                            float(est_row_cost[q]), n,
+                            c.network_bandwidth, c.per_row_serialize,
+                        )
+                        if not dec.admit:
+                            dests = None
+            if dests is None:
+                emit(q, p, p, b.costs, b.total_bytes, now)
+                return
+            sd, starts, ends, costs_s, sizes_s = _group_by_dest(
+                dests, b.costs, b.sizes
+            )
+            byte_sums = np.add.reduceat(sizes_s, starts)
+            for j in range(len(starts)):
+                lo, hi = starts[j], ends[j]
+                emit(q, p, int(sd[lo]), costs_s[lo:hi],
+                     float(byte_sums[j]), now)
+
+        now = 0.0
+        while events:
+            now, _, kind, qid, who, payload = heapq.heappop(events)
+            if kind == _TICK:
+                q = qid
+                num_ticks[q] += 1
+                density = np.where(
+                    batches_arr_in_tick[q] > 0,
+                    rows_arr_in_tick[q] / np.maximum(batches_arr_in_tick[q], 1),
+                    0.0,
+                )
+                bpr = np.where(
+                    rows_arr_in_tick[q] > 0,
+                    bytes_arr_in_tick[q] / np.maximum(rows_arr_in_tick[q], 1),
+                    0.0,
+                )
+                distribute_mask[q] = links[q].tick(
+                    recv_in_tick[q], sync_in_tick[q], density, bpr,
+                    worker_running,
+                )
+                recv_in_tick[q] = 0.0
+                sync_in_tick[q] = 0.0
+                rows_arr_in_tick[q] = 0.0
+                batches_arr_in_tick[q] = 0.0
+                bytes_arr_in_tick[q] = 0.0
+                if tenant_active(q):
+                    push(now + tenants[q].strategy.tick_interval,
+                         _TICK, q, 0, None)
+            elif kind == _ARRIVAL:
+                q, p, k = qid, who, payload
+                st = tenants[q].strategy
+                b = tenants[q].streams[p][k]
+                remaining_arrivals[q] -= 1
+                rows_arr_in_tick[q, p] += b.num_rows
+                batches_arr_in_tick[q, p] += 1
+                bytes_arr_in_tick[q, p] += b.total_bytes
+                if links[q] is not None:
+                    dec_overhead[q] += st.decision_overhead
+                    now += st.decision_overhead
+                route_batch(q, p, b, now)
+                if k + 1 < len(tenants[q].streams[p]):
+                    if st.kind == "static_rr" or distribute_mask[q, p]:
+                        bl = float(outstanding[q].min())
+                    else:
+                        bl = float(outstanding[q, p])
+                    backpressure = (
+                        max(0.0, bl - c.flow_window_rows) * est_row_cost[q]
+                    )
+                    push(now + tenants[q].arrival_gap + backpressure,
+                         _ARRIVAL, q, p, k + 1)
+            elif kind == _ENQUEUE:
+                q, w = qid, who
+                rings[w].push(payload, qid=q)
+                recv_in_tick[q, w] += len(payload)
+                start_worker(w, now)
+            else:  # _DONE
+                w = who
+                counts, totals = payload
+                busy[:, w] += totals
+                rows_done[:, w] += counts
+                for q in np.flatnonzero(counts):
+                    cnt, tot = int(counts[q]), float(totals[q])
+                    sync_in_tick[q, w] += tot
+                    ema = tenants[q].strategy.cost_ema
+                    est_row_cost[q] = (
+                        (1 - ema) * est_row_cost[q] + ema * tot / cnt
+                    )
+                    outstanding[q, w] = max(outstanding[q, w] - cnt, 0.0)
+                    rows_completed[q] += cnt
+                    last_done[q] = now
+                worker_running[w] = False
+                start_worker(w, now)
+
+        results: List[QueryResult] = []
+        for q, t in enumerate(tenants):
+            latency = max(last_done[q] - t.arrival, 1e-12)
+            total_rows = int(rows_done[q].sum())
+            applied = rows_redist[q] > 0.01 * max(total_rows, 1)
+            results.append(QueryResult(
+                latency=float(latency),
+                utilization=float(busy[q].sum() / (latency * n)),
+                bytes_moved_remote=float(bytes_moved[q]),
+                rows_redistributed=int(rows_redist[q]),
+                redistribution_applied=bool(applied),
+                per_worker_busy=busy[q].copy(),
+                decision_overhead=float(dec_overhead[q]),
+                num_ticks=int(num_ticks[q]),
+            ))
+        return results

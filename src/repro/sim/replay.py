@@ -5,13 +5,23 @@ utilization, redistribution-applied fraction)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import multiprocessing
+import warnings
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.types import DySkewConfig, Policy, SkewModelKind
-from repro.sim.engine import ClusterConfig, QueryResult, Simulator, StrategyConfig
-from repro.sim.workload import QueryProfile, generate_query
+from repro.sim.engine import (
+    ClusterConfig,
+    MultiQuerySimulator,
+    QueryResult,
+    Simulator,
+    StrategyConfig,
+    TenantQuery,
+)
+from repro.sim.workload import QueryProfile, generate_query, generate_query_cached
 
 # Strategy resolution for the legacy-vs-DySkew A/B the paper evaluates:
 #
@@ -89,6 +99,80 @@ def scan_arrival_gap(
     return ideal / (feed_factor * nbatches)
 
 
+def _run_one_query(
+    task: Tuple[QueryProfile, ClusterConfig, StrategyConfig, int, int, float],
+) -> QueryResult:
+    """One (profile, strategy) simulation — top-level so suite runs can
+    fan out across a process pool."""
+    prof, cluster, st, sim_seed, gen_seed, gap = task
+    sim = Simulator(cluster, st, seed=sim_seed)
+    batches = generate_query_cached(prof, cluster.num_workers, seed=gen_seed)
+    return sim.run_query(batches, arrival_gap=gap)
+
+
+_POOL: Optional[ProcessPoolExecutor] = None
+_POOL_WORKERS = 0
+
+
+def _get_pool(workers: int) -> ProcessPoolExecutor:
+    """Lazily-created shared pool — spawned workers pay the jax import
+    once per process, not once per suite."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is None or _POOL_WORKERS < workers:
+        if _POOL is not None:
+            _POOL.shutdown(wait=False)
+        ctx = multiprocessing.get_context("spawn")
+        _POOL = ProcessPoolExecutor(max_workers=workers, mp_context=ctx)
+        _POOL_WORKERS = workers
+    return _POOL
+
+
+def _map_queries(
+    tasks: List[Tuple], workers: Optional[int]
+) -> List[QueryResult]:
+    """Run simulation tasks, optionally on a 'spawn' process pool.
+
+    Queries are independent, so results are deterministic regardless of
+    ``workers``; any pool failure (restricted sandboxes) falls back to the
+    serial path.
+    """
+    if workers and workers > 1 and len(tasks) > 1:
+        try:
+            # Small chunks: per-query cost varies by >10x, so fine-grained
+            # scheduling beats lower dispatch overhead.  Even-sized chunks
+            # keep run_ab's interleaved legacy/dyskew pairs in the same
+            # worker process, so its per-process stream cache hits.
+            chunk = max(len(tasks) // (workers * 10), 1)
+            chunk += chunk % 2
+            return list(
+                _get_pool(workers).map(_run_one_query, tasks, chunksize=chunk)
+            )
+        except Exception as e:  # pool infra failure (spawn blocked, OOM-killed worker)
+            warnings.warn(
+                f"simulation pool failed ({type(e).__name__}: {e}); "
+                "re-running suite serially",
+                RuntimeWarning,
+            )
+    return [_run_one_query(t) for t in tasks]
+
+
+def _warm_worker() -> bool:
+    """No-op task that forces a spawned worker to pay its heavy imports."""
+    return True
+
+
+def warm_pool(workers: Optional[int]) -> None:
+    """Kick off worker-process startup (jax import) in the background so
+    it overlaps the caller's own setup.  Non-blocking; best-effort."""
+    if workers and workers > 1:
+        try:
+            pool = _get_pool(workers)
+            for _ in range(workers):
+                pool.submit(_warm_worker)
+        except Exception:
+            pass
+
+
 def run_suite(
     profiles: Sequence[QueryProfile],
     cluster: ClusterConfig,
@@ -96,17 +180,18 @@ def run_suite(
     seed: int = 0,
     per_query_strategy: Optional[Dict[str, StrategyConfig]] = None,
     feed_factor: float = 2.0,
+    workers: Optional[int] = None,
 ) -> SuiteResult:
-    results = []
+    tasks = []
     for i, prof in enumerate(profiles):
         st = strategy
         if per_query_strategy and prof.name in per_query_strategy:
             st = per_query_strategy[prof.name]
-        sim = Simulator(cluster, st, seed=seed + i)
-        batches = generate_query(prof, cluster.num_workers, seed=seed * 1000 + i)
         gap = scan_arrival_gap(prof, cluster, feed_factor)
-        results.append(sim.run_query(batches, arrival_gap=gap))
-    return SuiteResult(strategy=strategy.kind, results=results)
+        tasks.append((prof, cluster, st, seed + i, seed * 1000 + i, gap))
+    return SuiteResult(
+        strategy=strategy.kind, results=_map_queries(tasks, workers)
+    )
 
 
 def improvement(base: float, new: float) -> float:
@@ -131,17 +216,76 @@ def run_ab(
     cluster: ClusterConfig,
     seed: int = 0,
     feed_factor: float = 2.0,
+    workers: Optional[int] = None,
 ) -> Dict[str, SuiteResult]:
     """The paper's A/B: legacy system vs DySkew, with per-query strategy
     resolution (locality constraints, declared policies)."""
+    arms = (("legacy", legacy_strategy), ("dyskew", dyskew_strategy))
+    # Both arms in ONE submission (no pool idle at the barrier), with the
+    # two arms of each query adjacent so a pool worker re-uses the cached
+    # generated streams for the pair.
+    tasks = []
+    for i, prof in enumerate(profiles):
+        gap = scan_arrival_gap(prof, cluster, feed_factor)
+        for name, resolve in arms:
+            tasks.append(
+                (prof, cluster, resolve(prof), seed + i, seed * 1000 + i, gap)
+            )
+    results = _map_queries(tasks, workers)
+    return {
+        name: SuiteResult(strategy=name, results=results[j::len(arms)])
+        for j, (name, _) in enumerate(arms)
+    }
+
+
+# ------------------------------------------------------------------ #
+# Multi-tenant replay (concurrent queries on one shared cluster)
+# ------------------------------------------------------------------ #
+
+
+def staggered_tenants(
+    profiles: Sequence[QueryProfile],
+    cluster: ClusterConfig,
+    resolve: Callable[[QueryProfile], StrategyConfig],
+    seed: int = 0,
+    stagger_frac: float = 0.25,
+    feed_factor: float = 2.0,
+) -> List[TenantQuery]:
+    """Materialize one tenant per profile with arrivals staggered by
+    ``stagger_frac`` of the mean ideal query duration, so neighbouring
+    queries genuinely overlap on the shared cluster."""
+    ideals = [
+        p.n_rows * p.mean_row_cost / cluster.num_workers for p in profiles
+    ]
+    stagger = stagger_frac * float(np.mean(ideals)) if ideals else 0.0
+    tenants = []
+    for i, prof in enumerate(profiles):
+        tenants.append(TenantQuery(
+            name=prof.name,
+            streams=generate_query(prof, cluster.num_workers,
+                                   seed=seed * 1000 + i),
+            strategy=resolve(prof),
+            arrival=i * stagger,
+            arrival_gap=scan_arrival_gap(prof, cluster, feed_factor),
+        ))
+    return tenants
+
+
+def run_multi_tenant_ab(
+    profiles: Sequence[QueryProfile],
+    cluster: ClusterConfig,
+    seed: int = 0,
+    stagger_frac: float = 0.25,
+    feed_factor: float = 2.0,
+) -> Dict[str, SuiteResult]:
+    """Legacy vs DySkew with all ``profiles`` running CONCURRENTLY as
+    tenants of one shared cluster (same streams, same arrival schedule)."""
     out: Dict[str, SuiteResult] = {}
     for name, resolve in (("legacy", legacy_strategy), ("dyskew", dyskew_strategy)):
-        results = []
-        for i, prof in enumerate(profiles):
-            st = resolve(prof)
-            sim = Simulator(cluster, st, seed=seed + i)
-            batches = generate_query(prof, cluster.num_workers, seed=seed * 1000 + i)
-            gap = scan_arrival_gap(prof, cluster, feed_factor)
-            results.append(sim.run_query(batches, arrival_gap=gap))
+        tenants = staggered_tenants(
+            profiles, cluster, resolve, seed=seed,
+            stagger_frac=stagger_frac, feed_factor=feed_factor,
+        )
+        results = MultiQuerySimulator(cluster).run(tenants)
         out[name] = SuiteResult(strategy=name, results=results)
     return out

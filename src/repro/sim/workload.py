@@ -14,6 +14,7 @@ qualitative claims (see DESIGN.md §8).  Two independent skew axes:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List
 
 import numpy as np
@@ -79,25 +80,49 @@ def generate_query(
 
     # The scan batches rows per producer, capped by rows AND bytes — huge
     # rows collapse the observed batch density exactly as in §III.B.
+    # Batch boundaries are found with one prefix-sum + searchsorted per
+    # batch; only genuinely byte-bound batches (heavy rows) fall back to
+    # the exact sequential accumulation.
     streams: List[List[Batch]] = []
+    target = profile.batch_bytes_target
+    batch_rows = profile.batch_rows
     for p in range(n_producers):
         idx = np.nonzero(owner == p)[0]
+        cs, sz = costs[idx], sizes[idx]
+        m = len(idx)
+        csum = np.concatenate(([0.0], np.cumsum(sz)))
         stream: List[Batch] = []
         i = 0
-        while i < len(idx):
-            take, acc = 0, 0.0
-            while (
-                i + take < len(idx)
-                and take < profile.batch_rows
-                and (take == 0 or acc + sizes[idx[i + take]] <= profile.batch_bytes_target)
-            ):
-                acc += sizes[idx[i + take]]
-                take += 1
-            sel = idx[i : i + take]
-            stream.append(Batch(costs=costs[sel].copy(), sizes=sizes[sel].copy()))
+        while i < m:
+            limit = min(batch_rows, m - i)
+            fit = int(np.searchsorted(csum, csum[i] + target, side="right")) - 1 - i
+            if fit >= limit:
+                take = limit
+            else:
+                # Byte cap binds before the row cap: accumulate row by row
+                # (few rows — these are §III.B heavy-row batches).
+                take, acc = 0, 0.0
+                while (
+                    take < limit
+                    and (take == 0 or acc + sz[i + take] <= target)
+                ):
+                    acc += sz[i + take]
+                    take += 1
+            stream.append(Batch(costs=cs[i:i + take].copy(),
+                                sizes=sz[i:i + take].copy()))
             i += take
         streams.append(stream)
     return streams
+
+
+@functools.lru_cache(maxsize=32)
+def generate_query_cached(
+    profile: QueryProfile, n_producers: int, seed: int
+) -> List[List[Batch]]:
+    """Memoized :func:`generate_query` for A/B comparisons that replay the
+    same streams under several strategies (the batches are treated as
+    immutable everywhere).  ``QueryProfile`` is frozen, hence hashable."""
+    return generate_query(profile, n_producers, seed)
 
 
 # --------------------------------------------------------------------- #
@@ -231,6 +256,37 @@ def production_mix(num_queries: int = 200, seed: int = 23) -> List[QueryProfile]
                 row_bytes=float(10 ** rng.uniform(7.5, 8.5)),  # 30–300 MB rows
                 batch_rows=4096,
                 policy=policy, locality_constrained=constrained,
+            ))
+    return out
+
+
+def multi_tenant_suite(num_tenants: int = 8, seed: int = 41) -> List[QueryProfile]:
+    """Concurrent-tenant mix for the shared-cluster scenario: a couple of
+    heavily skewed 'noisy neighbour' queries interleaved with balanced
+    bread-and-butter queries, sized so neighbours genuinely overlap.
+
+    About one tenant in four is skewed (partition + cost skew); the rest
+    are balanced.  All are Snowpark UDF operators (Eager policy) unless
+    locality-constrained, mirroring the production population of Fig. 5.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    for q in range(num_tenants):
+        if q % 4 == 0:  # noisy neighbour: hot producer + heavy-tailed cost
+            out.append(QueryProfile(
+                name=f"tenant_skew_{q:02d}",
+                n_rows=int(rng.integers(6_000, 10_000)),
+                mean_row_cost=float(10 ** rng.uniform(-3.0, -2.6)),
+                cost_sigma=float(rng.uniform(1.2, 1.8)),
+                partition_alpha=float(rng.uniform(0.8, 1.5)),
+                hot_fraction=float(rng.uniform(0.15, 0.35)),
+            ))
+        else:
+            out.append(QueryProfile(
+                name=f"tenant_bal_{q:02d}",
+                n_rows=int(rng.integers(3_000, 6_000)),
+                mean_row_cost=float(10 ** rng.uniform(-3.4, -3.0)),
+                cost_sigma=float(rng.uniform(0.3, 0.6)),
             ))
     return out
 

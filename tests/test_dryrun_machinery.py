@@ -1,6 +1,7 @@
 """Dry-run machinery tests: spec/init consistency, sharding resolution,
 and a reduced-config multi-device lower+compile in a subprocess."""
 
+import os
 import subprocess
 import sys
 
@@ -124,9 +125,18 @@ class TestMultiDeviceCompile:
     def test_reduced_moe_train_step_compiles_on_8_devices(self):
         """End-to-end sharded lower+compile of the DySkew-MoE train step on
         an 8-host-device mesh (subprocess: device count is process-global)."""
+        # Propagate backend-selection env vars: without JAX_PLATFORMS the
+        # child may probe for a TPU runtime (30 s+ metadata stalls) and
+        # blow the timeout on CPU-only hosts.
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+        env.update({
+            k: v for k, v in os.environ.items()
+            if k.startswith(("JAX_", "XLA_", "TPU_", "LIBTPU"))
+        })
+        env.setdefault("JAX_PLATFORMS", "cpu")
         res = subprocess.run(
             [sys.executable, "-c", SUBPROCESS_SCRIPT],
             capture_output=True, text=True, timeout=420,
-            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+            env=env,
         )
         assert "SUBPROCESS_OK" in res.stdout, res.stderr[-2000:]

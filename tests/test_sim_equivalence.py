@@ -1,0 +1,278 @@
+"""Equivalence + planner tests for the array-backed simulator core.
+
+The array-backed engine (`repro.sim.engine.Simulator`) is a data-structure
+rewrite of the seed list-of-tuples engine (`repro.sim.legacy`): same event
+semantics, same float operations in the same order.  These tests pin the
+two against each other on seeded workloads — the trajectories are chaotic
+(a one-ulp rounding difference amplifies through routing decisions), so a
+passing tight tolerance here means the rewrite is genuinely faithful, not
+merely close.
+
+Also covered: the shared `repro.core.admission` planner the engine (and
+serving/data paths) delegate their per-batch guards to, and the
+multi-tenant engine's conservation/degradation properties.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.admission import (
+    BatchAdmission,
+    straggler_savings,
+    transfer_seconds,
+)
+from repro.core.types import DySkewConfig, Policy
+from repro.sim.engine import (
+    ClusterConfig,
+    MultiQuerySimulator,
+    Simulator,
+    StrategyConfig,
+    TenantQuery,
+)
+from repro.sim.legacy import LegacySimulator
+from repro.sim.replay import (
+    default_strategies,
+    dyskew_strategy,
+    legacy_strategy,
+    scan_arrival_gap,
+    staggered_tenants,
+)
+from repro.sim.workload import (
+    QueryProfile,
+    generate_query,
+    heavy_rows_case,
+    multi_tenant_suite,
+    self_skip_case,
+)
+
+TOL = dict(rtol=1e-9, atol=0.0)
+
+
+def _compare(cluster, prof, strategy, seed, gap=None):
+    batches = generate_query(prof, cluster.num_workers, seed=seed)
+    if gap is None:
+        gap = scan_arrival_gap(prof, cluster)
+    new = Simulator(cluster, strategy, seed).run_query(batches, gap)
+    old = LegacySimulator(cluster, strategy, seed).run_query(batches, gap)
+    np.testing.assert_allclose(new.latency, old.latency, **TOL)
+    np.testing.assert_allclose(new.utilization, old.utilization, **TOL)
+    np.testing.assert_allclose(
+        new.bytes_moved_remote, old.bytes_moved_remote, **TOL
+    )
+    assert new.rows_redistributed == old.rows_redistributed
+    assert new.redistribution_applied == old.redistribution_applied
+    np.testing.assert_allclose(new.per_worker_busy, old.per_worker_busy, **TOL)
+    return new, old
+
+
+class TestEngineEquivalence:
+    """Array-backed engine reproduces the legacy engine's QueryResult."""
+
+    @pytest.mark.parametrize("kind", ["none", "static_rr", "dyskew"])
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_skewed_workload_all_strategies(self, kind, seed):
+        cluster = ClusterConfig(num_nodes=4)
+        prof = QueryProfile(
+            name="eq", n_rows=3000, mean_row_cost=1e-3, cost_sigma=1.2,
+            partition_alpha=1.0, hot_fraction=0.2,
+        )
+        _compare(cluster, prof, default_strategies()[kind], seed)
+
+    def test_heavy_rows_guarded(self):
+        cluster = ClusterConfig(num_nodes=4)
+        _compare(cluster, heavy_rows_case(row_gb=1.0, n_rows=48),
+                 default_strategies()["dyskew"], 0, gap=1e-4)
+
+    def test_self_skip_ablation(self):
+        cluster = ClusterConfig(num_nodes=2)
+        st = StrategyConfig(
+            kind="dyskew",
+            dyskew=DySkewConfig(policy=Policy.EAGER_SNOWPARK, self_skip=True),
+        )
+        _compare(cluster, self_skip_case(), st, 0)
+
+    def test_ab_resolution_strategies(self):
+        cluster = ClusterConfig(num_nodes=2)
+        prof = QueryProfile(
+            name="eq2", n_rows=2000, mean_row_cost=2e-3, cost_sigma=0.8,
+            partition_alpha=0.4, locality_constrained=True,
+        )
+        for resolve in (legacy_strategy, dyskew_strategy):
+            _compare(cluster, prof, resolve(prof), 1)
+
+
+class TestAdmissionPlanner:
+    """Unit tests for the shared repro.core admission guards."""
+
+    def _planner(self, **kw):
+        return BatchAdmission(DySkewConfig(policy=Policy.EAGER_SNOWPARK, **kw))
+
+    # -- cost gate ---------------------------------------------------- #
+
+    def test_cost_gate_blocks_heavy_cheap_rows(self):
+        p = self._planner()
+        # 1 GB moved to save ~1 ms of straggler time: refuse.
+        dec = p.admit_move(
+            bytes_moved=1e9, rows_moved=8, est_row_cost=1e-4,
+            num_instances=8, bandwidth=1.25e9, per_row_overhead=2e-6,
+        )
+        assert not dec.admit and dec.reason == "cost_gate"
+        assert dec.est_transfer > dec.est_saved
+
+    def test_cost_gate_admits_expensive_small_rows(self):
+        p = self._planner()
+        dec = p.admit_move(
+            bytes_moved=64_000, rows_moved=128, est_row_cost=5e-3,
+            num_instances=8, bandwidth=1.25e9, per_row_overhead=2e-6,
+        )
+        assert dec.admit and dec.reason == "ok"
+
+    def test_cost_gate_threshold_scales(self):
+        # Raising cost_gate makes the same move harder to admit.
+        loose = self._planner(cost_gate=0.1)
+        strict = self._planner(cost_gate=10.0)
+        args = dict(bytes_moved=1e6, rows_moved=32, est_row_cost=1e-4,
+                    num_instances=8, bandwidth=1.25e9, per_row_overhead=2e-6)
+        assert loose.admit_move(**args).admit
+        assert not strict.admit_move(**args).admit
+
+    def test_cost_gate_disabled_admits_everything(self):
+        p = BatchAdmission(
+            DySkewConfig(policy=Policy.EAGER_SNOWPARK),
+            enable_cost_gate=False,
+        )
+        dec = p.admit_move(1e12, 4, 1e-9, 8, 1.25e9, 2e-6)
+        assert dec.admit
+
+    def test_transfer_and_savings_formulas(self):
+        assert transfer_seconds(1e9, 10, 1e9, 1e-3) == pytest.approx(1.01)
+        # Savings scale with (1 - 1/n): nothing saved on a 1-worker cluster.
+        assert straggler_savings(1e-3, 100, 1) == 0.0
+        assert straggler_savings(1e-3, 100, 4) == pytest.approx(0.075)
+
+    # -- density guard (Row Size Model) -------------------------------- #
+
+    def test_density_guard_blocks_sparse_heavy_batches(self):
+        p = self._planner()
+        cfg = p.cfg
+        assert p.density_guard_blocks(
+            num_rows=2, bytes_per_row=cfg.heavy_row_bytes * 10,
+            idle_sibling_frac=0.0,
+        )
+
+    def test_density_guard_ignores_small_light_batches(self):
+        # End-of-stream remainder batches (few rows, small bytes) must NOT
+        # trip the guard.
+        p = self._planner()
+        assert not p.density_guard_blocks(
+            num_rows=2, bytes_per_row=128.0, idle_sibling_frac=0.0
+        )
+
+    def test_density_guard_yields_to_idle_siblings(self):
+        p = self._planner()
+        cfg = p.cfg
+        assert not p.density_guard_blocks(
+            num_rows=2, bytes_per_row=cfg.heavy_row_bytes * 10,
+            idle_sibling_frac=1.0,
+        )
+
+    def test_density_guard_lazy_idle_callable(self):
+        p = self._planner()
+        calls = []
+
+        def frac():
+            calls.append(1)
+            return 0.0
+
+        # Cheap size checks fail → the expensive sibling scan is skipped.
+        assert not p.density_guard_blocks(10_000, 8.0, frac)
+        assert not calls
+        assert p.density_guard_blocks(2, p.cfg.heavy_row_bytes * 10, frac)
+        assert calls
+
+    # -- self-skip eligibility ----------------------------------------- #
+
+    def test_no_self_skip_everyone_eligible(self):
+        mask = self._planner().eligible_destinations(8, producer=3)
+        assert mask.all()
+
+    def test_self_skip_excludes_producer(self):
+        mask = self._planner(self_skip=True).eligible_destinations(8, 3)
+        assert not mask[3] and mask.sum() == 7
+
+    def test_self_skip_excludes_whole_node(self):
+        c = ClusterConfig(num_nodes=2, interpreters_per_node=4)
+        mask = self._planner(self_skip=True).eligible_destinations(
+            c.num_workers, producer=1, node_of=c.node_of
+        )
+        assert not mask[:4].any() and mask[4:].all()
+
+
+class TestMultiQuerySimulator:
+    def _tenants(self, cluster, num=4, resolve=dyskew_strategy, seed=0):
+        profiles = multi_tenant_suite(num, seed=41)
+        return staggered_tenants(profiles, cluster, resolve, seed=seed)
+
+    def test_conservation_per_tenant(self):
+        cluster = ClusterConfig(num_nodes=2)
+        tenants = self._tenants(cluster)
+        results = MultiQuerySimulator(cluster).run(tenants)
+        assert len(results) == len(tenants)
+        for t, r in zip(tenants, results):
+            total_cost = sum(b.costs.sum() for s in t.streams for b in s)
+            np.testing.assert_allclose(
+                r.per_worker_busy.sum(), total_cost, rtol=1e-9
+            )
+            assert r.latency > 0
+
+    def test_determinism(self):
+        cluster = ClusterConfig(num_nodes=2)
+        r1 = MultiQuerySimulator(cluster).run(self._tenants(cluster))
+        r2 = MultiQuerySimulator(cluster).run(self._tenants(cluster))
+        for a, b in zip(r1, r2):
+            assert a.latency == b.latency
+            assert a.rows_redistributed == b.rows_redistributed
+
+    def test_contention_slows_tenants_vs_solo(self):
+        """A tenant sharing the cluster can't beat its solo run."""
+        cluster = ClusterConfig(num_nodes=2)
+        tenants = self._tenants(cluster)
+        shared = MultiQuerySimulator(cluster).run(tenants)
+        for t, r in zip(tenants, shared):
+            solo = MultiQuerySimulator(cluster).run(
+                [TenantQuery(t.name, t.streams, t.strategy, 0.0,
+                             t.arrival_gap)]
+            )[0]
+            assert r.latency >= solo.latency * 0.999
+
+    def test_dyskew_beats_legacy_under_concurrency(self):
+        cluster = ClusterConfig(num_nodes=4)
+        profiles = multi_tenant_suite(6, seed=43)
+        leg = MultiQuerySimulator(cluster).run(
+            staggered_tenants(profiles, cluster, legacy_strategy, seed=0)
+        )
+        dk = MultiQuerySimulator(cluster).run(
+            staggered_tenants(profiles, cluster, dyskew_strategy, seed=0)
+        )
+        assert np.mean([r.latency for r in dk]) < np.mean(
+            [r.latency for r in leg]
+        )
+
+    def test_single_tenant_matches_simulator(self):
+        """One tenant on the shared engine ≈ the single-query engine."""
+        cluster = ClusterConfig(num_nodes=2)
+        prof = QueryProfile(
+            name="solo", n_rows=2000, mean_row_cost=1e-3, cost_sigma=1.0,
+            partition_alpha=0.8, hot_fraction=0.2,
+        )
+        st = default_strategies()["dyskew"]
+        batches = generate_query(prof, cluster.num_workers, seed=5)
+        gap = scan_arrival_gap(prof, cluster)
+        solo = Simulator(cluster, st, 0).run_query(batches, gap)
+        multi = MultiQuerySimulator(cluster).run(
+            [TenantQuery("solo", batches, st, 0.0, gap)]
+        )[0]
+        np.testing.assert_allclose(multi.latency, solo.latency, rtol=0.05)
+        np.testing.assert_allclose(
+            multi.per_worker_busy.sum(), solo.per_worker_busy.sum(), rtol=1e-9
+        )

@@ -107,7 +107,10 @@ class TestGradCompression:
 
     def test_allreduce_compressed_matches_mean(self):
         # shard_map over 1 device: psum degenerates but path exercises.
-        from jax import shard_map as _sm
+        try:  # jax >= 0.6 exports shard_map at the top level
+            from jax import shard_map as _sm
+        except ImportError:
+            from jax.experimental.shard_map import shard_map as _sm
         from jax.sharding import Mesh, PartitionSpec as P
 
         mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
@@ -280,3 +283,24 @@ class TestServing:
                           kv_bytes_per_token=4e6)  # enormous KV per token
         res = ServingEngine(cfg).run(self._requests(skew=True))
         assert res["migrations"] <= 4
+
+    def test_forward_migration_terminates(self):
+        """A rebalance move to a HIGHER replica must not re-visit the moved
+        request while applying moves (seed bug: appending to a queue that
+        the apply loop iterates later looped forever)."""
+        cfg = ServeConfig(num_replicas=4, scheduler="dyskew")
+        eng = ServingEngine(cfg)
+        orig = eng.sched.rebalance
+        forced = []
+
+        def force_one(queued, load_tokens):
+            if queued and not forced:
+                forced.append(True)
+                r = queued[0]
+                return {r.rid: (r.replica + 2) % cfg.num_replicas}
+            return orig(queued, load_tokens)
+
+        eng.sched.rebalance = force_one
+        res = eng.run(self._requests(n=16))
+        assert res["completed"] == 16
+        assert res["migrations"] == 1
