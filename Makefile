@@ -1,0 +1,21 @@
+# Convenience targets; see README.md for details.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test check-docs bench bench-quick
+
+# Tier-1 verification: the full test suite plus the doc-link check.
+verify: test check-docs
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+check-docs:
+	$(PYTHON) tools/check_docs.py
+
+bench:
+	$(PYTHON) benchmarks/run.py
+
+bench-quick:
+	$(PYTHON) benchmarks/run.py --quick

@@ -3,27 +3,53 @@
 The paper's production setting runs many Snowpark queries against the
 same virtual warehouse at once; the interesting question is how a noisy
 (skewed) neighbour degrades everyone else's latency, and how much of that
-DySkew claws back versus the legacy static round-robin.  This bench
-interleaves the `multi_tenant_suite` tenants with staggered arrivals over
-shared interpreter pools and NIC uplinks (`MultiQuerySimulator`) and
-reports per-query p50/p99 latency for legacy vs DySkew.
+DySkew claws back versus the legacy static round-robin.  Two traffic
+regimes:
+
+  closed-loop — the `multi_tenant_suite` tenants with staggered arrivals
+      over shared interpreter pools and NIC uplinks
+      (`MultiQuerySimulator`), per-query p50/p99 for legacy vs DySkew;
+  open-loop   — a Poisson query stream over two priority classes (gold,
+      weight 8; bulk skewed batch work, weight 1) with the weighted
+      fair-share admission layer on, reporting per-class p50/p99/p999
+      and Jain's fairness index over per-tenant slowdowns, fair share
+      on vs off.
 """
 
 from __future__ import annotations
 
+import os
+import sys
 import time
 from typing import List, Tuple
 
+# Make `python benchmarks/bench_multi_tenant.py` work from anywhere (the
+# harness `benchmarks/run.py` does the same fix for the whole suite).
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 import numpy as np
 
+from repro.core.admission import FairShareConfig
 from repro.sim.engine import ClusterConfig
-from repro.sim.replay import improvement, run_multi_tenant_ab
-from repro.sim.workload import multi_tenant_suite
+from repro.sim.replay import (
+    improvement,
+    open_loop_rate,
+    run_multi_tenant_ab,
+    run_open_loop,
+)
+from repro.sim.workload import (
+    ArrivalProcess,
+    multi_tenant_suite,
+    priority_class_suite,
+)
 
 Row = Tuple[str, float, str]
 
 
-def run(quick: bool = False) -> List[Row]:
+def _closed_loop(quick: bool) -> List[Row]:
     num_tenants = 4 if quick else 8
     rounds = 2 if quick else 4
     cluster = ClusterConfig(num_nodes=4)
@@ -57,6 +83,49 @@ def run(quick: bool = False) -> List[Row]:
     return rows
 
 
+def _open_loop(quick: bool) -> List[Row]:
+    """Poisson open-loop stream, two priority classes, fair share on/off."""
+    num_queries = 10 if quick else 24
+    cluster = ClusterConfig(num_nodes=2 if quick else 4)
+    specs = priority_class_suite()
+    proc = ArrivalProcess(
+        kind="poisson",
+        rate=open_loop_rate([p for p, _ in specs], cluster, load=0.75),
+    )
+    fs_cfg = FairShareConfig(quantum_rows=128.0, heavy_row_bytes=1e6)
+    t0 = time.time()
+    base = run_open_loop(specs, cluster, proc, num_queries, seed=0)
+    fair = run_open_loop(specs, cluster, proc, num_queries, seed=0,
+                         fair_share=fs_cfg)
+    rows: List[Row] = []
+    for cls, stats in fair["per_class"].items():
+        b = base["per_class"][cls]
+        for pct in ("p50", "p99", "p999"):
+            rows.append((
+                f"open_loop_poisson_{cls}_{pct}_latency_fair",
+                stats[pct] * 1e6,
+                f"{pct}_nofair_us={b[pct] * 1e6:.1f};n={stats['n']};"
+                f"mean_slowdown={stats['mean_slowdown']:.2f}",
+            ))
+    rows.append((
+        "open_loop_poisson_jain_fairness_fair",
+        fair["jain"],
+        f"jain_nofair={base['jain']:.3f};queries={num_queries};"
+        f"rate_qps={proc.rate:.2f};wall_s={time.time() - t0:.1f}",
+    ))
+    return rows
+
+
+def run(quick: bool = False) -> List[Row]:
+    return _closed_loop(quick) + _open_loop(quick)
+
+
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    default=bool(os.environ.get("REPRO_BENCH_QUICK")))
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
         print(",".join(str(x) for x in r))

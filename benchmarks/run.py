@@ -38,7 +38,16 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     default=bool(os.environ.get("REPRO_BENCH_QUICK")))
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--check-docs", action="store_true",
+                    help="run the README/ARCHITECTURE doc-link check "
+                         "instead of the benches (see tools/check_docs.py)")
     args = ap.parse_args()
+
+    if args.check_docs:
+        sys.path.insert(0, os.path.join(_ROOT, "tools"))
+        import check_docs
+
+        sys.exit(check_docs.main())
 
     print("name,us_per_call,derived")
     failures = 0

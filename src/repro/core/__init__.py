@@ -6,14 +6,21 @@ Public API:
                 N-strikes, batch-density Row Size Model
   state_machine — per-link-instance adaptive state machine (Fig. 2)
   redistribution — round_robin (legacy baseline), lpt_greedy, zigzag
-  cost_model — cost-aware redistribution gate
-  admission — shared host-side per-batch admission planner (density
-              guard, cost gate, self-skip eligibility)
+  cost_model — cost-aware redistribution gate (delegates its formulas to
+               admission's polymorphic implementations)
+  admission — shared host-side admission planners: per-batch guards
+              (density guard, cost gate, self-skip eligibility) and the
+              weighted fair-share multi-tenant layer
   adaptive_link.AdaptiveLink — the assembled adaptive data link
 """
 
 from repro.core.adaptive_link import AdaptiveLink, AdaptiveLinkConfig
-from repro.core.admission import AdmissionDecision, BatchAdmission
+from repro.core.admission import (
+    AdmissionDecision,
+    BatchAdmission,
+    FairShareAdmission,
+    FairShareConfig,
+)
 from repro.core.cost_model import CostModelConfig
 from repro.core.types import (
     DySkewConfig,
@@ -31,6 +38,8 @@ __all__ = [
     "BatchAdmission",
     "CostModelConfig",
     "DySkewConfig",
+    "FairShareAdmission",
+    "FairShareConfig",
     "LinkState",
     "Policy",
     "RoutingPlan",

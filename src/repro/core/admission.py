@@ -1,6 +1,8 @@
-"""Shared per-batch admission planner for DySkew redistribution.
+"""Shared admission planning for DySkew redistribution and tenancy.
 
-One host-side implementation of the three admission guards every DySkew
+Two planners live here, both host-side and dependency-light:
+
+:class:`BatchAdmission` — the three per-batch guards every DySkew
 call-site needs before it may move work off its producer:
 
   density guard — the Row Size Model (§III.B): a batch whose density
@@ -11,18 +13,43 @@ call-site needs before it may move work off its producer:
   self-skip     — destination eligibility for the §III.B forced-remote
       ablation (the producer — or its whole node — is excluded).
 
-Historically `sim/engine.py`, `serving/engine.py` and `data/pipeline.py`
-each re-implemented this gating by hand; they now all call this planner.
-The jax-traced twin of the cost gate lives in `repro.core.cost_model`
-(used inside `AdaptiveLink.step`); the formulas here are kept identical
-but run on plain Python/numpy scalars so they are cheap inside the
-simulator's per-batch hot loop.
+:class:`FairShareAdmission` — a weighted deficit-round-robin admission
+layer for multi-tenant execution over ONE shared virtual warehouse.
+Tenants carry priority weights; the planner paces each tenant's entry
+into the shared interpreter pool (rows lane) and onto the shared NIC
+(bytes lane, cost-gated per the Row Size Model: only batches whose
+bytes-per-row clears ``heavy_row_bytes`` are charged network budget).
+It is consumed by the multi-tenant simulator (`repro.sim.engine`), the
+serving scheduler (`repro.serving.engine`) and the multi-tenant data
+pipeline (`repro.data.pipeline`).
+
+Invariants:
+
+  * One formula set.  Historically `sim/engine.py`, `serving/engine.py`
+    and `data/pipeline.py` each re-implemented the per-batch gating by
+    hand; they now all call :class:`BatchAdmission`.  The cost-gate
+    arithmetic (:func:`transfer_seconds`, :func:`straggler_savings`,
+    :func:`cost_gate_admits`) is written with plain operators only, so
+    it is polymorphic over Python floats, numpy arrays AND jax arrays —
+    `repro.core.cost_model` (the in-graph gate used by
+    ``AdaptiveLink.step``) delegates to these same functions rather
+    than re-stating them.
+  * Determinism.  Neither planner draws randomness; given the same call
+    sequence they return the same decisions, which is what lets the
+    simulator's equivalence pins and the replay harness's process-pool
+    fan-out stay reproducible.
+  * Starvation-freedom.  :class:`FairShareAdmission` guarantees every
+    backlogged tenant is eventually admitted: deficits are credited to
+    all live tenants on every completed service quantum, deficits are
+    capped, and a tenant at its cap is always admissible.  When nothing
+    is in service the planner admits unconditionally (work conservation
+    — the pool is never idled while work waits).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Union
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -40,22 +67,34 @@ class AdmissionDecision:
 
 
 def transfer_seconds(
-    bytes_moved: float,
-    rows_moved: int,
-    bandwidth: float,
-    per_row_overhead: float,
-) -> float:
+    bytes_moved,
+    rows_moved,
+    bandwidth,
+    per_row_overhead,
+):
     """Estimated seconds to move ``rows_moved`` rows of ``bytes_moved``
-    total bytes over a link (serialization priced per row)."""
+    total bytes over a link (serialization priced per row).
+
+    Polymorphic: operands may be Python floats, numpy or jax arrays."""
     return bytes_moved / bandwidth + rows_moved * per_row_overhead
 
 
-def straggler_savings(
-    est_row_cost: float, rows_moved: int, num_instances: int
-) -> float:
+def straggler_savings(est_row_cost, rows_moved, num_instances):
     """Estimated straggler seconds removed by spreading ``rows_moved``
-    rows (of opaque estimated cost) across ``num_instances`` workers."""
+    rows (of opaque estimated cost) across ``num_instances`` workers.
+
+    Polymorphic over floats / numpy / jax for the scalar operands."""
     return est_row_cost * rows_moved * (1.0 - 1.0 / max(num_instances, 1))
+
+
+def cost_gate_admits(est_saved, est_transfer, cost_gate):
+    """The cost-gate predicate: admit iff the estimated straggler time
+    saved strictly clears ``cost_gate`` times the estimated transfer
+    time.  Written with plain operators so the SAME implementation runs
+    on Python floats (simulator hot loop), numpy arrays, and jax traced
+    values (`repro.core.cost_model.admit` inside ``AdaptiveLink.step``).
+    """
+    return est_saved > cost_gate * est_transfer
 
 
 class BatchAdmission:
@@ -106,7 +145,7 @@ class BatchAdmission:
         """True → the move is refused: savings do not clear the gate."""
         if not self.enable_cost_gate:
             return False
-        return est_saved <= self.cfg.cost_gate * est_transfer
+        return not cost_gate_admits(est_saved, est_transfer, self.cfg.cost_gate)
 
     def admit_move(
         self,
@@ -152,3 +191,258 @@ class BatchAdmission:
                 if node_of(w) == own:
                     mask[w] = False
         return mask
+
+
+# --------------------------------------------------------------------- #
+# Fair-share multi-tenant admission (weighted deficit round robin)
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class FairShareConfig:
+    """Tuning for :class:`FairShareAdmission`.
+
+    ``quantum_rows`` / ``quantum_bytes`` set the DRR round size: every
+    time that many rows complete service, one round of credit is dealt to
+    the live tenants in proportion to their weights.  ``burst_quanta``
+    caps how many rounds of unspent credit a tenant may bank (its burst
+    allowance).  ``heavy_row_bytes`` is the Row Size Model threshold for
+    the NIC lane: only batches at or above it are charged byte budget —
+    light rows ride the interpreter-pool lane alone.  ``None`` charges
+    every batch's bytes.
+    """
+
+    quantum_rows: float = 64.0
+    quantum_bytes: float = 32e6
+    burst_quanta: float = 4.0
+    heavy_row_bytes: Optional[float] = None
+
+
+class FairShareAdmission:
+    """Weighted deficit-round-robin admission over a shared pool + NIC.
+
+    Each tenant ``q`` holds two deficit counters — rows (interpreter-pool
+    slots) and bytes (NIC budget).  Admitting a batch deducts its charge;
+    completed service credits every live tenant's deficits in proportion
+    to its weight (one round per completed quantum), so admission
+    throughput converges to weighted fair shares under contention while
+    idle capacity is never reserved:
+
+      * if nothing is in service, any request is admitted immediately
+        (work conservation);
+      * deficits are capped at ``burst_quanta`` rounds, and a tenant at
+        its cap is ALWAYS admissible — together with per-quantum credits
+        this makes starvation impossible for positive weights.
+
+    Callers integrate in one of two modes:
+
+      park/release — `try_admit` at each arrival; park rejected work and
+          retry (in `release_order`) after calling `on_complete` for
+          finished service.  Used by the simulator and serving engine.
+      DRR pick — `pick_next(costs)` selects which tenant's next work item
+          to serve, classic deficit-round-robin.  Used by the data
+          pipeline to interleave per-tenant document streams.
+    """
+
+    def __init__(
+        self,
+        weights: Sequence[float],
+        cfg: FairShareConfig = FairShareConfig(),
+    ):
+        if not len(weights):
+            raise ValueError("need at least one tenant weight")
+        if any(w <= 0 for w in weights):
+            raise ValueError(f"tenant weights must be positive: {weights}")
+        self.cfg = cfg
+        self.weights = [float(w) for w in weights]
+        self.nq = len(self.weights)
+        self.live = [True] * self.nq
+        # A tenant is 'backlogged' from its first refused admission until
+        # its next successful one; credit is dealt over the backlogged set
+        # (falling back to all live tenants when nobody is waiting), so no
+        # credit evaporates at an idle tenant's cap — the aggregate
+        # admission rate tracks the completion rate (work conservation).
+        self.backlogged = [False] * self.nq
+        # Start saturated: fair-share pacing only bites under contention.
+        self.deficit_rows = [self._cap_rows(q) for q in range(self.nq)]
+        self.deficit_bytes = [self._cap_bytes(q) for q in range(self.nq)]
+        self.outstanding_rows = [0.0] * self.nq
+        self._total_outstanding = 0.0
+        self._round_acc = 0.0
+        self._cursor = 0
+        # Telemetry.
+        self.admitted = [0] * self.nq
+        self.deferred = [0] * self.nq
+
+    # -- weighted shares ------------------------------------------------ #
+
+    def share_of(self, q: int) -> float:
+        """Tenant ``q``'s normalized weight among live tenants.  Used for
+        the deficit caps, so a tenant's burst allowance is stable whether
+        or not it is currently waiting."""
+        if not self.live[q]:
+            return 0.0
+        total = sum(w for w, a in zip(self.weights, self.live) if a)
+        return self.weights[q] / total if total > 0 else 0.0
+
+    def _credit_share(self, q: int) -> float:
+        """Tenant ``q``'s share of each dealt credit round: normalized
+        over the BACKLOGGED live tenants when anyone is waiting (so no
+        credit evaporates at an idle tenant's cap and aggregate admission
+        tracks the completion rate), else over all live tenants."""
+        if not self.live[q]:
+            return 0.0
+        any_backlogged = any(
+            b and a for b, a in zip(self.backlogged, self.live)
+        )
+        if any_backlogged and not self.backlogged[q]:
+            return 0.0
+        total = sum(
+            w for w, a, b in zip(self.weights, self.live, self.backlogged)
+            if a and (b or not any_backlogged)
+        )
+        return self.weights[q] / total if total > 0 else 0.0
+
+    def _cap_rows(self, q: int) -> float:
+        return self.cfg.burst_quanta * self.cfg.quantum_rows * max(
+            self.share_of(q), 1e-9
+        )
+
+    def _cap_bytes(self, q: int) -> float:
+        return self.cfg.burst_quanta * self.cfg.quantum_bytes * max(
+            self.share_of(q), 1e-9
+        )
+
+    def deactivate(self, q: int) -> None:
+        """Tenant ``q`` finished: stop dealing it credit; survivors'
+        shares grow accordingly."""
+        self.live[q] = False
+        self.backlogged[q] = False
+
+    # -- park/release mode --------------------------------------------- #
+
+    def _nic_charge(self, nbytes: float, bytes_per_row: float) -> float:
+        """Row Size Model cost-gating of the NIC lane: light rows are an
+        interpreter-pool concern only; heavy rows also consume network
+        budget (they are what saturates the uplink — §III.B).
+
+        This is an admission-time ESTIMATE: admission runs before routing
+        decides how many of the batch's bytes actually cross the NIC, so
+        a heavy batch that ends up staying local is still charged.  The
+        bias is conservative (network budget is reserved, never
+        exceeded) and symmetric across tenants with similar workloads."""
+        hv = self.cfg.heavy_row_bytes
+        if hv is not None and bytes_per_row < hv:
+            return 0.0
+        return nbytes
+
+    def try_admit(
+        self, q: int, rows: int, nbytes: float, bytes_per_row: float = 0.0
+    ) -> bool:
+        """Admit ``rows``/``nbytes`` of tenant ``q`` now, or refuse.
+
+        On True the charge is deducted and the work counts as in-service
+        until :meth:`on_complete`.  On False nothing is deducted — park
+        the work and retry after the next completion.
+        """
+        charge_b = self._nic_charge(nbytes, bytes_per_row)
+        if self._total_outstanding > 0.0:
+            ok_rows = (
+                self.deficit_rows[q] >= rows
+                or self.deficit_rows[q] >= self._cap_rows(q)
+            )
+            ok_bytes = (
+                charge_b == 0.0
+                or self.deficit_bytes[q] >= charge_b
+                or self.deficit_bytes[q] >= self._cap_bytes(q)
+            )
+            if not (ok_rows and ok_bytes):
+                self.deferred[q] += 1
+                self.backlogged[q] = True
+                return False
+        # Charge in full, carrying debt (negative deficit) when the batch
+        # exceeds the banked credit — standard DRR accounting.  Without
+        # the debt, a tenant submitting oversized batches via the
+        # saturation rule would be systematically undercharged and exceed
+        # its weighted share.
+        self.deficit_rows[q] -= rows
+        self.deficit_bytes[q] -= charge_b
+        self.outstanding_rows[q] += rows
+        self._total_outstanding += rows
+        self.admitted[q] += 1
+        self.backlogged[q] = False
+        return True
+
+    def on_complete(self, q: int, rows: int) -> None:
+        """Report ``rows`` of tenant ``q`` finishing service.  Credits one
+        DRR round to every live tenant per completed ``quantum_rows``."""
+        take = min(float(rows), self.outstanding_rows[q])
+        self.outstanding_rows[q] -= take
+        self._total_outstanding = max(self._total_outstanding - take, 0.0)
+        self._round_acc += rows
+        qr, qb = self.cfg.quantum_rows, self.cfg.quantum_bytes
+        while self._round_acc >= qr:
+            self._round_acc -= qr
+            for a in range(self.nq):
+                if not self.live[a]:
+                    continue
+                s = self._credit_share(a)
+                if s <= 0.0:
+                    continue
+                self.deficit_rows[a] = min(
+                    self.deficit_rows[a] + qr * s, self._cap_rows(a)
+                )
+                self.deficit_bytes[a] = min(
+                    self.deficit_bytes[a] + qb * s, self._cap_bytes(a)
+                )
+
+    def release_order(self) -> List[int]:
+        """Round-robin order in which parked tenants should retry
+        :meth:`try_admit` after a completion; the cursor advances one
+        position per call so ties rotate fairly."""
+        order = [(self._cursor + i) % self.nq for i in range(self.nq)]
+        self._cursor = (self._cursor + 1) % self.nq
+        return order
+
+    # -- DRR pick mode -------------------------------------------------- #
+
+    def pick_next(self, costs: Sequence[Optional[float]]) -> int:
+        """Classic deficit round robin: pick the tenant whose head-of-line
+        item (``costs[q]``; None = no item) should be served next.
+
+        Each visit deals the visited tenant one weighted quantum; the
+        first tenant whose deficit covers its item cost wins and pays.
+        Terminates because every full rotation strictly grows every
+        candidate's deficit.
+        """
+        cand = [
+            q for q in range(self.nq)
+            if costs[q] is not None and self.live[q]
+        ]
+        if not cand:
+            raise ValueError("pick_next: no live tenant has a pending item")
+        total_w = sum(self.weights[q] for q in cand)
+        # Hard bound on rotations: enough for the costliest item even at
+        # the smallest weighted quantum (plus slack); beyond it, serve the
+        # largest-deficit candidate rather than loop.
+        min_gain = self.cfg.quantum_rows * min(
+            self.weights[q] / total_w for q in cand
+        )
+        max_cost = max(float(costs[q]) for q in cand)
+        max_visits = (int(max_cost / max(min_gain, 1e-12)) + 2) * self.nq
+        for _ in range(max_visits):
+            q = self._cursor
+            self._cursor = (self._cursor + 1) % self.nq
+            if q not in cand:
+                continue
+            self.deficit_rows[q] += (
+                self.cfg.quantum_rows * self.weights[q] / total_w
+            )
+            if self.deficit_rows[q] >= float(costs[q]):
+                self.deficit_rows[q] -= float(costs[q])
+                self.admitted[q] += 1
+                return q
+        q = max(cand, key=lambda a: self.deficit_rows[a])
+        self.deficit_rows[q] = 0.0
+        self.admitted[q] += 1
+        return q

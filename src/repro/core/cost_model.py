@@ -10,6 +10,14 @@ The model prices a candidate redistribution in seconds on both sides:
 
 and admits the move iff  time_saved > cost_gate * transfer_time.
 
+This module is the jax-traced entry point used inside ``AdaptiveLink.step``;
+the arithmetic itself lives in `repro.core.admission`
+(:func:`~repro.core.admission.transfer_seconds`,
+:func:`~repro.core.admission.cost_gate_admits`), whose plain-operator
+implementations are polymorphic over Python floats, numpy and jax arrays —
+one formula set shared with the simulator / serving / data-pipeline hot
+paths, so the in-graph gate can never drift from the host-side one.
+
 On TPU the 'network' is ICI (~50 GB/s/link); in the simulator it is the
 configured NIC bandwidth.  The same formula prices the three row-size
 regimes called out in the paper: ordinary rows (cheap), 100 GB+ blobs
@@ -25,6 +33,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import admission
+
 
 @dataclasses.dataclass(frozen=True)
 class CostModelConfig:
@@ -38,9 +48,11 @@ def transfer_time(
     items_moved: jax.Array,
     cfg: CostModelConfig,
 ) -> jax.Array:
-    return (
-        bytes_moved.astype(jnp.float32) / cfg.link_bandwidth
-        + items_moved.astype(jnp.float32) * cfg.per_item_overhead
+    return admission.transfer_seconds(
+        bytes_moved.astype(jnp.float32),
+        items_moved.astype(jnp.float32),
+        cfg.link_bandwidth,
+        cfg.per_item_overhead,
     )
 
 
@@ -62,4 +74,4 @@ def admit(
     """Returns (admit?, est_time_saved, est_transfer_time)."""
     saved = balance_benefit(loads_before, loads_after)
     t_move = transfer_time(bytes_moved, items_moved, cfg)
-    return saved > cfg.cost_gate * t_move, saved, t_move
+    return admission.cost_gate_admits(saved, t_move, cfg.cost_gate), saved, t_move

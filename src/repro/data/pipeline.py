@@ -6,6 +6,13 @@ packed-sequence attention length²); the pipeline routes packed sequences
 to DP shards through the generic ``AdaptiveLink`` — the batch-level
 instantiation of the paper's technique (DESIGN.md §3.5).  A background
 prefetch thread overlaps host batch assembly with device compute.
+
+Multi-tenant mixing: with ``DataConfig.tenant_weights`` set, each tenant
+gets its own deterministic document stream and the pipeline interleaves
+them by classic deficit round robin (`FairShareAdmission.pick_next` from
+`repro.core.admission`, the same planner the simulator and serving engine
+use), with document token counts as the DRR cost — so over time each
+tenant's share of emitted tokens converges to its weight.
 """
 
 from __future__ import annotations
@@ -13,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -24,6 +31,7 @@ from repro.core import (
     DySkewConfig,
     Policy,
 )
+from repro.core.admission import FairShareAdmission, FairShareConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,14 +47,18 @@ class DataConfig:
     dyskew_balance: bool = True
     num_shards: int = 1
     prefetch: int = 2
+    # Weighted fair-share mixing across tenant document streams (None =
+    # single-tenant).  Tenant i's share of emitted tokens converges to
+    # tenant_weights[i] / sum(tenant_weights).
+    tenant_weights: Optional[Tuple[float, ...]] = None
 
 
 class SyntheticDocs:
     """Deterministic document stream (id, tokens)."""
 
-    def __init__(self, cfg: DataConfig):
+    def __init__(self, cfg: DataConfig, seed_offset: int = 0):
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed + seed_offset)
 
     def __iter__(self) -> Iterator[np.ndarray]:
         import math
@@ -97,7 +109,12 @@ class DataPipeline:
 
     def __init__(self, cfg: DataConfig):
         self.cfg = cfg
-        self.docs = iter(SyntheticDocs(cfg))
+        if cfg.tenant_weights:
+            # Per-tenant token accounting for observability/tests.
+            self.tenant_tokens = np.zeros(len(cfg.tenant_weights), np.int64)
+            self.docs = iter(self._mixed_docs())
+        else:
+            self.docs = iter(SyntheticDocs(cfg))
         self.link = AdaptiveLink(AdaptiveLinkConfig(
             dyskew=DySkewConfig(policy=Policy.EAGER_SNOWPARK),
             num_instances=max(cfg.num_shards, 1),
@@ -112,6 +129,28 @@ class DataPipeline:
         self._thread: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------- #
+
+    def _mixed_docs(self) -> Iterator[np.ndarray]:
+        """Interleave per-tenant document streams by deficit round robin:
+        each pick is charged the document's token count, so token share
+        (not just document count) follows the weights."""
+        cfg = self.cfg
+        weights = list(cfg.tenant_weights)
+        planner = FairShareAdmission(
+            weights,
+            FairShareConfig(quantum_rows=float(cfg.seq_len)),
+        )
+        streams = [
+            iter(SyntheticDocs(cfg, seed_offset=1 + 7919 * i))
+            for i in range(len(weights))
+        ]
+        pending = [next(s) for s in streams]
+        while True:
+            q = planner.pick_next([float(len(d)) for d in pending])
+            doc = pending[q]
+            pending[q] = next(streams[q])
+            self.tenant_tokens[q] += len(doc)
+            yield doc
 
     def _assemble(self) -> Dict[str, np.ndarray]:
         cfg = self.cfg

@@ -11,6 +11,13 @@ requests (no KV yet) are always cheap to (re)place — the eager path.
 The engine here runs the scheduler against simulated replica clocks (the
 same discrete-time style as repro.sim) and, when given a real Model, can
 drive actual prefill/decode steps on one replica (see examples/serve_dyskew.py).
+
+Multi-tenant serving: requests carry a ``tenant`` class index and
+``ServeConfig.tenant_weights`` turns on the shared weighted fair-share
+admission layer (`repro.core.admission.FairShareAdmission`) — the same
+deficit-round-robin planner the multi-tenant simulator uses — pacing each
+class's entry into the decode batches, with KV bytes charged on the
+Row-Size-Model NIC lane.
 """
 
 from __future__ import annotations
@@ -22,6 +29,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import AdaptiveLink, AdaptiveLinkConfig, BatchAdmission, CostModelConfig
+from repro.core.admission import FairShareAdmission, FairShareConfig
 from repro.core.types import DySkewConfig, Policy
 
 
@@ -31,6 +39,7 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     arrival: float
+    tenant: int = 0          # fair-share tenant class (see ServeConfig)
     # runtime fields
     replica: int = -1
     generated: int = 0       # whole tokens emitted (integral by invariant)
@@ -55,6 +64,13 @@ class ServeConfig:
     interconnect_bw: float = 50e9       # ICI
     migration_latency: float = 2e-3
     scheduler: str = "dyskew"           # dyskew | round_robin | least_loaded
+    # Weighted fair-share admission across tenant classes (None = off):
+    # requests carry a `tenant` index into these weights, and entry into
+    # a replica's decode batch is paced by the shared
+    # `repro.core.admission.FairShareAdmission` planner (the same layer
+    # the multi-tenant simulator uses), with KV bytes as the Row Size
+    # Model NIC-lane charge.
+    tenant_weights: Optional[Tuple[float, ...]] = None
 
 
 class ServingScheduler:
@@ -150,6 +166,22 @@ class ServingEngine:
         self.sched = ServingScheduler(cfg)
         self.rng = np.random.default_rng(seed)
 
+    def _make_planner(self) -> Optional[FairShareAdmission]:
+        """Fair-share admission over tenant classes: requests = rows, a
+        decode slot = the pool resource, KV bytes = the NIC-lane charge.
+        Built fresh per run — the planner is stateful (deficits,
+        in-service counts) like the queues it paces."""
+        if not self.cfg.tenant_weights:
+            return None
+        return FairShareAdmission(
+            list(self.cfg.tenant_weights),
+            FairShareConfig(
+                quantum_rows=float(self.cfg.max_batch),
+                quantum_bytes=64e6,
+                heavy_row_bytes=64e6,
+            ),
+        )
+
     def run(self, requests: List[Request]) -> Dict:
         cfg = self.cfg
         n = cfg.num_replicas
@@ -162,6 +194,7 @@ class ServingEngine:
         migrations = 0
         migrated_bytes = 0.0
         dt = 10e-3
+        planner = self._make_planner()
 
         def load_tokens() -> np.ndarray:
             out = np.zeros(n)
@@ -205,8 +238,19 @@ class ServingEngine:
                     queues[r.replica].append(r)
             # run each replica for dt
             for rep in range(n):
-                while len(running[rep]) < cfg.max_batch and queues[rep]:
-                    running[rep].append(queues[rep].pop(0))
+                # Fill decode slots; with fair share on, each queued
+                # request must clear its tenant's deficit first.  Blocked
+                # requests are skipped (not head-of-line blocking) and
+                # retried next step once completions earn credit.
+                qi = 0
+                while len(running[rep]) < cfg.max_batch and qi < len(queues[rep]):
+                    r = queues[rep][qi]
+                    if planner is not None:
+                        kv = r.kv_bytes(cfg.kv_bytes_per_token)
+                        if not planner.try_admit(r.tenant, 1, kv, kv):
+                            qi += 1
+                            continue
+                    running[rep].append(queues[rep].pop(qi))
                 if not running[rep]:
                     continue
                 # decode_rate shared across active slots
@@ -221,6 +265,8 @@ class ServingEngine:
                     if r.generated >= r.max_new_tokens:
                         r.done_at = t + dt
                         done.append(r)
+                        if planner is not None:
+                            planner.on_complete(r.tenant, 1)
                     else:
                         still.append(r)
                 running[rep] = still
@@ -229,7 +275,7 @@ class ServingEngine:
                 break
 
         lat = np.array([r.done_at - r.arrival for r in done])
-        return {
+        out = {
             "completed": len(done),
             "mean_latency": float(lat.mean()) if len(lat) else 0.0,
             "p99_latency": float(np.percentile(lat, 99)) if len(lat) else 0.0,
@@ -237,3 +283,18 @@ class ServingEngine:
             "migrated_gb": migrated_bytes / 1e9,
             "makespan": t,
         }
+        if planner is not None:
+            per_tenant: Dict[int, Dict[str, float]] = {}
+            for tid in range(len(cfg.tenant_weights)):
+                tl = np.array(
+                    [r.done_at - r.arrival for r in done if r.tenant == tid]
+                )
+                per_tenant[tid] = {
+                    "completed": int(len(tl)),
+                    "mean_latency": float(tl.mean()) if len(tl) else 0.0,
+                    "p99_latency": (
+                        float(np.percentile(tl, 99)) if len(tl) else 0.0
+                    ),
+                }
+            out["per_tenant"] = per_tenant
+        return out

@@ -1,12 +1,15 @@
 """Discrete-event simulator: the paper-faithful reproduction layer.
 
-engine   — array-backed workers / adaptive links / network event loop,
-           plus the multi-tenant concurrent-query engine
+engine   — ONE array-backed event loop (workers / adaptive links /
+           network) serving both the single-query API and N concurrent
+           tenants, with optional weighted fair-share admission
 legacy   — the seed list-of-tuples engine, kept as the equivalence
-           reference for the array-backed core
-workload — synthetic suites matching the paper's evaluation scenarios
-replay   — strategy comparison + aggregate statistics (single- and
-           multi-tenant), with optional process-pool fan-out
+           reference for the unified loop
+workload — synthetic suites matching the paper's evaluation scenarios,
+           plus open-loop arrival processes and interference traffic
+replay   — strategy comparison + aggregate statistics (single-tenant,
+           closed- and open-loop multi-tenant: per-class tails, Jain's
+           fairness), with optional process-pool fan-out
 """
 
 from repro.sim.engine import (

@@ -18,42 +18,72 @@ distribute mask plus the shared per-batch admission planner
 self-skip eligibility — the same planner the serving engine and the data
 pipeline call).
 
-The engine core is array-backed: queued rows live in contiguous per-worker
-ring buffers (`_RowRing`), batch routing groups rows per destination with
-one stable sort instead of per-destination masking, and event payloads are
-numpy segments rather than per-row Python tuples.  The original
-list-of-tuples implementation is preserved in `repro.sim.legacy` and the
-two are pinned against each other by `tests/test_sim_equivalence.py`.
-
 Strategies:
   none       — default 1:1 link (no redistribution)
   static_rr  — the legacy Snowpark solution: per-row round-robin across all
                interpreters from the start (paper §II.B, Fig. 1)
   dyskew     — the paper's adaptive link (configurable policy/models)
 
-Multi-tenant execution: `MultiQuerySimulator` interleaves N concurrent
+ONE event loop.  ``MultiQuerySimulator.run`` is the only event loop in
+this module; ``Simulator.run_query`` is its N=1 specialization (one
+tenant, arrival at t=0).  `MultiQuerySimulator` interleaves N concurrent
 queries (tenants) over ONE shared cluster — shared interpreter pools and
 shared per-node NIC occupancy — while each tenant keeps its own
 `AdaptiveLinkSim`, cost estimator, flow-control window and strategy, as in
 the paper's production setting where many Snowpark queries contend for the
-same virtual warehouse.  Tenants arrive staggered in virtual time; the
-result is one `QueryResult` per tenant (latency measured from the tenant's
-arrival), which `benchmarks/bench_multi_tenant.py` aggregates into
-per-query p50/p99 under legacy vs DySkew scheduling.
+same virtual warehouse.  Tenants carry priority weights; passing a
+`FairShareConfig` turns on the weighted deficit-round-robin admission
+layer (`repro.core.admission.FairShareAdmission`), which paces each
+tenant's batches into the shared pool/NIC and parks over-share arrivals
+until completed service earns them credit.  The result is one
+`QueryResult` per tenant (latency measured from the tenant's arrival),
+which `sim/replay.py` and `benchmarks/bench_multi_tenant.py` aggregate
+into per-tenant percentiles and Jain's fairness index.
+
+Engine invariants (the bars `tests/test_sim_equivalence.py` enforces):
+
+  * Array-backed core.  Queued rows live in contiguous per-worker ring
+    buffers (`_RowRing`): ``buf[head:tail]`` is the FIFO of pending row
+    costs, pushes are single vectorized segment copies (a push may
+    compact/grow, so popped views must be consumed before the next
+    push), and a parallel int32 ``qbuf`` lane records each row's owning
+    tenant whenever more than one tenant shares the cluster.  Batch
+    routing groups rows per destination with ONE stable sort
+    (`_group_by_dest`), and event payloads are numpy segments, never
+    per-row Python tuples.
+  * Bit-exactness bar.  The seed list-of-tuples engine is preserved in
+    `repro.sim.legacy`, and the unified loop must reproduce its
+    `QueryResult` to rtol=1e-9 for single-tenant runs (and for
+    multi-tenant runs that are provably non-interacting).  The
+    trajectories are chaotic — one ulp of rounding difference amplifies
+    through routing decisions — so the loop keeps the legacy engine's
+    float operations in the legacy order: service-burst totals are
+    sequential sums (``np.bincount`` weight accumulation, which adds in
+    index order), per-destination byte totals use numpy's pairwise
+    ``.sum()`` on the same element order the legacy masks produced, and
+    the EMA update is ``(1-a)*est + a*(total/rows)``.  Do not "simplify"
+    these expressions.
+  * Determinism.  Given the same tenants the engine is bit-reproducible:
+    no RNG is consulted inside the loop, heap ties break on a
+    monotonically increasing sequence number, and the fair-share planner
+    is deterministic.  This is what lets `sim/replay.py` fan suites out
+    across a process pool (``REPRO_BENCH_WORKERS`` pins the worker
+    count; 0/1 = serial) with results identical to the serial run.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+from collections import deque
 from functools import partial
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import state_machine
-from repro.core.admission import BatchAdmission
+from repro.core.admission import BatchAdmission, FairShareAdmission, FairShareConfig
 from repro.core.types import DySkewConfig, Policy
 
 
@@ -264,7 +294,8 @@ class _RowRing:
     pop a contiguous view.  Popped views must be consumed before the next
     push (a push may compact the buffer).  When ``track_qids`` is set a
     parallel int32 lane records the owning tenant of each row (used by
-    `MultiQuerySimulator` for per-query accounting in shared pools).
+    the multi-tenant event loop for per-query accounting in shared
+    pools; the N=1 loop skips the lane entirely).
     """
 
     __slots__ = ("buf", "qbuf", "head", "tail")
@@ -322,8 +353,7 @@ class _RowRing:
 def _transfer_delay(c: ClusterConfig, src_worker: int, dst_worker: int,
                     nbytes: float, nrows: int) -> float:
     """Contention-free transfer latency (NIC occupancy handled by the
-    caller when model_contention is on).  Shared by the single-query and
-    multi-tenant engines so the network model cannot diverge."""
+    caller when model_contention is on)."""
     ser = nrows * c.per_row_serialize
     if c.node_of(src_worker) == c.node_of(dst_worker):
         if src_worker == dst_worker:
@@ -355,7 +385,7 @@ def _group_by_dest(
 # The simulator
 # --------------------------------------------------------------------- #
 
-_TICK, _ARRIVAL, _ENQUEUE, _DONE = 0, 1, 2, 3
+_TICK, _ARRIVAL, _ENQUEUE, _DONE, _ADMITTED = 0, 1, 2, 3, 4
 
 #: Rows per service burst (completion-ack granularity).
 _SERVICE_CHUNK = 16
@@ -389,343 +419,47 @@ class StrategyConfig:
         )
 
 
-class Simulator:
-    def __init__(
-        self,
-        cluster: ClusterConfig,
-        strategy: StrategyConfig,
-        seed: int = 0,
-    ):
-        self.cluster = cluster
-        self.strategy = strategy
-        self.rng = np.random.default_rng(seed)
-
-    # -- helpers -------------------------------------------------------- #
-
-    def _transfer_delay(self, src_worker: int, dst_worker: int, nbytes: float,
-                        nrows: int) -> float:
-        return _transfer_delay(self.cluster, src_worker, dst_worker,
-                               nbytes, nrows)
-
-    # -- main entry ------------------------------------------------------ #
-
-    def run_query(
-        self,
-        batches_per_producer: List[List[Batch]],
-        arrival_gap: float = 1e-4,
-    ) -> QueryResult:
-        """Execute one query.
-
-        ``batches_per_producer[i]`` is the (possibly skewed) input stream of
-        producer link instance i; batches arrive back-to-back separated by
-        ``arrival_gap`` (the scan feeding the UDF operator).
-        """
-        c = self.cluster
-        st = self.strategy
-        cfg = st.dyskew
-        admission = st.admission()
-        n = c.num_workers
-        # Hot-loop locals: node lookup table, flat network constants, and
-        # plain-Python scalar accumulators (single-element numpy indexing
-        # is ~10x a list index at this event grain).  Vector math converts
-        # the lists once per tick / per routed batch instead.
-        node = [w // c.interpreters_per_node for w in range(n)]
-        net_bw, net_lat = c.network_bandwidth, c.network_latency
-        ipc_bw, ipc_lat = c.ipc_bandwidth, c.ipc_latency
-        ser = c.per_row_serialize
-        contention = c.model_contention
-        flow_window = c.flow_window_rows
-        static_rr = st.kind == "static_rr"
-        cost_ema = st.cost_ema
-        heappush, heappop = heapq.heappush, heapq.heappop
-
-        # Worker state: queued row costs in contiguous per-worker rings.
-        rings = [_RowRing() for _ in range(n)]
-        busy_time = [0.0] * n
-        rows_done = [0] * n
-        worker_running = [False] * n
-
-        # Metric accumulators between state-machine ticks.
-        recv_in_tick = [0.0] * n          # rows received by each consumer
-        sync_in_tick = [0.0] * n          # sync time per consumer
-        rows_arr_in_tick = [0.0] * n      # rows arrived at each producer
-        batches_arr_in_tick = [0.0] * n
-        bytes_arr_in_tick = [0.0] * n
-
-        # Opaque-cost estimator (global EMA of observed per-row time).
-        est_row_cost = 1e-3
-        # Observable backlog: rows sent to each consumer minus rows acked
-        # complete (the producer sees its own sends and completion acks; it
-        # never sees the hidden per-row costs).
-        outstanding_rows = [0.0] * n
-
-        link: Optional[AdaptiveLinkSim] = None
-        distribute_mask = [False] * n
-        if st.kind == "dyskew":
-            link = AdaptiveLinkSim(cfg, n)
-
-        bytes_moved = 0.0
-        rows_redist = 0
-        decision_overhead_total = 0.0
-        rr_counter = 0
-        num_ticks = 0
-        # Per-node egress NIC occupancy (heavy-row saturation, §III.B).
-        nic_free_at = [0.0] * c.num_nodes
-
-        remaining_arrivals = sum(len(s) for s in batches_per_producer)
-        in_flight = 0
-        queued_rows_total = 0
-
-        events: List[Tuple[float, int, int, int, object]] = []
-        seq = 0
-
-        # Seed the first tick BEFORE any arrival (same timestamp, lower
-        # seq): eager links redistribute from the operator's first row.
-        if link is not None:
-            heappush(events, (0.0, seq, _TICK, 0, None))
-            seq += 1
-        # Arrivals are chained per producer: batch k+1 is scheduled only
-        # after batch k is routed, delayed by scan production time plus
-        # credit-based backpressure against the destination backlog.
-        streams = batches_per_producer
-        for p, stream in enumerate(streams):
-            if stream:
-                heappush(events, (0.0, seq, _ARRIVAL, p, 0))
-                seq += 1
-
-        def start_worker(w: int, now: float):
-            nonlocal queued_rows_total, seq
-            if worker_running[w]:
-                return
-            ring = rings[w]
-            if ring.tail == ring.head:
-                return
-            chunk, _ = ring.pop(_SERVICE_CHUNK)
-            queued_rows_total -= len(chunk)
-            # Sequential Python-float sum: bit-identical to the legacy
-            # engine's per-tuple accumulation, so the two engines stay on
-            # the same event trajectory (tiny rounding differences amplify
-            # chaotically through routing decisions).
-            total = sum(chunk.tolist())
-            worker_running[w] = True
-            heappush(events, (now + total, seq, _DONE, w, (total, len(chunk))))
-            seq += 1
-
-        def siblings_idle_frac(p: int) -> float:
-            idle = 0
-            for w in range(n):
-                if w != p and not worker_running[w] and rings[w].tail == rings[w].head:
-                    idle += 1
-            return idle / max(n - 1, 1)
-
-        def route_batch(p: int, b: Batch, now: float) -> None:
-            nonlocal rr_counter, bytes_moved, rows_redist, in_flight, seq
-            dests: Optional[np.ndarray] = None
-            if static_rr:
-                dests = (rr_counter + np.arange(b.num_rows)) % n
-                rr_counter += b.num_rows
-            elif distribute_mask[p]:
-                # Row Size Model admission guard (§III.B): low batch density
-                # + no skew benefit visible → keep the heavy rows local.
-                bpr = b.total_bytes / max(b.num_rows, 1)
-                if not admission.density_guard_blocks(
-                    b.num_rows, bpr, lambda: siblings_idle_frac(p)
-                ):
-                    bl = np.asarray(outstanding_rows) * est_row_cost
-                    if cfg.self_skip:
-                        # Forced-remote ablation (§III.B): the producer must
-                        # bypass its own node's interpreters entirely
-                        # (Fig. 1 — redistribution targets interpreters on
-                        # *other* VW nodes), leaving local CPU idle.
-                        bl = np.where(
-                            admission.eligible_destinations(n, p, c.node_of),
-                            bl, np.inf,
-                        )
-                    counts = waterfill_counts(
-                        bl, b.num_rows, max(est_row_cost, 1e-9)
-                    )
-                    dests = np.repeat(np.arange(n), counts)
-                    if st.enable_cost_gate:
-                        # Cost gate (§I goal 3): refuse when estimated
-                        # movement time exceeds estimated straggler savings.
-                        moving = dests != p
-                        dec = admission.admit_move(
-                            float(b.sizes[moving].sum()), int(moving.sum()),
-                            est_row_cost, n,
-                            net_bw, ser,
-                        )
-                        if not dec.admit:
-                            dests = None
-
-            if dests is None:
-                # All-local fast path (no redistribution this batch):
-                # in-process pipeline, serialization delay only.
-                nrows = b.num_rows
-                in_flight += 1
-                heappush(events, (now + nrows * ser, seq, _ENQUEUE, p, b.costs))
-                seq += 1
-                outstanding_rows[p] += nrows
-                return
-            sd, starts, ends, costs_s, sizes_s = _group_by_dest(
-                dests, b.costs, b.sizes
-            )
-            # Per-group pairwise .sum() matches the legacy masked sums
-            # bit-for-bit (same elements, same order, same algorithm).
-            src_node = node[p]
-            for j in range(len(starts)):
-                lo, hi = starts[j], ends[j]
-                d = int(sd[lo])
-                nrows = hi - lo
-                nbytes = float(sizes_s[lo:hi].sum())
-                if node[d] != src_node:
-                    rows_redist += nrows
-                    bytes_moved += nbytes
-                    if contention:
-                        # Serialize on the source node's uplink.
-                        nf = nic_free_at[src_node]
-                        start = now if now > nf else nf
-                        occupy = nbytes / net_bw
-                        nic_free_at[src_node] = start + occupy
-                        arrive = start + occupy + net_lat + nrows * ser
-                    else:
-                        arrive = now + net_lat + nbytes / net_bw + nrows * ser
-                elif d == p:
-                    arrive = now + nrows * ser
-                else:
-                    rows_redist += nrows
-                    arrive = now + ipc_lat + nbytes / ipc_bw + nrows * ser
-                in_flight += 1
-                heappush(events, (arrive, seq, _ENQUEUE, d, costs_s[lo:hi]))
-                seq += 1
-                outstanding_rows[d] += nrows
-
-        now = 0.0
-        last_work_done = 0.0
-        while events:
-            now, _, kind, who, payload = heappop(events)
-            if kind == _ENQUEUE:
-                w = who
-                in_flight -= 1
-                k = len(payload)
-                rings[w].push(payload)
-                queued_rows_total += k
-                recv_in_tick[w] += k
-                if not worker_running[w]:
-                    start_worker(w, now)
-            elif kind == _DONE:
-                w = who
-                total, nrows = payload
-                busy_time[w] += total
-                rows_done[w] += nrows
-                sync_in_tick[w] += total
-                avg = total / nrows if nrows else 0.0
-                est_row_cost = (1 - cost_ema) * est_row_cost + cost_ema * avg
-                left = outstanding_rows[w] - nrows
-                outstanding_rows[w] = left if left > 0.0 else 0.0
-                worker_running[w] = False
-                last_work_done = now
-                start_worker(w, now)
-            elif kind == _ARRIVAL:
-                p, k = who, payload
-                b = streams[p][k]
-                remaining_arrivals -= 1
-                rows_arr_in_tick[p] += b.num_rows
-                batches_arr_in_tick[p] += 1
-                bytes_arr_in_tick[p] += b.total_bytes
-                if link is not None:
-                    decision_overhead_total += st.decision_overhead
-                    now += st.decision_overhead
-                route_batch(p, b, now)
-                if k + 1 < len(streams[p]):
-                    # Flow control: pace against the least-backlogged valid
-                    # destination (own consumer when routing locally).
-                    if static_rr or distribute_mask[p]:
-                        bl = min(outstanding_rows)
-                    else:
-                        bl = outstanding_rows[p]
-                    backpressure = max(0.0, bl - flow_window) * est_row_cost
-                    heappush(events, (now + arrival_gap + backpressure,
-                                      seq, _ARRIVAL, p, k + 1))
-                    seq += 1
-            else:  # _TICK
-                num_ticks += 1
-                rows_arr = np.asarray(rows_arr_in_tick)
-                batches_arr = np.asarray(batches_arr_in_tick)
-                density = np.where(
-                    batches_arr > 0,
-                    rows_arr / np.maximum(batches_arr, 1),
-                    0.0,
-                )
-                bpr = np.where(
-                    rows_arr > 0,
-                    np.asarray(bytes_arr_in_tick) / np.maximum(rows_arr, 1),
-                    0.0,
-                )
-                distribute_mask = link.tick(
-                    np.asarray(recv_in_tick), np.asarray(sync_in_tick),
-                    density, bpr, np.asarray(worker_running, bool),
-                ).tolist()
-                recv_in_tick[:] = [0.0] * n
-                sync_in_tick[:] = [0.0] * n
-                rows_arr_in_tick[:] = [0.0] * n
-                batches_arr_in_tick[:] = [0.0] * n
-                bytes_arr_in_tick[:] = [0.0] * n
-                if (
-                    remaining_arrivals > 0 or in_flight > 0
-                    or queued_rows_total > 0 or any(worker_running)
-                ):
-                    heappush(events, (now + st.tick_interval, seq, _TICK, 0, None))
-                    seq += 1
-
-        makespan = max(last_work_done, 1e-12)
-        busy_time = np.asarray(busy_time)
-        util = float(busy_time.sum() / (makespan * n))
-        total_rows = int(sum(rows_done))
-        applied = rows_redist > 0.01 * max(total_rows, 1)
-        return QueryResult(
-            latency=makespan,
-            utilization=util,
-            bytes_moved_remote=bytes_moved,
-            rows_redistributed=rows_redist,
-            redistribution_applied=applied,
-            per_worker_busy=busy_time,
-            decision_overhead=decision_overhead_total,
-            num_ticks=num_ticks,
-        )
-
-
-# --------------------------------------------------------------------- #
-# Multi-tenant simulation (concurrent query streams, shared cluster)
-# --------------------------------------------------------------------- #
-
-
 @dataclasses.dataclass
 class TenantQuery:
     """One tenant of a multi-query run: its input streams, its strategy,
-    and when it arrives on the shared cluster (virtual seconds)."""
+    when it arrives on the shared cluster (virtual seconds), and its
+    fair-share priority weight (only consulted when the engine runs with
+    a `FairShareConfig`; higher weight = larger share)."""
 
     name: str
     streams: List[List[Batch]]
     strategy: StrategyConfig
     arrival: float = 0.0
     arrival_gap: float = 1e-4
+    weight: float = 1.0
 
 
 class MultiQuerySimulator:
-    """Interleaves N concurrent queries over ONE shared cluster.
+    """THE event loop: N concurrent queries over ONE shared cluster.
 
     Workers (interpreter pools) and per-node NIC uplinks are shared across
     tenants — a straggler pipeline of one query delays everyone behind it
     in the same ring, which is exactly the contention the paper's
     production setting implies.  Each tenant keeps private link state
     machines, cost estimator, backlog counters and tick cadence, so
-    redistribution decisions stay per-query.
+    redistribution decisions stay per-query.  ``Simulator`` (the
+    single-query API) is the N=1 case of this loop.
+
+    ``fair_share`` enables the weighted deficit-round-robin admission
+    layer: each batch arrival must clear the tenant's pool/NIC deficit
+    before it is routed; over-share arrivals are parked and re-offered in
+    round-robin order as completed service earns the tenant credit.
     """
 
-    def __init__(self, cluster: ClusterConfig):
+    def __init__(
+        self,
+        cluster: ClusterConfig,
+        fair_share: Optional[FairShareConfig] = None,
+    ):
         # Fully deterministic given the tenants (streams/arrivals carry
         # their own seeds), so no RNG state is held here.
         self.cluster = cluster
+        self.fair_share = fair_share
 
     def _transfer_delay(self, src: int, dst: int, nbytes: float,
                         nrows: int) -> float:
@@ -736,48 +470,69 @@ class MultiQuerySimulator:
         n = c.num_workers
         nq = len(tenants)
 
-        rings = [_RowRing(track_qids=True) for _ in range(n)]
-        worker_running = np.zeros(n, bool)
-        nic_free_at = np.zeros(c.num_nodes)
+        # Hot-loop locals: node lookup table, flat network constants, and
+        # plain-Python scalar state (single-element numpy indexing is ~10x
+        # a list index at this event grain).  Vector math converts the
+        # lists once per tick / per routed batch instead.
+        node = [w // c.interpreters_per_node for w in range(n)]
+        net_bw, net_lat = c.network_bandwidth, c.network_latency
+        ipc_bw, ipc_lat = c.ipc_bandwidth, c.ipc_latency
+        ser = c.per_row_serialize
+        contention = c.model_contention
+        flow_window = c.flow_window_rows
+        heappush, heappop = heapq.heappush, heapq.heappop
 
-        # Per-tenant state (axis 0 = tenant).
+        rings = [_RowRing(track_qids=nq > 1) for _ in range(n)]
+        worker_running = [False] * n
+        nic_free_at = [0.0] * c.num_nodes
+
+        # Per-tenant state (outer index = tenant).
+        strategies = [t.strategy for t in tenants]
         admissions = [t.strategy.admission() for t in tenants]
+        streams = [t.streams for t in tenants]
         links: List[Optional[AdaptiveLinkSim]] = [
             AdaptiveLinkSim(t.strategy.dyskew, n)
             if t.strategy.kind == "dyskew" else None
             for t in tenants
         ]
-        distribute_mask = np.zeros((nq, n), bool)
-        est_row_cost = np.full(nq, 1e-3)
-        outstanding = np.zeros((nq, n))
-        recv_in_tick = np.zeros((nq, n))
-        sync_in_tick = np.zeros((nq, n))
-        rows_arr_in_tick = np.zeros((nq, n))
-        batches_arr_in_tick = np.zeros((nq, n))
-        bytes_arr_in_tick = np.zeros((nq, n))
-        busy = np.zeros((nq, n))
-        rows_done = np.zeros((nq, n))
-        rr_counter = np.zeros(nq, np.int64)
-        bytes_moved = np.zeros(nq)
-        rows_redist = np.zeros(nq, np.int64)
-        dec_overhead = np.zeros(nq)
-        num_ticks = np.zeros(nq, np.int64)
-        remaining_arrivals = np.array(
-            [sum(len(s) for s in t.streams) for t in tenants], np.int64
-        )
-        rows_total = np.array(
-            [sum(b.num_rows for s in t.streams for b in s) for t in tenants],
-            np.int64,
-        )
-        rows_completed = np.zeros(nq, np.int64)
-        last_done = np.array([t.arrival for t in tenants])
+        distribute_mask = [[False] * n for _ in range(nq)]
+        est_row_cost = [1e-3] * nq
+        # Observable backlog: rows sent to each consumer minus rows acked
+        # complete (the producer sees its own sends and completion acks;
+        # it never sees the hidden per-row costs).
+        outstanding = [[0.0] * n for _ in range(nq)]
+        recv_in_tick = [[0.0] * n for _ in range(nq)]
+        sync_in_tick = [[0.0] * n for _ in range(nq)]
+        rows_arr_in_tick = [[0.0] * n for _ in range(nq)]
+        batches_arr_in_tick = [[0.0] * n for _ in range(nq)]
+        bytes_arr_in_tick = [[0.0] * n for _ in range(nq)]
+        busy = [[0.0] * n for _ in range(nq)]
+        rows_done = [[0] * n for _ in range(nq)]
+        rr_counter = [0] * nq
+        bytes_moved = [0.0] * nq
+        rows_redist = [0] * nq
+        dec_overhead = [0.0] * nq
+        num_ticks = [0] * nq
+        remaining_arrivals = [sum(len(s) for s in t.streams) for t in tenants]
+        rows_total = [
+            sum(b.num_rows for s in t.streams for b in s) for t in tenants
+        ]
+        rows_completed = [0] * nq
+        last_done = [t.arrival for t in tenants]
+
+        planner: Optional[FairShareAdmission] = None
+        parked: List[Deque[Tuple[int, int]]] = [deque() for _ in range(nq)]
+        if self.fair_share is not None and nq > 0:
+            planner = FairShareAdmission(
+                [t.weight for t in tenants], self.fair_share
+            )
 
         events: List[Tuple[float, int, int, int, int, object]] = []
         seq = 0
 
         def push(t: float, kind: int, qid: int, who: int, payload: object):
             nonlocal seq
-            heapq.heappush(events, (t, seq, kind, qid, who, payload))
+            heappush(events, (t, seq, kind, qid, who, payload))
             seq += 1
 
         for q, t in enumerate(tenants):
@@ -795,57 +550,57 @@ class MultiQuerySimulator:
             )
 
         def start_worker(w: int, now: float):
+            if worker_running[w]:
+                return
             ring = rings[w]
-            if worker_running[w] or not len(ring):
+            if ring.tail == ring.head:
                 return
             chunk, qids = ring.pop(_SERVICE_CHUNK)
-            total = float(chunk.sum())
-            counts = np.bincount(qids, minlength=nq)
-            totals = np.bincount(qids, weights=chunk, minlength=nq)
+            # Sequential Python-float sum: bit-identical to the legacy
+            # engine's per-tuple accumulation, so the engines stay on the
+            # same event trajectory (tiny rounding differences amplify
+            # chaotically through routing decisions).
+            total = sum(chunk.tolist())
+            if qids is None:
+                payload = (total, len(chunk), None, None)
+            else:
+                counts = np.bincount(qids, minlength=nq)
+                # bincount accumulates weights in index order — the same
+                # sequential float additions as the single-tenant sum.
+                totals = np.bincount(qids, weights=chunk, minlength=nq)
+                payload = (total, len(chunk), counts, totals)
             worker_running[w] = True
-            push(now + total, _DONE, 0, w, (counts, totals))
+            push(now + total, _DONE, 0, w, payload)
 
         def siblings_idle_frac(p: int) -> float:
             idle = 0
             for w in range(n):
-                if w != p and not worker_running[w] and not len(rings[w]):
+                if w != p and not worker_running[w] and rings[w].tail == rings[w].head:
                     idle += 1
             return idle / max(n - 1, 1)
 
-        def emit(q: int, p: int, d: int, seg_costs: np.ndarray,
-                 nbytes: float, now: float) -> None:
-            nrows = len(seg_costs)
-            cross_node = c.node_of(d) != c.node_of(p)
-            if d != p:
-                rows_redist[q] += nrows
-                if cross_node:
-                    bytes_moved[q] += nbytes
-            arrive = now + self._transfer_delay(p, d, nbytes, nrows)
-            if cross_node and c.model_contention:
-                src_node = c.node_of(p)
-                start = max(now, nic_free_at[src_node])
-                occupy = nbytes / c.network_bandwidth
-                nic_free_at[src_node] = start + occupy
-                arrive = start + occupy + c.network_latency \
-                    + nrows * c.per_row_serialize
-            push(arrive, _ENQUEUE, q, d, seg_costs)
-            outstanding[q, d] += nrows
-
         def route_batch(q: int, p: int, b: Batch, now: float) -> None:
-            st = tenants[q].strategy
+            st = strategies[q]
             cfg = st.dyskew
             admission = admissions[q]
+            out_q = outstanding[q]
             dests: Optional[np.ndarray] = None
             if st.kind == "static_rr":
                 dests = (rr_counter[q] + np.arange(b.num_rows)) % n
                 rr_counter[q] += b.num_rows
-            elif distribute_mask[q, p]:
+            elif distribute_mask[q][p]:
+                # Row Size Model admission guard (§III.B): low batch density
+                # + no skew benefit visible → keep the heavy rows local.
                 bpr = b.total_bytes / max(b.num_rows, 1)
                 if not admission.density_guard_blocks(
                     b.num_rows, bpr, lambda: siblings_idle_frac(p)
                 ):
-                    bl = outstanding[q] * est_row_cost[q]
+                    bl = np.asarray(out_q) * est_row_cost[q]
                     if cfg.self_skip:
+                        # Forced-remote ablation (§III.B): the producer must
+                        # bypass its own node's interpreters entirely
+                        # (Fig. 1 — redistribution targets interpreters on
+                        # *other* VW nodes), leaving local CPU idle.
                         bl = np.where(
                             admission.eligible_destinations(n, p, c.node_of),
                             bl, np.inf,
@@ -855,112 +610,237 @@ class MultiQuerySimulator:
                     )
                     dests = np.repeat(np.arange(n), counts)
                     if st.enable_cost_gate:
+                        # Cost gate (§I goal 3): refuse when estimated
+                        # movement time exceeds estimated straggler savings.
                         moving = dests != p
                         dec = admission.admit_move(
                             float(b.sizes[moving].sum()), int(moving.sum()),
-                            float(est_row_cost[q]), n,
-                            c.network_bandwidth, c.per_row_serialize,
+                            est_row_cost[q], n,
+                            net_bw, ser,
                         )
                         if not dec.admit:
                             dests = None
+
             if dests is None:
-                emit(q, p, p, b.costs, b.total_bytes, now)
+                # All-local fast path (no redistribution this batch):
+                # in-process pipeline, serialization delay only.
+                nrows = b.num_rows
+                push(now + nrows * ser, _ENQUEUE, q, p, b.costs)
+                out_q[p] += nrows
                 return
             sd, starts, ends, costs_s, sizes_s = _group_by_dest(
                 dests, b.costs, b.sizes
             )
-            byte_sums = np.add.reduceat(sizes_s, starts)
+            # Per-group pairwise .sum() matches the legacy masked sums
+            # bit-for-bit (same elements, same order, same algorithm).
+            src_node = node[p]
             for j in range(len(starts)):
                 lo, hi = starts[j], ends[j]
-                emit(q, p, int(sd[lo]), costs_s[lo:hi],
-                     float(byte_sums[j]), now)
+                d = int(sd[lo])
+                nrows = hi - lo
+                nbytes = float(sizes_s[lo:hi].sum())
+                if node[d] != src_node:
+                    rows_redist[q] += nrows
+                    bytes_moved[q] += nbytes
+                    if contention:
+                        # Serialize on the source node's uplink.
+                        nf = nic_free_at[src_node]
+                        start = now if now > nf else nf
+                        occupy = nbytes / net_bw
+                        nic_free_at[src_node] = start + occupy
+                        arrive = start + occupy + net_lat + nrows * ser
+                    else:
+                        arrive = now + net_lat + nbytes / net_bw + nrows * ser
+                elif d == p:
+                    arrive = now + nrows * ser
+                else:
+                    rows_redist[q] += nrows
+                    arrive = now + ipc_lat + nbytes / ipc_bw + nrows * ser
+                push(arrive, _ENQUEUE, q, d, costs_s[lo:hi])
+                out_q[d] += nrows
+
+        def release_parked(now: float) -> None:
+            """Re-offer parked arrivals (round-robin) after new credit."""
+            progress = True
+            while progress:
+                progress = False
+                for q in planner.release_order():
+                    dq = parked[q]
+                    if not dq:
+                        continue
+                    p, k = dq[0]
+                    b = streams[q][p][k]
+                    bpr = b.total_bytes / max(b.num_rows, 1)
+                    if planner.try_admit(q, b.num_rows, b.total_bytes, bpr):
+                        dq.popleft()
+                        push(now, _ADMITTED, q, p, k)
+                        progress = True
 
         now = 0.0
         while events:
-            now, _, kind, qid, who, payload = heapq.heappop(events)
-            if kind == _TICK:
-                q = qid
-                num_ticks[q] += 1
-                density = np.where(
-                    batches_arr_in_tick[q] > 0,
-                    rows_arr_in_tick[q] / np.maximum(batches_arr_in_tick[q], 1),
-                    0.0,
-                )
-                bpr = np.where(
-                    rows_arr_in_tick[q] > 0,
-                    bytes_arr_in_tick[q] / np.maximum(rows_arr_in_tick[q], 1),
-                    0.0,
-                )
-                distribute_mask[q] = links[q].tick(
-                    recv_in_tick[q], sync_in_tick[q], density, bpr,
-                    worker_running,
-                )
-                recv_in_tick[q] = 0.0
-                sync_in_tick[q] = 0.0
-                rows_arr_in_tick[q] = 0.0
-                batches_arr_in_tick[q] = 0.0
-                bytes_arr_in_tick[q] = 0.0
-                if tenant_active(q):
-                    push(now + tenants[q].strategy.tick_interval,
-                         _TICK, q, 0, None)
-            elif kind == _ARRIVAL:
+            now, _, kind, qid, who, payload = heappop(events)
+            if kind == _ENQUEUE:
+                q, w = qid, who
+                rings[w].push(payload, qid=q)
+                recv_in_tick[q][w] += len(payload)
+                if not worker_running[w]:
+                    start_worker(w, now)
+            elif kind == _DONE:
+                w = who
+                total, nrows, counts, totals = payload
+                if counts is None:
+                    # N=1 specialization: no per-tenant split needed.
+                    busy[0][w] += total
+                    rows_done[0][w] += nrows
+                    sync_in_tick[0][w] += total
+                    avg = total / nrows if nrows else 0.0
+                    ema = strategies[0].cost_ema
+                    est_row_cost[0] = (1 - ema) * est_row_cost[0] + ema * avg
+                    left = outstanding[0][w] - nrows
+                    outstanding[0][w] = left if left > 0.0 else 0.0
+                    rows_completed[0] += nrows
+                    last_done[0] = now
+                    done_tenants = ((0, nrows),)
+                else:
+                    done_tenants = []
+                    for q in np.flatnonzero(counts):
+                        q = int(q)
+                        cnt, tot = int(counts[q]), float(totals[q])
+                        busy[q][w] += tot
+                        rows_done[q][w] += cnt
+                        sync_in_tick[q][w] += tot
+                        avg = tot / cnt
+                        ema = strategies[q].cost_ema
+                        est_row_cost[q] = (
+                            (1 - ema) * est_row_cost[q] + ema * avg
+                        )
+                        left = outstanding[q][w] - cnt
+                        outstanding[q][w] = left if left > 0.0 else 0.0
+                        rows_completed[q] += cnt
+                        last_done[q] = now
+                        done_tenants.append((q, cnt))
+                worker_running[w] = False
+                start_worker(w, now)
+                if planner is not None:
+                    for q, cnt in done_tenants:
+                        planner.on_complete(q, cnt)
+                        if not tenant_active(q):
+                            planner.deactivate(q)
+                    release_parked(now)
+            elif kind == _ARRIVAL or kind == _ADMITTED:
                 q, p, k = qid, who, payload
-                st = tenants[q].strategy
-                b = tenants[q].streams[p][k]
+                st = strategies[q]
+                b = streams[q][p][k]
+                if planner is not None and kind == _ARRIVAL:
+                    bpr = b.total_bytes / max(b.num_rows, 1)
+                    if not planner.try_admit(q, b.num_rows, b.total_bytes, bpr):
+                        parked[q].append((p, k))
+                        continue
                 remaining_arrivals[q] -= 1
-                rows_arr_in_tick[q, p] += b.num_rows
-                batches_arr_in_tick[q, p] += 1
-                bytes_arr_in_tick[q, p] += b.total_bytes
+                rows_arr_in_tick[q][p] += b.num_rows
+                batches_arr_in_tick[q][p] += 1
+                bytes_arr_in_tick[q][p] += b.total_bytes
                 if links[q] is not None:
                     dec_overhead[q] += st.decision_overhead
                     now += st.decision_overhead
                 route_batch(q, p, b, now)
-                if k + 1 < len(tenants[q].streams[p]):
-                    if st.kind == "static_rr" or distribute_mask[q, p]:
-                        bl = float(outstanding[q].min())
+                if k + 1 < len(streams[q][p]):
+                    # Flow control: pace against the least-backlogged valid
+                    # destination (own consumer when routing locally).
+                    if st.kind == "static_rr" or distribute_mask[q][p]:
+                        bl = min(outstanding[q])
                     else:
-                        bl = float(outstanding[q, p])
-                    backpressure = (
-                        max(0.0, bl - c.flow_window_rows) * est_row_cost[q]
-                    )
+                        bl = outstanding[q][p]
+                    backpressure = max(0.0, bl - flow_window) * est_row_cost[q]
                     push(now + tenants[q].arrival_gap + backpressure,
                          _ARRIVAL, q, p, k + 1)
-            elif kind == _ENQUEUE:
-                q, w = qid, who
-                rings[w].push(payload, qid=q)
-                recv_in_tick[q, w] += len(payload)
-                start_worker(w, now)
-            else:  # _DONE
-                w = who
-                counts, totals = payload
-                busy[:, w] += totals
-                rows_done[:, w] += counts
-                for q in np.flatnonzero(counts):
-                    cnt, tot = int(counts[q]), float(totals[q])
-                    sync_in_tick[q, w] += tot
-                    ema = tenants[q].strategy.cost_ema
-                    est_row_cost[q] = (
-                        (1 - ema) * est_row_cost[q] + ema * tot / cnt
-                    )
-                    outstanding[q, w] = max(outstanding[q, w] - cnt, 0.0)
-                    rows_completed[q] += cnt
-                    last_done[q] = now
-                worker_running[w] = False
-                start_worker(w, now)
+            else:  # _TICK
+                q = qid
+                num_ticks[q] += 1
+                rows_arr = np.asarray(rows_arr_in_tick[q])
+                batches_arr = np.asarray(batches_arr_in_tick[q])
+                density = np.where(
+                    batches_arr > 0,
+                    rows_arr / np.maximum(batches_arr, 1),
+                    0.0,
+                )
+                bpr = np.where(
+                    rows_arr > 0,
+                    np.asarray(bytes_arr_in_tick[q]) / np.maximum(rows_arr, 1),
+                    0.0,
+                )
+                distribute_mask[q] = links[q].tick(
+                    np.asarray(recv_in_tick[q]), np.asarray(sync_in_tick[q]),
+                    density, bpr, np.asarray(worker_running, bool),
+                ).tolist()
+                recv_in_tick[q] = [0.0] * n
+                sync_in_tick[q] = [0.0] * n
+                rows_arr_in_tick[q] = [0.0] * n
+                batches_arr_in_tick[q] = [0.0] * n
+                bytes_arr_in_tick[q] = [0.0] * n
+                if tenant_active(q):
+                    push(now + strategies[q].tick_interval, _TICK, q, 0, None)
 
         results: List[QueryResult] = []
         for q, t in enumerate(tenants):
             latency = max(last_done[q] - t.arrival, 1e-12)
-            total_rows = int(rows_done[q].sum())
+            busy_q = np.asarray(busy[q])
+            total_rows = int(sum(rows_done[q]))
             applied = rows_redist[q] > 0.01 * max(total_rows, 1)
             results.append(QueryResult(
                 latency=float(latency),
-                utilization=float(busy[q].sum() / (latency * n)),
+                utilization=float(busy_q.sum() / (latency * n)),
                 bytes_moved_remote=float(bytes_moved[q]),
                 rows_redistributed=int(rows_redist[q]),
                 redistribution_applied=bool(applied),
-                per_worker_busy=busy[q].copy(),
+                per_worker_busy=busy_q,
                 decision_overhead=float(dec_overhead[q]),
                 num_ticks=int(num_ticks[q]),
             ))
         return results
+
+
+class Simulator:
+    """Single-query API: the N=1 case of :class:`MultiQuerySimulator`.
+
+    Kept as the stable entry point for the single-query benches/tests;
+    since PR 2 it no longer owns an event loop of its own — the unified
+    multi-tenant loop runs the query as a lone tenant arriving at t=0,
+    which `tests/test_sim_equivalence.py` pins bit-tight against the seed
+    engine (`repro.sim.legacy`).
+    """
+
+    def __init__(
+        self,
+        cluster: ClusterConfig,
+        strategy: StrategyConfig,
+        seed: int = 0,
+    ):
+        self.cluster = cluster
+        self.strategy = strategy
+        self.rng = np.random.default_rng(seed)
+
+    def _transfer_delay(self, src_worker: int, dst_worker: int, nbytes: float,
+                        nrows: int) -> float:
+        return _transfer_delay(self.cluster, src_worker, dst_worker,
+                               nbytes, nrows)
+
+    def run_query(
+        self,
+        batches_per_producer: List[List[Batch]],
+        arrival_gap: float = 1e-4,
+    ) -> QueryResult:
+        """Execute one query.
+
+        ``batches_per_producer[i]`` is the (possibly skewed) input stream of
+        producer link instance i; batches arrive back-to-back separated by
+        ``arrival_gap`` (the scan feeding the UDF operator).
+        """
+        tenant = TenantQuery(
+            name="query",
+            streams=batches_per_producer,
+            strategy=self.strategy,
+            arrival=0.0,
+            arrival_gap=arrival_gap,
+        )
+        return MultiQuerySimulator(self.cluster).run([tenant])[0]

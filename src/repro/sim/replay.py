@@ -1,6 +1,9 @@
 """Replay harness: run workload suites under competing strategies and
 aggregate the statistics the paper reports (mean / P99 latency deltas,
-utilization, redistribution-applied fraction)."""
+utilization, redistribution-applied fraction), plus the multi-tenant
+traffic studies: closed-loop staggered tenants, open-loop Poisson/burst
+streams with priority classes, per-class p50/p99/p999 tails and Jain's
+fairness index over per-tenant slowdowns."""
 
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.admission import FairShareConfig
 from repro.core.types import DySkewConfig, Policy, SkewModelKind
 from repro.sim.engine import (
     ClusterConfig,
@@ -21,7 +25,13 @@ from repro.sim.engine import (
     StrategyConfig,
     TenantQuery,
 )
-from repro.sim.workload import QueryProfile, generate_query, generate_query_cached
+from repro.sim.workload import (
+    ArrivalProcess,
+    QueryProfile,
+    arrival_times,
+    generate_query,
+    generate_query_cached,
+)
 
 # Strategy resolution for the legacy-vs-DySkew A/B the paper evaluates:
 #
@@ -277,15 +287,152 @@ def run_multi_tenant_ab(
     seed: int = 0,
     stagger_frac: float = 0.25,
     feed_factor: float = 2.0,
+    fair_share: Optional[FairShareConfig] = None,
+    weights: Optional[Sequence[float]] = None,
 ) -> Dict[str, SuiteResult]:
     """Legacy vs DySkew with all ``profiles`` running CONCURRENTLY as
-    tenants of one shared cluster (same streams, same arrival schedule)."""
+    tenants of one shared cluster (same streams, same arrival schedule).
+    ``fair_share``/``weights`` switch on the weighted admission layer."""
     out: Dict[str, SuiteResult] = {}
     for name, resolve in (("legacy", legacy_strategy), ("dyskew", dyskew_strategy)):
         tenants = staggered_tenants(
             profiles, cluster, resolve, seed=seed,
             stagger_frac=stagger_frac, feed_factor=feed_factor,
         )
-        results = MultiQuerySimulator(cluster).run(tenants)
+        if weights is not None:
+            if len(weights) != len(tenants):
+                raise ValueError(
+                    f"weights length {len(weights)} != tenant count "
+                    f"{len(tenants)}"
+                )
+            for t, w in zip(tenants, weights):
+                t.weight = float(w)
+        results = MultiQuerySimulator(cluster, fair_share=fair_share).run(tenants)
         out[name] = SuiteResult(strategy=name, results=results)
+    return out
+
+
+# ------------------------------------------------------------------ #
+# Open-loop traffic (Poisson / burst arrivals, priority classes)
+# ------------------------------------------------------------------ #
+
+
+def jain_fairness(values: Sequence[float]) -> float:
+    """Jain's fairness index (sum x)^2 / (n * sum x^2): 1.0 = perfectly
+    even, 1/n = one value holds everything.  Undefined sets score 1.0."""
+    x = np.asarray(list(values), dtype=np.float64)
+    if len(x) == 0 or not np.any(x):
+        return 1.0
+    return float(x.sum() ** 2 / (len(x) * (x ** 2).sum()))
+
+
+def tenant_class(t: TenantQuery) -> str:
+    """Class key of an open-loop tenant (name is '<class>#<arrival_idx>'
+    for generated traffic; standalone tenants are their own class)."""
+    return t.name.split("#", 1)[0]
+
+
+def ideal_latency(t: TenantQuery, cluster: ClusterConfig) -> float:
+    """Perfectly-balanced lower bound: total hidden UDF seconds spread
+    over every interpreter in the warehouse."""
+    total_cost = sum(float(b.costs.sum()) for s in t.streams for b in s)
+    return total_cost / cluster.num_workers
+
+
+def open_loop_rate(
+    profiles: Sequence[QueryProfile], cluster: ClusterConfig,
+    load: float = 0.7,
+) -> float:
+    """Arrival rate (queries/s) that offers ``load`` fraction of the
+    cluster's aggregate service capacity, for the given query mix."""
+    work = [p.n_rows * p.mean_row_cost for p in profiles]
+    return load * cluster.num_workers / float(np.mean(work))
+
+
+def open_loop_tenants(
+    specs: Sequence[Tuple[QueryProfile, float]],
+    cluster: ClusterConfig,
+    resolve: Callable[[QueryProfile], StrategyConfig],
+    process: ArrivalProcess,
+    num_queries: int,
+    seed: int = 0,
+    feed_factor: float = 2.0,
+) -> List[TenantQuery]:
+    """Materialize an open-loop query stream: ``num_queries`` arrivals at
+    :func:`arrival_times` timestamps, cycling over ``specs`` —
+    (profile, fair-share weight) pairs, e.g. from
+    `workload.priority_class_suite`.  Each arrival is an independent
+    tenant (fresh streams, own link state) named '<profile>#<index>'."""
+    times = arrival_times(process, num_queries, seed=seed + 977)
+    tenants: List[TenantQuery] = []
+    for i in range(num_queries):
+        prof, weight = specs[i % len(specs)]
+        tenants.append(TenantQuery(
+            name=f"{prof.name}#{i:03d}",
+            streams=generate_query(prof, cluster.num_workers,
+                                   seed=seed * 1000 + i),
+            strategy=resolve(prof),
+            arrival=float(times[i]),
+            arrival_gap=scan_arrival_gap(prof, cluster, feed_factor),
+            weight=weight,
+        ))
+    return tenants
+
+
+def summarize_open_loop(
+    tenants: Sequence[TenantQuery],
+    results: Sequence[QueryResult],
+    cluster: ClusterConfig,
+) -> Dict[str, object]:
+    """Aggregate an open-loop run into the numbers the multi-tenant bench
+    reports: per-class latency percentiles (p50/p99/p999) + mean
+    slowdown, and Jain's fairness index over per-tenant slowdowns
+    (latency / perfectly-balanced ideal; equal slowdowns = fair)."""
+    classes: Dict[str, List[Tuple[float, float]]] = {}
+    slowdowns: List[float] = []
+    for t, r in zip(tenants, results):
+        ideal = max(ideal_latency(t, cluster), 1e-12)
+        sd = r.latency / ideal
+        slowdowns.append(sd)
+        classes.setdefault(tenant_class(t), []).append((r.latency, sd))
+    per_class: Dict[str, Dict[str, float]] = {}
+    for name, vals in sorted(classes.items()):
+        lat = np.array([v[0] for v in vals])
+        sds = np.array([v[1] for v in vals])
+        per_class[name] = {
+            "n": len(vals),
+            "p50": float(np.percentile(lat, 50)),
+            "p99": float(np.percentile(lat, 99)),
+            "p999": float(np.percentile(lat, 99.9)),
+            "mean": float(lat.mean()),
+            "mean_slowdown": float(sds.mean()),
+        }
+    return {
+        "per_class": per_class,
+        "jain": jain_fairness(slowdowns),
+        "mean_latency": float(np.mean([r.latency for r in results])),
+    }
+
+
+def run_open_loop(
+    specs: Sequence[Tuple[QueryProfile, float]],
+    cluster: ClusterConfig,
+    process: ArrivalProcess,
+    num_queries: int,
+    seed: int = 0,
+    resolve: Callable[[QueryProfile], StrategyConfig] = dyskew_strategy,
+    fair_share: Optional[FairShareConfig] = None,
+    feed_factor: float = 2.0,
+) -> Dict[str, object]:
+    """One open-loop scenario end to end: materialize the arrival stream,
+    run it on one shared cluster (optionally under fair-share admission),
+    and summarize per-class tails + fairness."""
+    tenants = open_loop_tenants(
+        specs, cluster, resolve, process, num_queries, seed=seed,
+        feed_factor=feed_factor,
+    )
+    results = MultiQuerySimulator(cluster, fair_share=fair_share).run(tenants)
+    out = summarize_open_loop(tenants, results, cluster)
+    out["tenants"] = tenants
+    out["results"] = results
     return out

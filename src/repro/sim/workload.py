@@ -9,13 +9,36 @@ qualitative claims (see DESIGN.md §8).  Two independent skew axes:
                    exponent / hot-partition fraction;
   cost skew      — heavy-tailed per-row UDF cost (lognormal sigma), the
                    'arbitrary user code' effect of §I.
+
+Beyond per-query profiles, this module also generates multi-tenant
+*traffic*: open-loop arrival processes (:class:`ArrivalProcess` /
+:func:`arrival_times` — Poisson and on/off burst-modulated Poisson,
+where query arrival times do NOT react to completions, the regime tail
+latency must be measured in) and cross-tenant interference scenarios
+(:func:`skew_interference_suite`, :func:`priority_class_suite`) for the
+fair-share admission studies in `sim/replay.py`.
+
+Invariants:
+
+  * Determinism.  Every generator is a pure function of its (profile,
+    seed) arguments via a locally constructed ``np.random.default_rng``
+    — no global RNG state — so replay comparisons (legacy vs DySkew, fair
+    share on vs off) see IDENTICAL streams and arrival schedules, and
+    the process-pool fan-out in `sim/replay.py` (``REPRO_BENCH_WORKERS``)
+    returns the same results as a serial run.
+  * Batches are immutable.  :func:`generate_query_cached` memoizes and
+    shares `Batch` objects across strategy arms; nothing may mutate
+    ``costs``/``sizes`` (the engine only reads views of them).
+  * Batching matches §III.B.  The scan caps batches by rows AND bytes,
+    so huge rows collapse observed batch density exactly as the Row Size
+    Model expects — keep both caps when adding profiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -289,6 +312,121 @@ def multi_tenant_suite(num_tenants: int = 8, seed: int = 41) -> List[QueryProfil
                 cost_sigma=float(rng.uniform(0.3, 0.6)),
             ))
     return out
+
+
+def skew_interference_suite(
+    num_tenants: int = 4, seed: int = 53
+) -> List[QueryProfile]:
+    """Cross-tenant skew-interference study: ONE aggressor — a large query
+    with a hot producer and heavy-tailed per-row cost, exactly the shape
+    that monopolizes interpreter pools and the NIC — sharing the cluster
+    with small, balanced, latency-sensitive victims.
+
+    The interesting measurements are the victims' tail latency and the
+    Jain's fairness index across tenants, with and without the
+    fair-share admission layer (see `sim/replay.py`).
+    """
+    rng = np.random.default_rng(seed)
+    out = [QueryProfile(
+        name="aggressor_00",
+        n_rows=12_000,
+        mean_row_cost=3e-3,
+        cost_sigma=1.6,
+        partition_alpha=1.2,
+        hot_fraction=0.30,
+        row_bytes=4_000.0,
+    )]
+    for q in range(1, num_tenants):
+        out.append(QueryProfile(
+            name=f"victim_{q:02d}",
+            n_rows=int(rng.integers(1_500, 3_000)),
+            mean_row_cost=float(10 ** rng.uniform(-3.4, -3.0)),
+            cost_sigma=float(rng.uniform(0.3, 0.5)),
+        ))
+    return out
+
+
+def priority_class_suite(seed: int = 61) -> List[Tuple[QueryProfile, float]]:
+    """Two priority classes for the open-loop fair-share scenario:
+
+      gold — small, balanced, latency-sensitive interactive queries
+             (high fair-share weight);
+      bulk — larger, skewed batch queries (low weight), the background
+             pressure gold must be isolated from.
+
+    Returns (profile, weight) pairs; `replay.open_loop_tenants` cycles
+    arrivals over them.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[Tuple[QueryProfile, float]] = []
+    for i in range(3):
+        out.append((QueryProfile(
+            name="gold",
+            n_rows=int(rng.integers(1_200, 2_000)),
+            mean_row_cost=float(10 ** rng.uniform(-3.3, -3.0)),
+            cost_sigma=float(rng.uniform(0.3, 0.5)),
+        ), 8.0))
+    for i in range(3):
+        out.append((QueryProfile(
+            name="bulk",
+            n_rows=int(rng.integers(4_000, 7_000)),
+            mean_row_cost=float(10 ** rng.uniform(-3.0, -2.6)),
+            cost_sigma=float(rng.uniform(1.0, 1.6)),
+            partition_alpha=float(rng.uniform(0.6, 1.2)),
+            hot_fraction=float(rng.uniform(0.10, 0.25)),
+        ), 1.0))
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Open-loop arrival processes
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """An open-loop query arrival process: timestamps are generated ahead
+    of time and do NOT react to completions (no closed-loop think time),
+    so queueing delay compounds into the latency tail under overload —
+    the regime elastic engines are judged in.
+
+      poisson — homogeneous Poisson stream at ``rate`` arrivals/s;
+      burst   — on/off modulated Poisson (a 2-state MMPP): baseline
+                ``rate`` in the off state, ``rate * burst_factor`` during
+                bursts; burst durations are exponential with mean
+                ``mean_burst_s`` and cover ``burst_fraction`` of time.
+    """
+
+    kind: str = "poisson"          # poisson | burst
+    rate: float = 2.0              # arrivals/s (baseline state)
+    burst_factor: float = 8.0
+    burst_fraction: float = 0.25
+    mean_burst_s: float = 2.0
+
+
+def arrival_times(
+    process: ArrivalProcess, num_arrivals: int, seed: int
+) -> np.ndarray:
+    """Materialize ``num_arrivals`` open-loop arrival timestamps."""
+    rng = np.random.default_rng(seed)
+    if process.kind == "poisson":
+        return np.cumsum(rng.exponential(1.0 / process.rate, num_arrivals))
+    if process.kind != "burst":
+        raise ValueError(f"unknown arrival process kind: {process.kind!r}")
+    f = min(max(process.burst_fraction, 1e-6), 1 - 1e-6)
+    mean_off_s = process.mean_burst_s * (1.0 - f) / f
+    times: List[float] = []
+    t, on = 0.0, False
+    while len(times) < num_arrivals:
+        dur = rng.exponential(process.mean_burst_s if on else mean_off_s)
+        r = process.rate * (process.burst_factor if on else 1.0)
+        a = t + rng.exponential(1.0 / r)
+        while a < t + dur and len(times) < num_arrivals:
+            times.append(a)
+            a += rng.exponential(1.0 / r)
+        t += dur
+        on = not on
+    return np.asarray(times)
 
 
 def heavy_rows_case(row_gb: float = 2.0, n_rows: int = 48) -> QueryProfile:

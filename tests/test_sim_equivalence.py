@@ -208,6 +208,69 @@ class TestAdmissionPlanner:
         assert not mask[:4].any() and mask[4:].all()
 
 
+class TestMultiTenantEquivalence:
+    """The unified event loop, driven through the MULTI-tenant API, pinned
+    bit-tight against `sim/legacy.py`-derived traces.
+
+    The legacy engine is single-query, so the pins cover the two regimes
+    where it still predicts the multi-tenant loop exactly: a lone tenant
+    (N=1 must be indistinguishable from the seed engine), and concurrent
+    tenants that provably cannot interact (disjoint producers, no
+    redistribution), where each tenant must reproduce its solo legacy
+    trace even though all events interleave through one heap.
+    """
+
+    def _assert_equal(self, new, old):
+        np.testing.assert_allclose(new.latency, old.latency, **TOL)
+        np.testing.assert_allclose(new.utilization, old.utilization, **TOL)
+        np.testing.assert_allclose(
+            new.bytes_moved_remote, old.bytes_moved_remote, **TOL
+        )
+        assert new.rows_redistributed == old.rows_redistributed
+        np.testing.assert_allclose(
+            new.per_worker_busy, old.per_worker_busy, **TOL
+        )
+
+    @pytest.mark.parametrize("kind", ["none", "static_rr", "dyskew"])
+    def test_single_tenant_bit_exact_vs_legacy(self, kind):
+        cluster = ClusterConfig(num_nodes=2)
+        prof = QueryProfile(
+            name="mt_eq", n_rows=2000, mean_row_cost=1e-3, cost_sigma=1.1,
+            partition_alpha=0.8, hot_fraction=0.15,
+        )
+        st = default_strategies()[kind]
+        batches = generate_query(prof, cluster.num_workers, seed=2)
+        gap = scan_arrival_gap(prof, cluster)
+        multi = MultiQuerySimulator(cluster).run(
+            [TenantQuery("solo", batches, st, 0.0, gap)]
+        )[0]
+        old = LegacySimulator(cluster, st, 0).run_query(batches, gap)
+        self._assert_equal(multi, old)
+
+    def test_disjoint_tenants_bit_exact_vs_legacy(self):
+        """Two concurrent 'none'-strategy tenants on disjoint producers
+        share the heap/rings data structures but no resources; each must
+        match its solo legacy trace bit-for-bit."""
+        cluster = ClusterConfig(num_nodes=2)
+        n = cluster.num_workers
+        st = StrategyConfig(kind="none")
+        prof = QueryProfile(
+            name="disjoint", n_rows=1500, mean_row_cost=1e-3, cost_sigma=0.9,
+        )
+        gap = scan_arrival_gap(prof, cluster)
+        full = generate_query(prof, n, seed=9)
+        half = n // 2
+        streams_a = [s if p < half else [] for p, s in enumerate(full)]
+        streams_b = [s if p >= half else [] for p, s in enumerate(full)]
+        multi = MultiQuerySimulator(cluster).run([
+            TenantQuery("a", streams_a, st, 0.0, gap),
+            TenantQuery("b", streams_b, st, 0.0, gap),
+        ])
+        for streams, res in zip((streams_a, streams_b), multi):
+            solo = LegacySimulator(cluster, st, 0).run_query(streams, gap)
+            self._assert_equal(res, solo)
+
+
 class TestMultiQuerySimulator:
     def _tenants(self, cluster, num=4, resolve=dyskew_strategy, seed=0):
         profiles = multi_tenant_suite(num, seed=41)
@@ -259,7 +322,9 @@ class TestMultiQuerySimulator:
         )
 
     def test_single_tenant_matches_simulator(self):
-        """One tenant on the shared engine ≈ the single-query engine."""
+        """One tenant on the shared engine == the single-query engine
+        EXACTLY: `Simulator.run_query` is the N=1 case of the unified
+        loop, not a separate implementation."""
         cluster = ClusterConfig(num_nodes=2)
         prof = QueryProfile(
             name="solo", n_rows=2000, mean_row_cost=1e-3, cost_sigma=1.0,
@@ -272,7 +337,8 @@ class TestMultiQuerySimulator:
         multi = MultiQuerySimulator(cluster).run(
             [TenantQuery("solo", batches, st, 0.0, gap)]
         )[0]
-        np.testing.assert_allclose(multi.latency, solo.latency, rtol=0.05)
-        np.testing.assert_allclose(
-            multi.per_worker_busy.sum(), solo.per_worker_busy.sum(), rtol=1e-9
+        assert multi.latency == solo.latency
+        assert multi.rows_redistributed == solo.rows_redistributed
+        np.testing.assert_array_equal(
+            multi.per_worker_busy, solo.per_worker_busy
         )

@@ -1,0 +1,96 @@
+"""Doc-link checker: verify that file/module references in the user-facing
+docs resolve against the working tree.
+
+Scans README.md and docs/ARCHITECTURE.md for backtick-quoted tokens that
+look like repository paths (``src/repro/sim/engine.py``, ``docs/``,
+``benchmarks/run.py``) or dotted repro modules (``repro.core.admission``)
+and fails with a non-zero exit listing every reference that does not
+exist.  Wired into ``make verify`` and ``benchmarks/run.py --check-docs``
+so the docs cannot silently rot as the tree moves.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", os.path.join("docs", "ARCHITECTURE.md")]
+
+_CODE_SPAN = re.compile(r"`([^`\n]+)`")
+# A token is path-like if it contains a slash or a known file suffix.
+_PATHISH = re.compile(r"^[\w./-]+$")
+_SUFFIXES = (".py", ".md", ".txt", ".json", ".toml", ".cfg")
+_MODULE = re.compile(r"^repro(\.\w+)+$")
+
+
+def _candidate_kind(token: str) -> str:
+    """'path' | 'module' | '' (not checkable)."""
+    if _MODULE.match(token):
+        return "module"
+    if not _PATHISH.match(token):
+        return ""
+    if "/" in token or token.endswith(_SUFFIXES):
+        # Exclude obvious non-paths: flags, versions, bare commands.
+        if token.startswith("-") or token.replace(".", "").isdigit():
+            return ""
+        return "path"
+    return ""
+
+
+def _exists(token: str, kind: str) -> bool:
+    if kind == "module":
+        rel = os.path.join("src", *token.split("."))
+        return (
+            os.path.isdir(os.path.join(ROOT, rel))
+            or os.path.isfile(os.path.join(ROOT, rel + ".py"))
+        )
+    p = os.path.join(ROOT, token.rstrip("/"))
+    return os.path.exists(p)
+
+
+def check(doc_paths: List[str] = DOCS) -> Tuple[int, List[str]]:
+    """Returns (num_checked, failures)."""
+    checked = 0
+    failures: List[str] = []
+    for doc in doc_paths:
+        full = os.path.join(ROOT, doc)
+        if not os.path.isfile(full):
+            failures.append(f"{doc}: document missing")
+            continue
+        with open(full, encoding="utf-8") as f:
+            text = f.read()
+        for ln, line in enumerate(text.splitlines(), 1):
+            for token in _CODE_SPAN.findall(line):
+                token = token.strip()
+                # Commands: check the file argument of `python <path>`.
+                m = re.match(r"^(?:PYTHONPATH=\S+ )?python ([\w./-]+\.py)",
+                             token)
+                if m:
+                    token = m.group(1)
+                kind = _candidate_kind(token)
+                if not kind:
+                    continue
+                checked += 1
+                if not _exists(token, kind):
+                    failures.append(f"{doc}:{ln}: unresolved reference "
+                                    f"`{token}`")
+    return checked, failures
+
+
+def main() -> int:
+    checked, failures = check()
+    if failures:
+        print(f"doc-link check FAILED ({len(failures)} unresolved, "
+              f"{checked} checked):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"doc-link check OK ({checked} references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
