@@ -3,7 +3,7 @@
 The paper's production setting runs many Snowpark queries against the
 same virtual warehouse at once; the interesting question is how a noisy
 (skewed) neighbour degrades everyone else's latency, and how much of that
-DySkew claws back versus the legacy static round-robin.  Two traffic
+DySkew claws back versus the legacy static round-robin.  Three traffic
 regimes:
 
   closed-loop — the `multi_tenant_suite` tenants with staggered arrivals
@@ -13,7 +13,15 @@ regimes:
       weight 8; bulk skewed batch work, weight 1) with the weighted
       fair-share admission layer on, reporting per-class p50/p99/p999
       and Jain's fairness index over per-tenant slowdowns, fair share
-      on vs off.
+      on vs off;
+  many        — the hundreds-of-tenants scaling study (``--many``;
+      128–512 open-loop tenants from `many_tenants_suite`): the SAME
+      tenants run once with per-tenant state-machine ticks
+      (``batch_ticks=False``) and once with the batched
+      `BatchedLinkSim` path (``batch_ticks=True``, one jitted tick call
+      per cadence), reporting the tick-batching wall-clock speedup;
+      plus the closed-form 'none' fast path vs the event loop on
+      disjoint-producer tenants.
 """
 
 from __future__ import annotations
@@ -33,15 +41,25 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 import numpy as np
 
 from repro.core.admission import FairShareConfig
-from repro.sim.engine import ClusterConfig
+from repro.core.types import DySkewConfig, Policy, SkewModelKind
+from repro.sim.engine import (
+    ClusterConfig,
+    MultiQuerySimulator,
+    StrategyConfig,
+    TenantQuery,
+)
 from repro.sim.replay import (
     improvement,
     open_loop_rate,
+    open_loop_tenants,
     run_multi_tenant_ab,
     run_open_loop,
 )
 from repro.sim.workload import (
     ArrivalProcess,
+    QueryProfile,
+    generate_query,
+    many_tenants_suite,
     multi_tenant_suite,
     priority_class_suite,
 )
@@ -116,8 +134,119 @@ def _open_loop(quick: bool) -> List[Row]:
     return rows
 
 
+def _many_strategy() -> StrategyConfig:
+    """One homogeneous dyskew strategy for the scaling study: identical
+    (config, cadence) across tenants puts the whole fleet in ONE batched
+    tick group — the regime ROADMAP's 'hundreds of tenants' rung names.
+    Distribute-Late is the production-default policy (Fig. 5: ~55 % of
+    the population): every link keeps ticking its skew model, but only
+    genuinely skewed tenants redistribute, so the study isolates tick
+    overhead rather than routing volume.  The 8 ms metrics cadence is
+    the fine-grained end of the engine's range — small queries need a
+    responsive skew signal — and is exactly where per-tenant tick
+    dispatch drowns the event loop at N≳64."""
+    return StrategyConfig(
+        kind="dyskew",
+        dyskew=DySkewConfig(
+            policy=Policy.LATE,
+            skew_model=SkewModelKind.IDLE_TIME,
+            n_strikes=2,
+        ),
+        tick_interval=8e-3,
+    )
+
+
+def _many_tenants(quick: bool) -> List[Row]:
+    """Tick-batching A/B at 128–512 tenants: same tenants, same cluster,
+    per-tenant jit ticks vs ONE BatchedLinkSim call per cadence."""
+    counts = [128] if quick else [128, 256, 512]
+    cluster = ClusterConfig(num_nodes=2)
+    specs = many_tenants_suite(counts[-1], seed=71)
+    st = _many_strategy()
+    rows: List[Row] = []
+    for num in counts:
+        # Sustained overload (the warehouse is offered 3x its service
+        # capacity): queues build, tenants stay live for many ticks, and
+        # the per-tenant tick dispatch becomes the dominant loop cost —
+        # exactly the regime the batched path exists for.
+        proc = ArrivalProcess(
+            kind="poisson",
+            rate=open_loop_rate([p for p, _ in specs], cluster, load=3.0),
+        )
+        tenants = open_loop_tenants(
+            specs, cluster, lambda prof: st, proc, num, seed=1,
+        )
+
+        def timed(batch_ticks: bool, repeats: int):
+            # timeit-style min-of-repeats: the box is a shared container
+            # and a noise spike landing inside one measurement window
+            # would otherwise dominate the ratio.  Both arms get the
+            # SAME repeat count so the min does not bias the speedup.
+            best_wall, res = float("inf"), None
+            for _ in range(repeats):
+                t0 = time.time()
+                r = MultiQuerySimulator(
+                    cluster, batch_ticks=batch_ticks).run(tenants)
+                best_wall = min(best_wall, time.time() - t0)
+                res = r
+            return res, best_wall
+
+        repeats = 2 if num <= 128 else 1
+        res_per, wall_per = timed(False, repeats)
+        res_bat, wall_bat = timed(True, repeats)
+        mean_per = float(np.mean([r.latency for r in res_per]))
+        mean_bat = float(np.mean([r.latency for r in res_bat]))
+        ticks_per = sum(r.num_ticks for r in res_per)
+        rows.append((
+            f"many_tenants_{num}q_batched_tick_wall",
+            wall_bat * 1e6,
+            f"per_tenant_wall_us={wall_per * 1e6:.0f};"
+            f"speedup={wall_per / max(wall_bat, 1e-9):.2f}x;tenants={num};"
+            f"ticks_per_tenant_mode={ticks_per};"
+            f"mean_lat_batched_s={mean_bat:.3f};"
+            f"mean_lat_per_tenant_s={mean_per:.3f}",
+        ))
+    # Closed-form 'none' fast path: disjoint-producer tenants (one per
+    # worker), event loop vs the prefix-sum closed form.
+    n = cluster.num_workers
+    prof = QueryProfile(
+        name="many_none", n_rows=40_000 if not quick else 16_000,
+        mean_row_cost=1e-3, cost_sigma=0.8, batch_rows=1 << 30,
+    )
+    full = generate_query(prof, n, seed=5)
+    none_tenants = [
+        TenantQuery(
+            name=f"none_{p:02d}",
+            streams=[s if i == p else [] for i, s in enumerate(full)],
+            strategy=StrategyConfig(kind="none"),
+            arrival=0.01 * p,
+        )
+        for p in range(n)
+    ]
+    t0 = time.time()
+    res_loop = MultiQuerySimulator(
+        cluster, none_closed_form=False).run(none_tenants)
+    wall_loop = time.time() - t0
+    t0 = time.time()
+    res_cf = MultiQuerySimulator(
+        cluster, none_closed_form=True).run(none_tenants)
+    wall_cf = time.time() - t0
+    err = max(
+        abs(a.latency - b.latency) / a.latency
+        for a, b in zip(res_loop, res_cf)
+    )
+    rows.append((
+        "many_none_closed_form_wall",
+        wall_cf * 1e6,
+        f"event_loop_wall_us={wall_loop * 1e6:.0f};"
+        f"speedup={wall_loop / max(wall_cf, 1e-9):.1f}x;"
+        f"tenants={n};max_rel_latency_err={err:.2e}",
+    ))
+    return rows
+
+
 def run(quick: bool = False) -> List[Row]:
-    return _closed_loop(quick) + _open_loop(quick)
+    return _closed_loop(quick) + _open_loop(quick) + _many_tenants(quick)
 
 
 if __name__ == "__main__":
@@ -126,6 +255,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     default=bool(os.environ.get("REPRO_BENCH_QUICK")))
+    ap.add_argument("--many", action="store_true",
+                    help="run ONLY the hundreds-of-tenants tick-batching "
+                         "scaling section")
     args = ap.parse_args()
-    for r in run(quick=args.quick):
+    rows = _many_tenants(args.quick) if args.many else run(quick=args.quick)
+    for r in rows:
         print(",".join(str(x) for x in r))

@@ -1,14 +1,19 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  ``--quick`` (or env
-REPRO_BENCH_QUICK=1) shrinks workloads for CI-speed runs.  Individual
-benches can be selected with ``--only <substring>``.
+Prints ``name,us_per_call,derived`` CSV and records the run as
+machine-readable JSON (default ``BENCH_3.json`` in the repo root,
+``--json`` overrides) so the perf trajectory survives across PRs: per
+bench the wall time and every row with its derived key=value pairs
+(speedups vs legacy, tenant counts, ...) parsed into a dict.
+``--quick`` (or env REPRO_BENCH_QUICK=1) shrinks workloads for CI-speed
+runs.  Individual benches can be selected with ``--only <substring>``.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import os
 import sys
 import time
@@ -33,11 +38,50 @@ BENCHES = [
 ]
 
 
+def _jsonable(obj):
+    """Deep-copy with NaN/±inf floats replaced by None (strict JSON)."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, float) and (obj != obj or obj in (float("inf"),
+                                                         float("-inf"))):
+        return None
+    return obj
+
+
+def _parse_derived(derived: str) -> dict:
+    """Best-effort split of a row's derived string into key=value pairs
+    (values parsed as float where they look numeric, trailing 'x'/'%'
+    units stripped); non-conforming fragments land under 'notes'."""
+    out: dict = {}
+    notes = []
+    for frag in str(derived).split(";"):
+        frag = frag.strip()
+        if not frag:
+            continue
+        if "=" not in frag:
+            notes.append(frag)
+            continue
+        k, v = frag.split("=", 1)
+        try:
+            out[k] = float(v.rstrip("x%"))
+        except ValueError:
+            out[k] = v
+    if notes:
+        out["notes"] = "; ".join(notes)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     default=bool(os.environ.get("REPRO_BENCH_QUICK")))
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--json", type=str,
+                    default=os.path.join(_ROOT, "BENCH_3.json"),
+                    help="where to write the machine-readable record of "
+                         "this run ('' disables)")
     ap.add_argument("--check-docs", action="store_true",
                     help="run the README/ARCHITECTURE doc-link check "
                          "instead of the benches (see tools/check_docs.py)")
@@ -51,6 +95,13 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    record = {
+        "schema": 1,
+        "created_unix": time.time(),
+        "quick": bool(args.quick),
+        "only": args.only,
+        "benches": [],
+    }
     for mod_name in BENCHES:
         if args.only and args.only not in mod_name:
             continue
@@ -59,16 +110,53 @@ def main() -> None:
             mod = importlib.import_module(mod_name)
         except ModuleNotFoundError:
             print(f"{mod_name},0,SKIP (module not present)")
+            record["benches"].append(
+                {"suite": mod_name, "status": "skipped"}
+            )
             continue
+        entry = {"suite": mod_name, "status": "ok", "rows": []}
         try:
             for name, us, derived in mod.run(quick=args.quick):
                 print(f"{name},{us:.1f},{derived}")
+                entry["rows"].append({
+                    "name": name,
+                    "us_per_call": float(us),
+                    "derived": _parse_derived(derived),
+                })
+            entry["wall_s"] = time.time() - t0
             print(f"{mod_name.split('.')[-1]}_wall,"
-                  f"{(time.time()-t0)*1e6:.0f},total bench wall time")
+                  f"{entry['wall_s']*1e6:.0f},total bench wall time")
         except Exception:
             failures += 1
+            entry["status"] = "failed"
+            entry["wall_s"] = time.time() - t0
             print(f"{mod_name},0,FAILED")
             traceback.print_exc()
+        record["benches"].append(entry)
+    default_json = ap.get_default("json")
+    demoting = bool(args.only)
+    if args.quick and not demoting and os.path.isfile(default_json):
+        # A quick run may refresh a quick record but must not clobber a
+        # full-run record; pass --json explicitly to force.
+        try:
+            with open(default_json, encoding="utf-8") as f:
+                demoting = json.load(f).get("quick") is False
+        except (OSError, ValueError):
+            pass
+    if args.json and demoting and args.json == default_json:
+        print(f"# partial/demoting run: not overwriting {default_json} "
+              "(pass --json to force)", file=sys.stderr)
+    elif args.json:
+        record["total_wall_s"] = sum(
+            b.get("wall_s", 0.0) for b in record["benches"]
+        )
+        with open(args.json, "w", encoding="utf-8") as f:
+            # NaN is a legal bench value (e.g. Jain's index of a class
+            # with zero completions) but not legal JSON — null it.
+            json.dump(_jsonable(record), f, indent=2, sort_keys=True,
+                      allow_nan=False)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -4,7 +4,10 @@ Public API:
   types.DySkewConfig / Policy / LinkState / SkewModelKind
   skew_models — Eq.(1) row-percentage, idle-time, Eq.(2) sync-slope,
                 N-strikes, batch-density Row Size Model
-  state_machine — per-link-instance adaptive state machine (Fig. 2)
+  state_machine — per-link-instance adaptive state machine (Fig. 2);
+                `tick` advances one query's sibling group, `tick_many`
+                vmaps it over a stacked (T, n) tenant axis with
+                inactive-row masking (the batched simulator tick)
   redistribution — round_robin (legacy baseline), lpt_greedy, zigzag
   cost_model — cost-aware redistribution gate (delegates its formulas to
                admission's polymorphic implementations)

@@ -200,3 +200,59 @@ def tick(
     link = dict(link, metrics=metrics)
     new_link = advance(link, config)
     return new_link, routes_remote(new_link["state"])
+
+
+def tick_many(
+    link: Dict[str, jax.Array],
+    config: DySkewConfig,
+    *,
+    rows_this_tick: jax.Array,
+    sync_time_this_tick: jax.Array,
+    batch_density: jax.Array,
+    bytes_per_row: jax.Array,
+    signal_this_tick: jax.Array | None = None,
+    active: jax.Array | None = None,
+) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """:func:`tick` batched over a leading tenant axis: ONE call advances T
+    independent sibling groups (one per concurrent query/tenant).
+
+    ``link`` is the :func:`tick` pytree with every leaf stacked to a
+    leading (T, ...) axis — (T, n) vectors, (T, n, W) sync windows, (T,)
+    tick counters — and all metric/signal inputs are (T, n).  ``active``
+    is an optional (T,) bool: inactive rows (tenants that have not arrived
+    yet, or have drained) keep their prior state bit-for-bit and report an
+    all-False distribute mask, so callers can pad a fixed-capacity state
+    stack and mask the unused slots.
+
+    The per-tenant computation is ``jax.vmap`` of :func:`tick`, which on
+    the reductions involved (sibling sums over n, window sums over W) is
+    bit-identical per row to the unbatched call — the property the
+    simulator's equivalence pin relies on when it routes single-tenant
+    runs through the batched path (see `repro.sim.batched_link`).
+    """
+    if signal_this_tick is None:
+        signal_this_tick = jnp.zeros_like(rows_this_tick, dtype=bool)
+
+    def one(l, rows, sync, density, bpr, signal):
+        return tick(
+            l,
+            config,
+            rows_this_tick=rows,
+            sync_time_this_tick=sync,
+            batch_density=density,
+            bytes_per_row=bpr,
+            signal_this_tick=signal,
+        )
+
+    new_link, distribute = jax.vmap(one)(
+        link, rows_this_tick, sync_time_this_tick, batch_density,
+        bytes_per_row, signal_this_tick,
+    )
+    if active is not None:
+        def keep_inactive(new: jax.Array, old: jax.Array) -> jax.Array:
+            m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        new_link = jax.tree_util.tree_map(keep_inactive, new_link, link)
+        distribute = jnp.logical_and(distribute, active[:, None])
+    return new_link, distribute

@@ -1,17 +1,24 @@
 """Discrete-event simulator: the paper-faithful reproduction layer.
 
-engine   — ONE array-backed event loop (workers / adaptive links /
-           network) serving both the single-query API and N concurrent
-           tenants, with optional weighted fair-share admission
-legacy   — the seed list-of-tuples engine, kept as the equivalence
-           reference for the unified loop
-workload — synthetic suites matching the paper's evaluation scenarios,
-           plus open-loop arrival processes and interference traffic
-replay   — strategy comparison + aggregate statistics (single-tenant,
-           closed- and open-loop multi-tenant: per-class tails, Jain's
-           fairness), with optional process-pool fan-out
+engine       — ONE array-backed event loop (workers / adaptive links /
+               network) serving both the single-query API and N
+               concurrent tenants, with optional weighted fair-share
+               admission, batched state-machine ticks, and a closed-form
+               'none'-strategy fast path
+batched_link — (T, n) stacked link state: one jitted tick call advances
+               every tenant's state machines (the hundreds-of-tenants
+               scaling path)
+legacy       — the seed list-of-tuples engine, kept as the equivalence
+               reference for the unified loop
+workload     — synthetic suites matching the paper's evaluation
+               scenarios, plus open-loop arrival processes, interference
+               traffic and the many-tenants scaling mix
+replay       — strategy comparison + aggregate statistics (single-tenant,
+               closed- and open-loop multi-tenant: per-class tails,
+               Jain's fairness), with optional process-pool fan-out
 """
 
+from repro.sim.batched_link import BatchedLinkSim
 from repro.sim.engine import (
     Batch,
     ClusterConfig,
@@ -20,11 +27,13 @@ from repro.sim.engine import (
     Simulator,
     StrategyConfig,
     TenantQuery,
+    closed_form_none_result,
 )
 from repro.sim.workload import QueryProfile, generate_query
 
 __all__ = [
     "Batch",
+    "BatchedLinkSim",
     "ClusterConfig",
     "MultiQuerySimulator",
     "QueryProfile",
@@ -32,5 +41,6 @@ __all__ = [
     "Simulator",
     "StrategyConfig",
     "TenantQuery",
+    "closed_form_none_result",
     "generate_query",
 ]

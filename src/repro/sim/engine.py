@@ -69,6 +69,34 @@ Engine invariants (the bars `tests/test_sim_equivalence.py` enforces):
     is deterministic.  This is what lets `sim/replay.py` fan suites out
     across a process pool (``REPRO_BENCH_WORKERS`` pins the worker
     count; 0/1 = serial) with results identical to the serial run.
+
+Scaling to hundreds of tenants.  Two fast paths keep the loop cheap at
+large N, both governed by explicit flags on `MultiQuerySimulator` whose
+``None`` default enables them only where they are provably equivalent to
+the reference trajectory:
+
+  * Batched ticks (``batch_ticks``).  Per-tenant `AdaptiveLinkSim`
+    dispatch is replaced by ONE `repro.sim.batched_link.BatchedLinkSim`
+    call per shared tick: tenants with the same (DySkewConfig,
+    tick_interval) form a group whose (T, n) stacked link state advances
+    through a single jitted `tick_many`, driven by one coalesced heap
+    event per group cadence with inactive tenants masked.  A tenant
+    arriving off-grid gets a one-off masked join tick at its arrival (so
+    eager links distribute from row one) and then rides the shared grid.
+    ``None`` (auto) batches only when at most one tenant carries a link
+    — there the batched trajectory is bit-identical to the per-tenant
+    path (T=1 vmap rows are bit-exact; the equivalence pin runs through
+    it).  With many link tenants the shared grid quantizes tick times, a
+    deliberate semantic change, so multi-link batching is opt-in
+    (``batch_ticks=True`` — the bench's ``--many`` mode).
+  * Closed-form 'none' strategy (``none_closed_form``).  A tenant that
+    never redistributes keeps every producer's rows on its own worker,
+    so per-worker completion times collapse to a prefix sum over
+    service-chunk totals — no event loop needed.  ``None`` (auto) takes
+    the closed form only in the proven-exact regime (all tenants 'none',
+    no fair share, disjoint producers, single-batch streams);
+    ``True`` extends it to multi-batch streams, where it is exact while
+    workers stay backlogged and a lower bound otherwise.
 """
 
 from __future__ import annotations
@@ -85,6 +113,7 @@ import numpy as np
 from repro.core import state_machine
 from repro.core.admission import BatchAdmission, FairShareAdmission, FairShareConfig
 from repro.core.types import DySkewConfig, Policy
+from repro.sim.batched_link import BatchedLinkSim
 
 
 # --------------------------------------------------------------------- #
@@ -381,11 +410,69 @@ def _group_by_dest(
     return sd, starts, ends, costs[order], sizes[order]
 
 
+def closed_form_none_result(
+    tenant: "TenantQuery", cluster: ClusterConfig
+) -> QueryResult:
+    """Vectorized closed form for a 'none'-strategy tenant.
+
+    Without redistribution every producer's rows stay on its own worker,
+    so each worker is an independent FIFO server: its completion time is
+    the prefix sum of its service-chunk totals starting from the first
+    enqueue (arrival + first-batch serialization).  The float operations
+    mirror the event loop exactly — within-chunk ``cumsum`` reproduces the
+    loop's sequential python-float chunk sums, and the outer ``cumsum``
+    reproduces the heap's ``now + total`` accumulation — so the result is
+    bit-identical to the event loop whenever no worker idles mid-stream
+    and every service pop finds a full chunk queued.  Both hold trivially
+    for single-batch streams (the proven regime the engine auto-selects);
+    for multi-batch backlogged streams the result is exact up to chunk-
+    boundary rounding, and a lower bound if a worker would have idled.
+    """
+    c = cluster
+    n = c.num_workers
+    ser = c.per_row_serialize
+    busy = np.zeros(n)
+    last_done = tenant.arrival
+    for p, stream in enumerate(tenant.streams):
+        if not stream:
+            continue
+        costs = (
+            stream[0].costs if len(stream) == 1
+            else np.concatenate([b.costs for b in stream])
+        )
+        m = len(costs)
+        nchunks = -(-m // _SERVICE_CHUNK)
+        padded = np.zeros(nchunks * _SERVICE_CHUNK)
+        padded[:m] = costs
+        # Sequential within-chunk accumulation (the event loop's python
+        # sum), then sequential across chunks (the loop's now += total).
+        totals = np.cumsum(
+            padded.reshape(nchunks, _SERVICE_CHUNK), axis=1
+        )[:, -1]
+        first_enqueue = tenant.arrival + len(stream[0].costs) * ser
+        walk = np.cumsum(np.concatenate(([first_enqueue], totals)))
+        busy[p] = float(np.cumsum(totals)[-1])
+        completion = float(walk[-1])
+        if completion > last_done:
+            last_done = completion
+    latency = max(last_done - tenant.arrival, 1e-12)
+    return QueryResult(
+        latency=float(latency),
+        utilization=float(busy.sum() / (latency * n)),
+        bytes_moved_remote=0.0,
+        rows_redistributed=0,
+        redistribution_applied=False,
+        per_worker_busy=busy,
+        decision_overhead=0.0,
+        num_ticks=0,
+    )
+
+
 # --------------------------------------------------------------------- #
 # The simulator
 # --------------------------------------------------------------------- #
 
-_TICK, _ARRIVAL, _ENQUEUE, _DONE, _ADMITTED = 0, 1, 2, 3, 4
+_TICK, _ARRIVAL, _ENQUEUE, _DONE, _ADMITTED, _GTICK = 0, 1, 2, 3, 4, 5
 
 #: Rows per service burst (completion-ack granularity).
 _SERVICE_CHUNK = 16
@@ -449,17 +536,59 @@ class MultiQuerySimulator:
     layer: each batch arrival must clear the tenant's pool/NIC deficit
     before it is routed; over-share arrivals are parked and re-offered in
     round-robin order as completed service earns the tenant credit.
+
+    ``batch_ticks`` selects the tick driver: ``True`` stacks all link
+    tenants into shared `BatchedLinkSim` groups advanced by ONE jitted
+    call per coalesced tick event (the path that scales to hundreds of
+    tenants), ``False`` keeps one `AdaptiveLinkSim` per tenant on its own
+    cadence, and ``None`` (default) auto-selects batching only where it
+    is provably bit-identical (at most one link tenant).
+
+    ``none_closed_form`` selects the no-event-loop closed form for runs
+    whose tenants all use the 'none' strategy on disjoint producers:
+    ``None`` (default) applies it only in the proven-exact single-batch
+    regime, ``True`` forces it (exact while backlogged, else a lower
+    bound), ``False`` always runs the event loop.  See the module
+    docstring for the equivalence argument.
     """
 
     def __init__(
         self,
         cluster: ClusterConfig,
         fair_share: Optional[FairShareConfig] = None,
+        batch_ticks: Optional[bool] = None,
+        none_closed_form: Optional[bool] = None,
     ):
         # Fully deterministic given the tenants (streams/arrivals carry
         # their own seeds), so no RNG state is held here.
         self.cluster = cluster
         self.fair_share = fair_share
+        self.batch_ticks = batch_ticks
+        self.none_closed_form = none_closed_form
+
+    def _none_fast_path_ok(self, tenants: List[TenantQuery]) -> bool:
+        """True when the closed-form 'none' path may replace the loop."""
+        if self.none_closed_form is False or self.fair_share is not None:
+            return False
+        if not tenants:
+            return False
+        if any(t.strategy.kind != "none" for t in tenants):
+            return False
+        # Producers must be disjoint: a worker fed by two tenants serves
+        # an interleaved FIFO the per-tenant closed form cannot see.
+        seen = set()
+        for t in tenants:
+            for p, stream in enumerate(t.streams):
+                if stream:
+                    if p in seen:
+                        return False
+                    seen.add(p)
+        if self.none_closed_form:
+            return True
+        # Auto: only the regime where the closed form is provably
+        # bit-identical to the event loop (single-batch streams — no
+        # arrival pacing, no idle gaps, whole-stream chunk boundaries).
+        return all(len(s) <= 1 for t in tenants for s in t.streams)
 
     def _transfer_delay(self, src: int, dst: int, nbytes: float,
                         nrows: int) -> float:
@@ -469,6 +598,11 @@ class MultiQuerySimulator:
         c = self.cluster
         n = c.num_workers
         nq = len(tenants)
+
+        if self._none_fast_path_ok(tenants):
+            # No redistribution, disjoint producers: per-worker completion
+            # times are a prefix sum — skip the event loop entirely.
+            return [closed_form_none_result(t, c) for t in tenants]
 
         # Hot-loop locals: node lookup table, flat network constants, and
         # plain-Python scalar state (single-element numpy indexing is ~10x
@@ -490,11 +624,38 @@ class MultiQuerySimulator:
         strategies = [t.strategy for t in tenants]
         admissions = [t.strategy.admission() for t in tenants]
         streams = [t.streams for t in tenants]
-        links: List[Optional[AdaptiveLinkSim]] = [
-            AdaptiveLinkSim(t.strategy.dyskew, n)
-            if t.strategy.kind == "dyskew" else None
-            for t in tenants
-        ]
+        has_link = [t.strategy.kind == "dyskew" for t in tenants]
+        use_batched = self.batch_ticks
+        if use_batched is None:
+            # Auto: batch only where provably bit-identical to the
+            # per-tenant cadence — at most one tenant carries a link.
+            use_batched = sum(has_link) <= 1
+        links: List[Optional[AdaptiveLinkSim]] = [None] * nq
+        # Batched-tick groups: tenants sharing (DySkewConfig,
+        # tick_interval) ride one BatchedLinkSim and ONE coalesced grid
+        # tick event; entries are (sim, member qids, interval, origin).
+        groups: List[Tuple[BatchedLinkSim, List[int], float, float]] = []
+        group_of: Dict[int, int] = {}
+        if use_batched:
+            by_key: Dict[Tuple, List[int]] = {}
+            for q in range(nq):
+                if has_link[q]:
+                    key = (strategies[q].dyskew, strategies[q].tick_interval)
+                    by_key.setdefault(key, []).append(q)
+            for (cfg_g, interval), members in by_key.items():
+                origin = min(tenants[q].arrival for q in members)
+                for q in members:
+                    group_of[q] = len(groups)
+                groups.append((
+                    BatchedLinkSim(cfg_g, n, len(members)),
+                    members, interval, origin,
+                ))
+        else:
+            for q in range(nq):
+                if has_link[q]:
+                    links[q] = AdaptiveLinkSim(strategies[q].dyskew, n)
+        last_tick: List[Optional[float]] = [None] * nq
+        final_tick_done = [False] * nq
         distribute_mask = [[False] * n for _ in range(nq)]
         est_row_cost = [1e-3] * nq
         # Observable backlog: rows sent to each consumer minus rows acked
@@ -506,6 +667,26 @@ class MultiQuerySimulator:
         rows_arr_in_tick = [[0.0] * n for _ in range(nq)]
         batches_arr_in_tick = [[0.0] * n for _ in range(nq)]
         bytes_arr_in_tick = [[0.0] * n for _ in range(nq)]
+        # Batched groups keep their per-tick metric accumulators as rows
+        # of ONE contiguous (T, n) float64 array per group, so a grid
+        # tick consumes them with zero list→array conversion (the
+        # conversion dominated the coalesced tick at T≳128).  Event
+        # handlers mutate the same views through the per-tenant aliases;
+        # scalar `row[w] += x` is the identical IEEE float64 add the
+        # list path performs.
+        group_acc: List[Dict[str, np.ndarray]] = []
+        for sim_g, members, _, _ in groups:
+            acc = {
+                k: np.zeros((len(members), n))
+                for k in ("recv", "sync", "rows", "batches", "bytes")
+            }
+            group_acc.append(acc)
+            for i, q in enumerate(members):
+                recv_in_tick[q] = acc["recv"][i]
+                sync_in_tick[q] = acc["sync"][i]
+                rows_arr_in_tick[q] = acc["rows"][i]
+                batches_arr_in_tick[q] = acc["batches"][i]
+                bytes_arr_in_tick[q] = acc["bytes"][i]
         busy = [[0.0] * n for _ in range(nq)]
         rows_done = [[0] * n for _ in range(nq)]
         rr_counter = [0] * nq
@@ -535,10 +716,21 @@ class MultiQuerySimulator:
             heappush(events, (t, seq, kind, qid, who, payload))
             seq += 1
 
+        for g, (_, _, _, origin) in enumerate(groups):
+            # Grid tick first (lowest seq) so eager links distribute from
+            # row one for members arriving at the grid origin.
+            push(origin, _GTICK, g, 0, None)
         for q, t in enumerate(tenants):
             # Tick first (lower seq) so eager links distribute from row one.
             if links[q] is not None:
                 push(t.arrival, _TICK, q, 0, None)
+            elif use_batched and has_link[q]:
+                g = group_of[q]
+                if t.arrival > groups[g][3]:
+                    # Off-grid arrival: one-off masked join tick so this
+                    # tenant's eager link engages at arrival instead of
+                    # waiting for the next shared grid point.
+                    push(t.arrival, _GTICK, g, 0, q)
             for p, stream in enumerate(t.streams):
                 if stream:
                     push(t.arrival, _ARRIVAL, q, p, 0)
@@ -740,7 +932,7 @@ class MultiQuerySimulator:
                 rows_arr_in_tick[q][p] += b.num_rows
                 batches_arr_in_tick[q][p] += 1
                 bytes_arr_in_tick[q][p] += b.total_bytes
-                if links[q] is not None:
+                if has_link[q]:
                     dec_overhead[q] += st.decision_overhead
                     now += st.decision_overhead
                 route_batch(q, p, b, now)
@@ -754,7 +946,7 @@ class MultiQuerySimulator:
                     backpressure = max(0.0, bl - flow_window) * est_row_cost[q]
                     push(now + tenants[q].arrival_gap + backpressure,
                          _ARRIVAL, q, p, k + 1)
-            else:  # _TICK
+            elif kind == _TICK:
                 q = qid
                 num_ticks[q] += 1
                 rows_arr = np.asarray(rows_arr_in_tick[q])
@@ -780,6 +972,69 @@ class MultiQuerySimulator:
                 bytes_arr_in_tick[q] = [0.0] * n
                 if tenant_active(q):
                     push(now + strategies[q].tick_interval, _TICK, q, 0, None)
+            else:  # _GTICK — ONE coalesced tick drives a whole group
+                g = qid
+                sim_g, members, interval, _ = groups[g]
+                # A member participates while it has arrived, has not
+                # already ticked at this instant (join tick colliding with
+                # a grid point), and is active — plus exactly one
+                # post-drain tick, mirroring the per-tenant cadence where
+                # the already-scheduled tick still fires after drain.
+                if payload is None:
+                    live = [
+                        q for q in members
+                        if tenants[q].arrival <= now and last_tick[q] != now
+                        and (tenant_active(q) or not final_tick_done[q])
+                    ]
+                else:
+                    q = payload
+                    live = (
+                        [q] if last_tick[q] != now
+                        and (tenant_active(q) or not final_tick_done[q])
+                        else []
+                    )
+                if live:
+                    live_set = set(live)
+                    active = np.fromiter(
+                        (q in live_set for q in members), bool, len(members)
+                    )
+                    acc = group_acc[g]
+                    rows_arr = acc["rows"]
+                    batches_arr = acc["batches"]
+                    # Same elementwise formulas as the per-tenant tick,
+                    # lifted to (T, n) — bit-identical per row.
+                    density = np.where(
+                        batches_arr > 0,
+                        rows_arr / np.maximum(batches_arr, 1),
+                        0.0,
+                    )
+                    bpr = np.where(
+                        rows_arr > 0,
+                        acc["bytes"] / np.maximum(rows_arr, 1),
+                        0.0,
+                    )
+                    dist = sim_g.tick(
+                        acc["recv"], acc["sync"], density, bpr,
+                        np.asarray(worker_running, bool),
+                        active,
+                    )
+                    for i, q in enumerate(members):
+                        if not active[i]:
+                            continue
+                        num_ticks[q] += 1
+                        last_tick[q] = now
+                        distribute_mask[q] = dist[i].tolist()
+                        # Slice-assign: the per-tenant aliases must keep
+                        # viewing the group rows.
+                        recv_in_tick[q][:] = 0.0
+                        sync_in_tick[q][:] = 0.0
+                        rows_arr_in_tick[q][:] = 0.0
+                        batches_arr_in_tick[q][:] = 0.0
+                        bytes_arr_in_tick[q][:] = 0.0
+                        if not tenant_active(q):
+                            final_tick_done[q] = True
+                if payload is None and any(tenant_active(q) for q in members):
+                    push(now + interval, _GTICK, g, 0, None)
 
         results: List[QueryResult] = []
         for q, t in enumerate(tenants):

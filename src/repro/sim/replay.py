@@ -130,11 +130,30 @@ def _get_pool(workers: int) -> ProcessPoolExecutor:
     global _POOL, _POOL_WORKERS
     if _POOL is None or _POOL_WORKERS < workers:
         if _POOL is not None:
-            _POOL.shutdown(wait=False)
+            # Reap the replaced pool's processes before spawning the
+            # larger one — wait=False here leaked live spawned workers
+            # for the rest of the run.
+            _POOL.shutdown(wait=True)
         ctx = multiprocessing.get_context("spawn")
         _POOL = ProcessPoolExecutor(max_workers=workers, mp_context=ctx)
         _POOL_WORKERS = workers
     return _POOL
+
+
+def _discard_pool() -> None:
+    """Drop the cached pool after a failure so the next `_map_queries`
+    call rebuilds a fresh one.  Keeping the broken executor cached made a
+    single failure permanent: every later suite re-raised inside ``map``,
+    warned, and silently degraded to the serial path for the remainder of
+    the process."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None:
+        try:
+            _POOL.shutdown(wait=False, cancel_futures=True)
+        except Exception:
+            pass  # the executor may already be unusable/broken
+    _POOL = None
+    _POOL_WORKERS = 0
 
 
 def _map_queries(
@@ -144,7 +163,8 @@ def _map_queries(
 
     Queries are independent, so results are deterministic regardless of
     ``workers``; any pool failure (restricted sandboxes) falls back to the
-    serial path.
+    serial path for THIS call and discards the broken pool, so the next
+    call gets a fresh executor instead of inheriting the failure.
     """
     if workers and workers > 1 and len(tasks) > 1:
         try:
@@ -158,9 +178,10 @@ def _map_queries(
                 _get_pool(workers).map(_run_one_query, tasks, chunksize=chunk)
             )
         except Exception as e:  # pool infra failure (spawn blocked, OOM-killed worker)
+            _discard_pool()
             warnings.warn(
                 f"simulation pool failed ({type(e).__name__}: {e}); "
-                "re-running suite serially",
+                "re-running suite serially (pool reset for the next call)",
                 RuntimeWarning,
             )
     return [_run_one_query(t) for t in tasks]
@@ -171,16 +192,41 @@ def _warm_worker() -> bool:
     return True
 
 
-def warm_pool(workers: Optional[int]) -> None:
+def _surface_warm_failure(future) -> None:
+    """Done-callback for warm-up tasks: a worker that crashes during the
+    jax warm-import used to be silently dropped (futures discarded) and
+    resurfaced later as an opaque suite failure — surface it now."""
+    if future.cancelled():
+        # Pool torn down (e.g. _discard_pool after a map failure) before
+        # the warm task ran: not a worker crash, nothing to surface —
+        # and future.exception() would raise CancelledError here.
+        return
+    exc = future.exception()
+    if exc is not None:
+        warnings.warn(
+            f"pool warm-up worker failed ({type(exc).__name__}: {exc}); "
+            "parallel replay may fall back to serial",
+            RuntimeWarning,
+        )
+
+
+def warm_pool(workers: Optional[int]) -> list:
     """Kick off worker-process startup (jax import) in the background so
-    it overlaps the caller's own setup.  Non-blocking; best-effort."""
+    it overlaps the caller's own setup.  Non-blocking; best-effort.  The
+    warm-up futures are collected (and returned, mainly for tests): the
+    first crash is surfaced as a RuntimeWarning instead of being
+    swallowed."""
+    futures: list = []
     if workers and workers > 1:
         try:
             pool = _get_pool(workers)
             for _ in range(workers):
-                pool.submit(_warm_worker)
+                f = pool.submit(_warm_worker)
+                f.add_done_callback(_surface_warm_failure)
+                futures.append(f)
         except Exception:
             pass
+    return futures
 
 
 def run_suite(
@@ -319,10 +365,16 @@ def run_multi_tenant_ab(
 
 def jain_fairness(values: Sequence[float]) -> float:
     """Jain's fairness index (sum x)^2 / (n * sum x^2): 1.0 = perfectly
-    even, 1/n = one value holds everything.  Undefined sets score 1.0."""
+    even, 1/n = one value holds everything.
+
+    An empty or all-zero set (e.g. a run in which no query of a priority
+    class completed) has no defined fairness — there is nothing to share —
+    and returns NaN rather than crashing on the 0/0 or masquerading as
+    perfectly fair.  NaN propagates visibly through aggregations, which
+    is the point: a report showing NaN says 'no completions', not 1.0."""
     x = np.asarray(list(values), dtype=np.float64)
     if len(x) == 0 or not np.any(x):
-        return 1.0
+        return float("nan")
     return float(x.sum() ** 2 / (len(x) * (x ** 2).sum()))
 
 
@@ -391,26 +443,39 @@ def summarize_open_loop(
     classes: Dict[str, List[Tuple[float, float]]] = {}
     slowdowns: List[float] = []
     for t, r in zip(tenants, results):
+        cls = classes.setdefault(tenant_class(t), [])
+        if r is None:
+            # Tenant did not complete (aborted/partial run): its class
+            # still appears in the report, with n=0 and NaN stats.
+            continue
         ideal = max(ideal_latency(t, cluster), 1e-12)
         sd = r.latency / ideal
         slowdowns.append(sd)
-        classes.setdefault(tenant_class(t), []).append((r.latency, sd))
+        cls.append((r.latency, sd))
+    nan = float("nan")
     per_class: Dict[str, Dict[str, float]] = {}
     for name, vals in sorted(classes.items()):
         lat = np.array([v[0] for v in vals])
         sds = np.array([v[1] for v in vals])
+        # A class with zero completed queries reports NaN percentiles
+        # (np.percentile on an empty array raises) — NaN means 'no
+        # completions to measure', same convention as jain_fairness.
+        empty = len(vals) == 0
         per_class[name] = {
             "n": len(vals),
-            "p50": float(np.percentile(lat, 50)),
-            "p99": float(np.percentile(lat, 99)),
-            "p999": float(np.percentile(lat, 99.9)),
-            "mean": float(lat.mean()),
-            "mean_slowdown": float(sds.mean()),
+            "p50": nan if empty else float(np.percentile(lat, 50)),
+            "p99": nan if empty else float(np.percentile(lat, 99)),
+            "p999": nan if empty else float(np.percentile(lat, 99.9)),
+            "mean": nan if empty else float(lat.mean()),
+            "mean_slowdown": nan if empty else float(sds.mean()),
         }
     return {
         "per_class": per_class,
         "jain": jain_fairness(slowdowns),
-        "mean_latency": float(np.mean([r.latency for r in results])),
+        "mean_latency": (
+            float(np.mean([r.latency for r in results if r is not None]))
+            if any(r is not None for r in results) else nan
+        ),
     }
 
 
@@ -423,15 +488,23 @@ def run_open_loop(
     resolve: Callable[[QueryProfile], StrategyConfig] = dyskew_strategy,
     fair_share: Optional[FairShareConfig] = None,
     feed_factor: float = 2.0,
+    batch_ticks: Optional[bool] = None,
+    none_closed_form: Optional[bool] = None,
 ) -> Dict[str, object]:
     """One open-loop scenario end to end: materialize the arrival stream,
     run it on one shared cluster (optionally under fair-share admission),
-    and summarize per-class tails + fairness."""
+    and summarize per-class tails + fairness.  ``batch_ticks`` /
+    ``none_closed_form`` forward to :class:`MultiQuerySimulator` — the
+    many-tenant bench passes ``batch_ticks=True`` to drive hundreds of
+    tenants through one jitted tick per cadence."""
     tenants = open_loop_tenants(
         specs, cluster, resolve, process, num_queries, seed=seed,
         feed_factor=feed_factor,
     )
-    results = MultiQuerySimulator(cluster, fair_share=fair_share).run(tenants)
+    results = MultiQuerySimulator(
+        cluster, fair_share=fair_share, batch_ticks=batch_ticks,
+        none_closed_form=none_closed_form,
+    ).run(tenants)
     out = summarize_open_loop(tenants, results, cluster)
     out["tenants"] = tenants
     out["results"] = results

@@ -14,9 +14,11 @@ Beyond per-query profiles, this module also generates multi-tenant
 *traffic*: open-loop arrival processes (:class:`ArrivalProcess` /
 :func:`arrival_times` — Poisson and on/off burst-modulated Poisson,
 where query arrival times do NOT react to completions, the regime tail
-latency must be measured in) and cross-tenant interference scenarios
+latency must be measured in), cross-tenant interference scenarios
 (:func:`skew_interference_suite`, :func:`priority_class_suite`) for the
-fair-share admission studies in `sim/replay.py`.
+fair-share admission studies in `sim/replay.py`, and the
+hundreds-of-tenants scaling mix (:func:`many_tenants_suite`) that
+exercises the batched-tick engine path.
 
 Invariants:
 
@@ -343,6 +345,45 @@ def skew_interference_suite(
             mean_row_cost=float(10 ** rng.uniform(-3.4, -3.0)),
             cost_sigma=float(rng.uniform(0.3, 0.5)),
         ))
+    return out
+
+
+def many_tenants_suite(
+    num_tenants: int = 256, seed: int = 71
+) -> List[Tuple[QueryProfile, float]]:
+    """Hundreds-of-tenants open-loop mix: the scale regime (128–512
+    concurrent queries on one warehouse) where per-tenant state-machine
+    tick dispatch dominates the event loop and the batched
+    `repro.sim.batched_link.BatchedLinkSim` path is required.
+
+    Each tenant is deliberately small (a few hundred rows) so the
+    interesting cost is *breadth* — hundreds of live link state machines
+    ticking — not per-query depth.  One tenant in eight is a skewed
+    noisy neighbour; weights are uniform (the fair-share layer is
+    orthogonal to this scaling study).  Returns (profile, weight) pairs
+    for `replay.open_loop_tenants`, which cycles arrivals over them.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[Tuple[QueryProfile, float]] = []
+    for q in range(num_tenants):
+        if q % 8 == 0:  # sparse noisy neighbours keep links firing
+            out.append((QueryProfile(
+                name="many_skew",
+                n_rows=int(rng.integers(480, 768)),
+                mean_row_cost=float(10 ** rng.uniform(-2.7, -2.4)),
+                cost_sigma=float(rng.uniform(1.0, 1.5)),
+                partition_alpha=float(rng.uniform(0.6, 1.2)),
+                hot_fraction=float(rng.uniform(0.10, 0.25)),
+                batch_rows=64,
+            ), 1.0))
+        else:
+            out.append((QueryProfile(
+                name="many_bal",
+                n_rows=int(rng.integers(256, 512)),
+                mean_row_cost=float(10 ** rng.uniform(-3.0, -2.7)),
+                cost_sigma=float(rng.uniform(0.3, 0.6)),
+                batch_rows=64,
+            ), 1.0))
     return out
 
 

@@ -264,7 +264,44 @@ class TestOpenLoopWorkload:
     def test_jain_fairness_index_bounds(self):
         assert jain_fairness([1.0, 1.0, 1.0, 1.0]) == pytest.approx(1.0)
         assert jain_fairness([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
-        assert jain_fairness([]) == 1.0
+
+    def test_jain_fairness_undefined_inputs_are_nan(self):
+        """An empty or all-zero set has no defined fairness: NaN (meaning
+        'no completions to share'), not a crash and not a fake 1.0."""
+        assert np.isnan(jain_fairness([]))
+        assert np.isnan(jain_fairness([0.0, 0.0]))
+
+    def test_summarize_open_loop_handles_missing_completions(self):
+        """A priority class whose every query failed to complete (result
+        None) reports n=0 with NaN percentiles instead of crashing on an
+        empty-percentile / 0-division."""
+        from repro.sim.replay import summarize_open_loop
+        from repro.sim.workload import generate_query
+
+        cluster = ClusterConfig(num_nodes=2)
+        specs = priority_class_suite()
+        tenants = open_loop_tenants(
+            specs, cluster, dyskew_strategy,
+            ArrivalProcess(kind="poisson", rate=5.0), 4, seed=0,
+        )
+        # Nothing completed at all.
+        out = summarize_open_loop(tenants, [None] * len(tenants), cluster)
+        assert np.isnan(out["jain"]) and np.isnan(out["mean_latency"])
+        for stats in out["per_class"].values():
+            assert stats["n"] == 0
+            assert np.isnan(stats["p50"]) and np.isnan(stats["p999"])
+        # One class completed, the other did not: mixed report.
+        results = MultiQuerySimulator(cluster).run(tenants)
+        mixed = [
+            r if t.name.startswith("gold") else None
+            for t, r in zip(tenants, results)
+        ]
+        out2 = summarize_open_loop(tenants, mixed, cluster)
+        assert out2["per_class"]["bulk"]["n"] == 0
+        assert np.isnan(out2["per_class"]["bulk"]["p50"])
+        assert out2["per_class"]["gold"]["n"] > 0
+        assert np.isfinite(out2["per_class"]["gold"]["p50"])
+        assert np.isfinite(out2["jain"])
 
     def test_open_loop_tenants_cycle_specs(self):
         cluster = ClusterConfig(num_nodes=2)

@@ -1,18 +1,23 @@
 """Doc-link checker: verify that file/module references in the user-facing
-docs resolve against the working tree.
+docs resolve against the working tree, and that fenced command snippets
+actually parse.
 
 Scans README.md and docs/ARCHITECTURE.md for backtick-quoted tokens that
 look like repository paths (``src/repro/sim/engine.py``, ``docs/``,
 ``benchmarks/run.py``) or dotted repro modules (``repro.core.admission``)
 and fails with a non-zero exit listing every reference that does not
-exist.  Wired into ``make verify`` and ``benchmarks/run.py --check-docs``
-so the docs cannot silently rot as the tree moves.
+exist.  Fenced ``bash``/``sh``/``console`` blocks get a second pass: each
+command line must shlex-parse, ``python <file>`` arguments must exist,
+and ``make <target>`` targets must be defined in the Makefile.  Wired
+into ``make verify`` and ``benchmarks/run.py --check-docs`` so the docs
+cannot silently rot as the tree moves.
 """
 
 from __future__ import annotations
 
 import os
 import re
+import shlex
 import sys
 from typing import List, Tuple
 
@@ -80,15 +85,122 @@ def check(doc_paths: List[str] = DOCS) -> Tuple[int, List[str]]:
     return checked, failures
 
 
+_FENCE = re.compile(r"^```(\w*)\s*$")
+_SHELL_LANGS = {"bash", "sh", "shell", "console"}
+_ENV_ASSIGN = re.compile(r"^[A-Za-z_]\w*=\S*$")
+_MAKE_TARGET = re.compile(r"^([\w][\w.-]*)\s*:(?!=)", re.MULTILINE)
+
+
+def _makefile_targets() -> set:
+    path = os.path.join(ROOT, "Makefile")
+    if not os.path.isfile(path):
+        return set()
+    with open(path, encoding="utf-8") as f:
+        targets = set(_MAKE_TARGET.findall(f.read()))
+    targets.discard(".PHONY")
+    return targets
+
+
+def _check_command(tokens: List[str]) -> str:
+    """'' if the command looks runnable against this tree, else why not."""
+    # Skip env-var assignment prefixes (PYTHONPATH=src python ...).
+    i = 0
+    while i < len(tokens) and _ENV_ASSIGN.match(tokens[i]):
+        i += 1
+    if i >= len(tokens):
+        return ""
+    cmd, rest = tokens[i], tokens[i + 1:]
+    if cmd.startswith("python"):
+        for a in rest:
+            if a in ("-m", "-c"):  # module invocations are covered by
+                return ""          # the module-reference pass; -c has
+                                   # no file argument to resolve
+            if a.startswith("-"):
+                continue
+            if not os.path.isfile(os.path.join(ROOT, a)):
+                return f"script `{a}` does not exist"
+            return ""
+    elif cmd == "make":
+        targets = _makefile_targets()
+        for a in rest:
+            if not a.startswith("-") and "=" not in a and a not in targets:
+                return f"make target `{a}` not defined in Makefile"
+    return ""
+
+
+def check_snippets(doc_paths: List[str] = DOCS) -> Tuple[int, List[str]]:
+    """Verify fenced shell snippets: every command line must shlex-parse,
+    `python <file>` scripts must exist, `make <target>` targets must be
+    defined.  Returns (num_checked, failures)."""
+    checked = 0
+    failures: List[str] = []
+    for doc in doc_paths:
+        full = os.path.join(ROOT, doc)
+        if not os.path.isfile(full):
+            continue  # reported by check()
+        with open(full, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+        lang = None
+        pending = ""       # backslash-continued command being assembled
+        pending_ln = 0
+        for ln, line in enumerate(lines, 1):
+            m = _FENCE.match(line.strip())
+            if m:
+                lang = None if lang is not None else (m.group(1) or "text")
+                pending = ""
+                continue
+            if lang not in _SHELL_LANGS:
+                continue
+            cmd = line.strip()
+            if cmd.startswith("$ "):
+                cmd = cmd[2:]
+            elif lang == "console" and not pending:
+                # Console blocks interleave commands ('$ '-prefixed) with
+                # program output — output lines are not commands.
+                continue
+            if pending:
+                cmd = pending + " " + cmd
+                ln = pending_ln
+                pending = ""
+            if not cmd or cmd.startswith("#"):
+                continue
+            if cmd.endswith("\\"):
+                pending, pending_ln = cmd[:-1].rstrip(), ln
+                continue
+            checked += 1
+            try:
+                tokens = shlex.split(cmd)
+            except ValueError as e:
+                failures.append(f"{doc}:{ln}: snippet does not parse "
+                                f"({e}): {cmd!r}")
+                continue
+            # Compound commands: validate each segment between shell
+            # operators (shlex keeps `&&`/`|`/`;` as plain tokens).
+            segment: List[str] = []
+            for tok in tokens + ["&&"]:
+                if tok in ("&&", "||", "|", ";"):
+                    if segment:
+                        why = _check_command(segment)
+                        if why:
+                            failures.append(f"{doc}:{ln}: {why}: {cmd!r}")
+                    segment = []
+                else:
+                    segment.append(tok)
+    return checked, failures
+
+
 def main() -> int:
     checked, failures = check()
+    snip_checked, snip_failures = check_snippets()
+    failures += snip_failures
     if failures:
-        print(f"doc-link check FAILED ({len(failures)} unresolved, "
-              f"{checked} checked):")
+        print(f"doc check FAILED ({len(failures)} problems; {checked} "
+              f"references + {snip_checked} snippet lines checked):")
         for f in failures:
             print(f"  {f}")
         return 1
-    print(f"doc-link check OK ({checked} references resolve)")
+    print(f"doc check OK ({checked} references resolve, "
+          f"{snip_checked} snippet lines parse)")
     return 0
 
 
