@@ -18,4 +18,4 @@ bench:
 	$(PYTHON) benchmarks/run.py
 
 bench-quick:
-	$(PYTHON) benchmarks/run.py --quick
+	REPRO_BENCH_QUICK=1 $(PYTHON) benchmarks/run.py

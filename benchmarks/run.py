@@ -1,12 +1,15 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and records the run as
-machine-readable JSON (default ``BENCH_3.json`` in the repo root,
-``--json`` overrides) so the perf trajectory survives across PRs: per
+machine-readable JSON so the perf trajectory survives across PRs: per
 bench the wall time and every row with its derived key=value pairs
-(speedups vs legacy, tenant counts, ...) parsed into a dict.
-``--quick`` (or env REPRO_BENCH_QUICK=1) shrinks workloads for CI-speed
-runs.  Individual benches can be selected with ``--only <substring>``.
+(speedups vs legacy, tenant counts, ...) parsed into a dict.  The
+default output derives the NEXT free ``BENCH_<n>.json`` index in the
+repo root from the records already present (so each PR's run lands in a
+fresh, diffable file instead of clobbering the previous PR's baseline);
+``--out``/``--json`` pin an explicit path.  ``--quick`` (or env
+REPRO_BENCH_QUICK=1) shrinks workloads for CI-speed runs.  Individual
+benches can be selected with ``--only <substring>``.
 """
 
 from __future__ import annotations
@@ -15,6 +18,7 @@ import argparse
 import importlib
 import json
 import os
+import re
 import sys
 import time
 import traceback
@@ -50,6 +54,25 @@ def _jsonable(obj):
     return obj
 
 
+def _next_bench_json() -> str:
+    """Default record path: the next free ``BENCH_<n>.json`` index.
+
+    Previous PRs' records stay untouched, so the trajectory
+    (BENCH_3.json vs BENCH_4.json vs ...) is diffable from the repo
+    alone.  Explicit ``--out``/``--json`` always wins — use it when
+    iterating locally (repeated default runs each mint a fresh index;
+    only commit the record that represents the PR).  Records carry a
+    ``quick`` flag so a shrunken-workload run can never masquerade as a
+    full-run baseline when diffing.
+    """
+    indices = [0]
+    for name in os.listdir(_ROOT):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", name)
+        if m:
+            indices.append(int(m.group(1)))
+    return os.path.join(_ROOT, f"BENCH_{max(indices) + 1}.json")
+
+
 def _parse_derived(derived: str) -> dict:
     """Best-effort split of a row's derived string into key=value pairs
     (values parsed as float where they look numeric, trailing 'x'/'%'
@@ -78,10 +101,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     default=bool(os.environ.get("REPRO_BENCH_QUICK")))
     ap.add_argument("--only", type=str, default="")
-    ap.add_argument("--json", type=str,
-                    default=os.path.join(_ROOT, "BENCH_3.json"),
+    ap.add_argument("--json", "--out", dest="json", type=str, default=None,
                     help="where to write the machine-readable record of "
-                         "this run ('' disables)")
+                         "this run ('' disables; default: the next free "
+                         "BENCH_<n>.json in the repo root)")
     ap.add_argument("--check-docs", action="store_true",
                     help="run the README/ARCHITECTURE doc-link check "
                          "instead of the benches (see tools/check_docs.py)")
@@ -133,30 +156,25 @@ def main() -> None:
             print(f"{mod_name},0,FAILED")
             traceback.print_exc()
         record["benches"].append(entry)
-    default_json = ap.get_default("json")
-    demoting = bool(args.only)
-    if args.quick and not demoting and os.path.isfile(default_json):
-        # A quick run may refresh a quick record but must not clobber a
-        # full-run record; pass --json explicitly to force.
-        try:
-            with open(default_json, encoding="utf-8") as f:
-                demoting = json.load(f).get("quick") is False
-        except (OSError, ValueError):
-            pass
-    if args.json and demoting and args.json == default_json:
-        print(f"# partial/demoting run: not overwriting {default_json} "
-              "(pass --json to force)", file=sys.stderr)
-    elif args.json:
+    out_json = args.json
+    if out_json is None:
+        # A partial (--only) run would pollute the trajectory with an
+        # incomplete numbered record; require an explicit path for it.
+        out_json = "" if args.only else _next_bench_json()
+        if args.only:
+            print("# partial run (--only): no BENCH_<n>.json written "
+                  "(pass --out to force)", file=sys.stderr)
+    if out_json:
         record["total_wall_s"] = sum(
             b.get("wall_s", 0.0) for b in record["benches"]
         )
-        with open(args.json, "w", encoding="utf-8") as f:
+        with open(out_json, "w", encoding="utf-8") as f:
             # NaN is a legal bench value (e.g. Jain's index of a class
             # with zero completions) but not legal JSON — null it.
             json.dump(_jsonable(record), f, indent=2, sort_keys=True,
                       allow_nan=False)
             f.write("\n")
-        print(f"# wrote {args.json}", file=sys.stderr)
+        print(f"# wrote {out_json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -9,11 +9,12 @@ Public API:
                 vmaps it over a stacked (T, n) tenant axis with
                 inactive-row masking (the batched simulator tick)
   redistribution — round_robin (legacy baseline), lpt_greedy, zigzag
-  cost_model — cost-aware redistribution gate (delegates its formulas to
-               admission's polymorphic implementations)
-  admission — shared host-side admission planners: per-batch guards
-              (density guard, cost gate, self-skip eligibility) and the
-              weighted fair-share multi-tenant layer
+  admission — shared admission planning: per-batch guards (density
+              guard, cost gate, self-skip eligibility), the in-graph
+              redistribution gate (CostModelConfig /
+              admit_redistribution — polymorphic over numpy and jax, one
+              formula set for the host planners and the jitted step),
+              and the weighted fair-share multi-tenant layer
   adaptive_link.AdaptiveLink — the assembled adaptive data link
 """
 
@@ -21,10 +22,10 @@ from repro.core.adaptive_link import AdaptiveLink, AdaptiveLinkConfig
 from repro.core.admission import (
     AdmissionDecision,
     BatchAdmission,
+    CostModelConfig,
     FairShareAdmission,
     FairShareConfig,
 )
-from repro.core.cost_model import CostModelConfig
 from repro.core.types import (
     DySkewConfig,
     LinkState,

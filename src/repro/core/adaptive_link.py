@@ -2,7 +2,8 @@
 
 Ties together the per-instance state machines (`state_machine`), the skew
 models (`skew_models`), the routing planners (`redistribution`) and the
-cost gate (`cost_model`) for the generic setting:
+in-graph cost gate (`admission.admit_redistribution`) for the generic
+setting:
 
     n producer instances each hold a set of work items; each item has an
     estimated cost (seconds of downstream compute) and a size (bytes to
@@ -27,15 +28,16 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import cost_model as cm
-from repro.core import redistribution, state_machine
+from repro.core import admission, redistribution, state_machine
 from repro.core.types import DySkewConfig, RoutingPlan, link_state_init
 
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveLinkConfig:
     dyskew: DySkewConfig = dataclasses.field(default_factory=DySkewConfig)
-    cost: cm.CostModelConfig = dataclasses.field(default_factory=cm.CostModelConfig)
+    cost: admission.CostModelConfig = dataclasses.field(
+        default_factory=admission.CostModelConfig
+    )
     # Estimated per-item compute used for batch-density normalization when a
     # producer holds zero items this tick.
     num_instances: int = 8
@@ -148,8 +150,9 @@ class AdaptiveLink:
         loads_planned = jnp.zeros((n,), jnp.float32).at[dest].add(
             jnp.where(item_valid, item_costs, 0.0).astype(jnp.float32)
         )
-        ok, saved, t_move = cm.admit(
-            loads_before, loads_planned, bytes_moved, items_moved, self.config.cost
+        ok, saved, t_move = admission.admit_redistribution(
+            loads_before, loads_planned, bytes_moved, items_moved,
+            self.config.cost,
         )
         dest = jnp.where(ok, dest, item_producer).astype(jnp.int32)
 

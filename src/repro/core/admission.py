@@ -31,9 +31,9 @@ Invariants:
     arithmetic (:func:`transfer_seconds`, :func:`straggler_savings`,
     :func:`cost_gate_admits`) is written with plain operators only, so
     it is polymorphic over Python floats, numpy arrays AND jax arrays —
-    `repro.core.cost_model` (the in-graph gate used by
-    ``AdaptiveLink.step``) delegates to these same functions rather
-    than re-stating them.
+    the in-graph gate ``AdaptiveLink.step`` consults
+    (:class:`CostModelConfig` / :func:`admit_redistribution`, below)
+    runs the same functions under jit rather than re-stating them.
   * Determinism.  Neither planner draws randomness; given the same call
     sequence they return the same decisions, which is what lets the
     simulator's equivalence pins and the replay harness's process-pool
@@ -92,9 +92,65 @@ def cost_gate_admits(est_saved, est_transfer, cost_gate):
     saved strictly clears ``cost_gate`` times the estimated transfer
     time.  Written with plain operators so the SAME implementation runs
     on Python floats (simulator hot loop), numpy arrays, and jax traced
-    values (`repro.core.cost_model.admit` inside ``AdaptiveLink.step``).
+    values (:func:`admit_redistribution` inside ``AdaptiveLink.step``).
     """
     return est_saved > cost_gate * est_transfer
+
+
+# --------------------------------------------------------------------- #
+# In-graph redistribution gate (paper goal #3)
+# --------------------------------------------------------------------- #
+#
+# The cost-aware gate as consumed from inside a jitted step: it prices a
+# candidate redistribution in seconds on both sides —
+#
+#   transfer_time = bytes_moved / link_bandwidth
+#                 + items_moved * per_item_overhead    (serialize / RPC)
+#   time_saved    = current_makespan - balanced_makespan
+#
+# and admits iff time_saved > cost_gate * transfer_time.  On TPU the
+# 'network' is ICI (~50 GB/s/link); in the simulator it is the NIC.
+# Everything below is written with plain operators and array methods
+# (``.max()``, ``.astype``), so the SAME code runs on host numpy arrays
+# and on jax traced values — one formula set with the host-side planners
+# above, which is what keeps the in-graph gate from drifting.  (This
+# replaces the former `repro.core.cost_model` shim.)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelConfig:
+    link_bandwidth: float = 50e9     # bytes/s (TPU v5e ICI per link)
+    per_item_overhead: float = 5e-6  # s per moved item (serialize+route)
+    cost_gate: float = 1.0           # admit iff saved > gate * transfer
+
+
+def balance_benefit(loads_before, loads_after):
+    """Makespan reduction (seconds of straggler time removed), clamped
+    at zero.  Polymorphic over numpy and jax arrays."""
+    d = loads_before.max() - loads_after.max()
+    return d * (d > 0)
+
+
+def admit_redistribution(
+    loads_before,
+    loads_after,
+    bytes_moved,
+    items_moved,
+    cfg: CostModelConfig,
+):
+    """Full in-graph gate decision.
+
+    Returns ``(admit?, est_time_saved, est_transfer_time)``; operands may
+    be numpy arrays or jax traced values (``AdaptiveLink.step`` calls
+    this under jit)."""
+    saved = balance_benefit(loads_before, loads_after)
+    t_move = transfer_seconds(
+        bytes_moved.astype(np.float32),
+        items_moved.astype(np.float32),
+        cfg.link_bandwidth,
+        cfg.per_item_overhead,
+    )
+    return cost_gate_admits(saved, t_move, cfg.cost_gate), saved, t_move
 
 
 class BatchAdmission:

@@ -228,7 +228,9 @@ def tick_many(
     the reductions involved (sibling sums over n, window sums over W) is
     bit-identical per row to the unbatched call — the property the
     simulator's equivalence pin relies on when it routes single-tenant
-    runs through the batched path (see `repro.sim.batched_link`).
+    runs AND on-grid-arrival multi-link tenant groups through the
+    batched path (see `repro.sim.batched_link` and
+    `repro.sim.engine._arrivals_on_grid` for the full envelope).
     """
     if signal_this_tick is None:
         signal_this_tick = jnp.zeros_like(rows_this_tick, dtype=bool)

@@ -21,9 +21,13 @@ Key properties:
     shared tick cadence and simply masks who participates.
   * Bit-exact rows.  ``jax.vmap`` of the per-tenant tick is bit-identical
     per row to the unbatched `AdaptiveLinkSim` call on the reductions
-    involved (sibling sums over n, window sums over W), which is what
-    lets the engine default to the batched path for single-link-tenant
-    runs without disturbing the `tests/test_sim_equivalence.py` pin.
+    involved (sibling sums over n, window sums over W).  Combined with
+    on-grid arrivals (every member's arrival an exact value of the
+    group's chained tick grid — identical arrivals are the trivial
+    case), the whole multi-link group ticks at precisely its per-tenant
+    instants, which is why the engine's auto default batches such
+    groups without disturbing the `tests/test_sim_equivalence.py` pin;
+    see `engine._arrivals_on_grid` for the envelope check.
     `tests/test_batched_link.py` asserts state-for-state equality against
     T independent `AdaptiveLinkSim` instances across mixed cadences.
 """

@@ -70,10 +70,10 @@ Engine invariants (the bars `tests/test_sim_equivalence.py` enforces):
     across a process pool (``REPRO_BENCH_WORKERS`` pins the worker
     count; 0/1 = serial) with results identical to the serial run.
 
-Scaling to hundreds of tenants.  Two fast paths keep the loop cheap at
-large N, both governed by explicit flags on `MultiQuerySimulator` whose
-``None`` default enables them only where they are provably equivalent to
-the reference trajectory:
+Scaling to hundreds of tenants.  Several fast paths keep the loop cheap
+at large N, governed by flags on `MultiQuerySimulator` whose ``None``
+default enables them only where they are provably equivalent to the
+reference trajectory:
 
   * Batched ticks (``batch_ticks``).  Per-tenant `AdaptiveLinkSim`
     dispatch is replaced by ONE `repro.sim.batched_link.BatchedLinkSim`
@@ -83,12 +83,45 @@ the reference trajectory:
     event per group cadence with inactive tenants masked.  A tenant
     arriving off-grid gets a one-off masked join tick at its arrival (so
     eager links distribute from row one) and then rides the shared grid.
-    ``None`` (auto) batches only when at most one tenant carries a link
-    — there the batched trajectory is bit-identical to the per-tenant
-    path (T=1 vmap rows are bit-exact; the equivalence pin runs through
-    it).  With many link tenants the shared grid quantizes tick times, a
-    deliberate semantic change, so multi-link batching is opt-in
-    (``batch_ticks=True`` — the bench's ``--many`` mode).
+    ``None`` (auto) decides PER GROUP, batching exactly the proven
+    envelope: a single-member group (its grid IS its cadence), or a
+    multi-link group whose every member arrives exactly on the group's
+    chained tick grid (`_arrivals_on_grid`; identical arrivals are the
+    trivial case) — then each member ticks at precisely its per-tenant
+    instants and the vmap rows are bit-exact, so the trajectory is
+    bit-identical to the per-tenant path.  Off-grid multi-link groups
+    fall back to per-tenant links under auto, because the shared grid
+    would quantize their tick times; ``batch_ticks=True`` forces them.
+    `sim/replay.py::open_loop_tenants(grid_align=...)` snaps open-loop
+    arrivals onto the grid so whole suites batch by default.
+  * Batched same-instant routing.  A maximal run of arrival events at
+    one timestamp is routed through ONE `waterfill_counts_many` call
+    per cascade level: different tenants' same-instant batches are
+    independent (backlog, estimate and masks are per-tenant), while
+    same-tenant batches cascade through its own ``outstanding`` backlog
+    and form sequential levels.  All side effects (fair-share
+    admission, NIC occupancy, pushes, pacing) apply in heap pop order,
+    and same-(time, destination) _ENQUEUE pushes coalesce into one heap
+    event whose segments replay individually at pop — bit-identical to
+    uncoalesced events.
+  * Closed-form drain (``closed_form_drain``).  Once every arrival has
+    been routed (checked conservatively: the per-tenant remaining
+    counters, which also cover fair-share-parked work, all hit zero),
+    no state-machine transition can change the result — routing is the
+    only consumer of distribute masks and cost estimates — and workers
+    become independent FIFO servers.  The loop exits the heap and
+    finishes each worker exactly: a short per-event replay while
+    transfers are in flight, then one prefix-sum walk over the loaded
+    ring (generalizing `closed_form_none_result`'s bit-order-exact
+    accumulation to the mixed-strategy endgame); pending tick cadences
+    reduce to closed-form counting (exact up to the constructed-only
+    case of a tick time EXACTLY equalling a completion time in float,
+    where the closed form's documented tie convention can differ from
+    the heap's seq tie-break by one num_ticks — telemetry only).
+    ``False`` replays the heap to exhaustion instead (the A/B the bench
+    reports).  While any arrival is pending — i.e. while a link
+    transition could still affect a routing decision — the heap always
+    runs.
   * Closed-form 'none' strategy (``none_closed_form``).  A tenant that
     never redistributes keeps every producer's rows on its own worker,
     so per-worker completion times collapse to a prefix sum over
@@ -97,6 +130,13 @@ the reference trajectory:
     no fair share, disjoint producers, single-batch streams);
     ``True`` extends it to multi-batch streams, where it is exact while
     workers stay backlogged and a lower bound otherwise.
+
+Per-event hygiene: the density guard's idle-sibling fraction comes from
+an incrementally-maintained idle-worker census (not an O(n) scan per
+batch), and every run records per-kind event counters in
+``MultiQuerySimulator.last_event_counts`` (heap pops by kind, arrivals
+coalesced, enqueues coalesced, batched waterfill rows, drain stats) —
+the bench surfaces them so event-count reductions are directly visible.
 """
 
 from __future__ import annotations
@@ -272,6 +312,36 @@ class AdaptiveLinkSim:
 # --------------------------------------------------------------------- #
 
 
+def _waterfill_repair(
+    bl: np.ndarray, counts: np.ndarray, diff: int, finite: np.ndarray,
+    unit: float,
+) -> np.ndarray:
+    """Repair the floor rounding of a closed-form waterfill in place.
+
+    Shared verbatim between the scalar :func:`waterfill_counts` and the
+    batched :func:`waterfill_counts_many` (which calls it per row needing
+    repair), so the two are bit-identical by construction — including the
+    argmax/argsort tie-breaking that a re-implementation would have to
+    replicate exactly.
+    """
+    while diff > 0:
+        # Trim one item at a time from the currently most-loaded bin —
+        # bulk-trimming a single bin un-levels the fill (hypothesis-found).
+        loads = np.where(counts > 0, bl + counts * unit, -np.inf)
+        d = int(np.argmax(loads))
+        counts[d] -= 1
+        diff -= 1
+    if diff < 0:
+        order = np.argsort(np.where(finite, bl + counts * unit, np.inf))
+        ne = int(finite.sum())
+        i = 0
+        while diff < 0:
+            counts[order[i % ne]] += 1
+            diff += 1
+            i += 1
+    return counts
+
+
 def waterfill_counts(backlog: np.ndarray, k: int, unit: float) -> np.ndarray:
     """Assign ``k`` unit-cost rows to bins so resulting loads are as level
     as possible (vectorized least-backlog greedy for identical costs).
@@ -280,7 +350,8 @@ def waterfill_counts(backlog: np.ndarray, k: int, unit: float) -> np.ndarray:
     backlogs submerged, level_j = (k*unit + sum of those backlogs) / j; the
     true level is the largest j consistent with its own submerged set) and
     the integer counts are floored from it, so no bisection loop is needed;
-    the trim/top-up passes below repair the floor rounding exactly.
+    the trim/top-up passes of `_waterfill_repair` fix the floor rounding
+    exactly.
     """
     n = len(backlog)
     finite = np.isfinite(backlog)
@@ -298,22 +369,63 @@ def waterfill_counts(backlog: np.ndarray, k: int, unit: float) -> np.ndarray:
     counts[~finite] = 0
     counts = counts.astype(np.int64)
     diff = int(counts.sum()) - k
-    while diff > 0:
-        # Trim one item at a time from the currently most-loaded bin —
-        # bulk-trimming a single bin un-levels the fill (hypothesis-found).
-        loads = np.where(counts > 0, bl + counts * unit, -np.inf)
-        d = int(np.argmax(loads))
-        counts[d] -= 1
-        diff -= 1
-    if diff < 0:
-        order = np.argsort(np.where(finite, bl + counts * unit, np.inf))
-        ne = int(finite.sum())
-        i = 0
-        while diff < 0:
-            counts[order[i % ne]] += 1
-            diff += 1
-            i += 1
+    if diff:
+        counts = _waterfill_repair(bl, counts, diff, finite, unit)
     return counts
+
+
+def waterfill_counts_many(
+    backlogs: np.ndarray, ks: np.ndarray, units: np.ndarray
+) -> np.ndarray:
+    """:func:`waterfill_counts` batched over a leading axis: row ``b`` of
+    the (B, n) result equals ``waterfill_counts(backlogs[b], ks[b],
+    units[b])`` bit-for-bit.
+
+    The closed-form level is solved for every row at once (one (B, n)
+    sort + cumsum instead of B scalar calls; rows pad their non-finite
+    backlogs with +inf so the sorted prefix — and hence the cumsum prefix
+    the level formula reads — matches the scalar compacted sort exactly),
+    and the rank-based trim/top-up repair runs only on the rows whose
+    floored counts missed ``k`` — through the SAME `_waterfill_repair`
+    the scalar path uses, so tie-breaking cannot drift.
+    """
+    bl = np.asarray(backlogs, np.float64)
+    B, n = bl.shape
+    ks = np.asarray(ks, np.int64)
+    units = np.asarray(units, np.float64)
+    finite = np.isfinite(bl)
+    ne = finite.sum(axis=1)
+    out = np.zeros((B, n), np.int64)
+    live = (ks > 0) & (ne > 0)
+    # Degenerate rows: k == 0 → all zeros; no finite bin → everything on
+    # bin 0 (same as the scalar fallback).
+    none_finite = (ks > 0) & (ne == 0)
+    out[none_finite, 0] = ks[none_finite]
+    if not live.any():
+        return out
+    padded = np.where(finite, bl, np.inf)
+    blf = np.sort(padded, axis=1)
+    with np.errstate(invalid="ignore"):
+        levels = (
+            ks[:, None] * units[:, None] + np.cumsum(blf, axis=1)
+        ) / np.arange(1, n + 1)
+        cond = (levels >= blf) & (np.arange(n) < ne[:, None])
+    j = n - 1 - np.argmax(cond[:, ::-1], axis=1)  # last True per row
+    level = levels[np.arange(B), j]
+    with np.errstate(invalid="ignore"):
+        counts = np.floor(
+            np.maximum(level[:, None] - bl, 0.0) / units[:, None]
+        )
+    counts[~finite] = 0.0
+    counts[~live] = 0.0
+    counts = counts.astype(np.int64)
+    diffs = counts.sum(axis=1) - np.where(live, ks, 0)
+    for b in np.flatnonzero(diffs):
+        counts[b] = _waterfill_repair(
+            bl[b], counts[b], int(diffs[b]), finite[b], float(units[b])
+        )
+    out[live] = counts[live]
+    return out
 
 
 class _RowRing:
@@ -474,8 +586,43 @@ def closed_form_none_result(
 
 _TICK, _ARRIVAL, _ENQUEUE, _DONE, _ADMITTED, _GTICK = 0, 1, 2, 3, 4, 5
 
+_KIND_NAMES = ("tick", "arrival", "enqueue", "done", "admitted", "gtick")
+
 #: Rows per service burst (completion-ack granularity).
 _SERVICE_CHUNK = 16
+
+#: Sentinel: route_batch computes the destinations itself (no precomputed
+#: waterfill plan from a coalesced same-time arrival run).
+_RB_INLINE = object()
+
+
+def _arrivals_on_grid(
+    arrivals: List[float], interval: float, max_steps: int = 1 << 20
+) -> bool:
+    """True when every arrival lies exactly on the chained float grid
+    ``origin, origin+I, (origin+I)+I, ...`` that the engine's coalesced
+    group tick walks (``push(now + interval)`` from the earliest arrival).
+
+    This is the provable batched-tick equivalence condition for a
+    multi-link tenant group: a member arriving at a chained grid value
+    ticks at exactly the instants its per-tenant cadence would (both
+    chains advance by single float additions of ``interval`` from equal
+    values), so the shared grid quantizes nothing.  Identical arrivals
+    are the trivial case (every arrival IS the origin).  The check is
+    exact float equality — conservative by construction.
+    """
+    uniq = sorted(set(arrivals))
+    t = uniq[0]
+    steps = 0
+    for a in uniq[1:]:
+        while t < a:
+            t += interval
+            steps += 1
+            if steps > max_steps:
+                return False
+        if t != a:
+            return False
+    return True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -541,15 +688,23 @@ class MultiQuerySimulator:
     tenants into shared `BatchedLinkSim` groups advanced by ONE jitted
     call per coalesced tick event (the path that scales to hundreds of
     tenants), ``False`` keeps one `AdaptiveLinkSim` per tenant on its own
-    cadence, and ``None`` (default) auto-selects batching only where it
-    is provably bit-identical (at most one link tenant).
+    cadence, and ``None`` (default) auto-selects batching PER GROUP
+    where it is provably bit-identical: single-member groups and
+    multi-link groups whose members all arrive exactly on the group's
+    chained tick grid (identical arrivals included — see
+    `_arrivals_on_grid`).
+
+    ``closed_form_drain`` (default on; ``False`` disables) exits the
+    heap once every arrival has been routed and finishes each worker by
+    bit-order-exact prefix sums, recovering the remaining tick counts in
+    closed form — the endgame of every run stops paying per-event cost.
 
     ``none_closed_form`` selects the no-event-loop closed form for runs
     whose tenants all use the 'none' strategy on disjoint producers:
     ``None`` (default) applies it only in the proven-exact single-batch
     regime, ``True`` forces it (exact while backlogged, else a lower
     bound), ``False`` always runs the event loop.  See the module
-    docstring for the equivalence argument.
+    docstring for the equivalence arguments.
     """
 
     def __init__(
@@ -558,6 +713,7 @@ class MultiQuerySimulator:
         fair_share: Optional[FairShareConfig] = None,
         batch_ticks: Optional[bool] = None,
         none_closed_form: Optional[bool] = None,
+        closed_form_drain: Optional[bool] = None,
     ):
         # Fully deterministic given the tenants (streams/arrivals carry
         # their own seeds), so no RNG state is held here.
@@ -565,6 +721,11 @@ class MultiQuerySimulator:
         self.fair_share = fair_share
         self.batch_ticks = batch_ticks
         self.none_closed_form = none_closed_form
+        self.closed_form_drain = closed_form_drain
+        #: Per-kind event counters of the most recent `run` (heap events
+        #: popped by kind, coalescing stats, drain stats).  Telemetry
+        #: only — reported by `benchmarks/bench_multi_tenant.py`.
+        self.last_event_counts: Dict[str, int] = {}
 
     def _none_fast_path_ok(self, tenants: List[TenantQuery]) -> bool:
         """True when the closed-form 'none' path may replace the loop."""
@@ -602,6 +763,7 @@ class MultiQuerySimulator:
         if self._none_fast_path_ok(tenants):
             # No redistribution, disjoint producers: per-worker completion
             # times are a prefix sum — skip the event loop entirely.
+            self.last_event_counts = {"none_closed_form_tenants": nq}
             return [closed_form_none_result(t, c) for t in tenants]
 
         # Hot-loop locals: node lookup table, flat network constants, and
@@ -619,30 +781,42 @@ class MultiQuerySimulator:
         rings = [_RowRing(track_qids=nq > 1) for _ in range(n)]
         worker_running = [False] * n
         nic_free_at = [0.0] * c.num_nodes
+        # Incrementally-maintained idle-worker census (a worker is idle
+        # iff it is not running and its ring is empty).  Replaces the
+        # per-batch O(n) sibling scan the density guard used to pay.
+        worker_idle = [True] * n
+        idle_count = n
 
         # Per-tenant state (outer index = tenant).
         strategies = [t.strategy for t in tenants]
         admissions = [t.strategy.admission() for t in tenants]
         streams = [t.streams for t in tenants]
         has_link = [t.strategy.kind == "dyskew" for t in tenants]
-        use_batched = self.batch_ticks
-        if use_batched is None:
-            # Auto: batch only where provably bit-identical to the
-            # per-tenant cadence — at most one tenant carries a link.
-            use_batched = sum(has_link) <= 1
         links: List[Optional[AdaptiveLinkSim]] = [None] * nq
         # Batched-tick groups: tenants sharing (DySkewConfig,
         # tick_interval) ride one BatchedLinkSim and ONE coalesced grid
         # tick event; entries are (sim, member qids, interval, origin).
+        # ``batch_ticks=None`` (auto) decides PER GROUP: a group batches
+        # when it is provably bit-identical to the per-tenant cadence —
+        # a single member (its grid IS its cadence), or every member
+        # arriving exactly on the group's chained tick grid (see
+        # `_arrivals_on_grid`; identical arrivals are the trivial case).
+        # Groups failing the check fall back to per-tenant links.
         groups: List[Tuple[BatchedLinkSim, List[int], float, float]] = []
         group_of: Dict[int, int] = {}
-        if use_batched:
-            by_key: Dict[Tuple, List[int]] = {}
-            for q in range(nq):
-                if has_link[q]:
-                    key = (strategies[q].dyskew, strategies[q].tick_interval)
-                    by_key.setdefault(key, []).append(q)
-            for (cfg_g, interval), members in by_key.items():
+        by_key: Dict[Tuple, List[int]] = {}
+        for q in range(nq):
+            if has_link[q]:
+                key = (strategies[q].dyskew, strategies[q].tick_interval)
+                by_key.setdefault(key, []).append(q)
+        for (cfg_g, interval), members in by_key.items():
+            if self.batch_ticks is None:
+                batch_group = len(members) == 1 or _arrivals_on_grid(
+                    [tenants[q].arrival for q in members], interval
+                )
+            else:
+                batch_group = self.batch_ticks
+            if batch_group:
                 origin = min(tenants[q].arrival for q in members)
                 for q in members:
                     group_of[q] = len(groups)
@@ -650,12 +824,28 @@ class MultiQuerySimulator:
                     BatchedLinkSim(cfg_g, n, len(members)),
                     members, interval, origin,
                 ))
-        else:
-            for q in range(nq):
-                if has_link[q]:
+            else:
+                for q in members:
                     links[q] = AdaptiveLinkSim(strategies[q].dyskew, n)
-        last_tick: List[Optional[float]] = [None] * nq
-        final_tick_done = [False] * nq
+        # Per-group member state as contiguous arrays (the per-tick live
+        # scan used to rebuild python lists per event — at T≳128 that
+        # dominated the coalesced tick's host cost).
+        member_slot: Dict[int, Tuple[int, int]] = {}
+        grp_members_arr: List[np.ndarray] = []
+        grp_arrival: List[np.ndarray] = []
+        grp_last_tick: List[np.ndarray] = []
+        grp_active: List[np.ndarray] = []
+        grp_final: List[np.ndarray] = []
+        for g, (_, members, _, _) in enumerate(groups):
+            for i, q in enumerate(members):
+                member_slot[q] = (g, i)
+            grp_members_arr.append(np.asarray(members, np.int64))
+            grp_arrival.append(
+                np.asarray([tenants[q].arrival for q in members])
+            )
+            grp_last_tick.append(np.full(len(members), np.nan))
+            grp_active.append(np.ones(len(members), bool))
+            grp_final.append(np.zeros(len(members), bool))
         distribute_mask = [[False] * n for _ in range(nq)]
         est_row_cost = [1e-3] * nq
         # Observable backlog: rows sent to each consumer minus rows acked
@@ -693,13 +883,38 @@ class MultiQuerySimulator:
         bytes_moved = [0.0] * nq
         rows_redist = [0] * nq
         dec_overhead = [0.0] * nq
-        num_ticks = [0] * nq
+        num_ticks = np.zeros(nq, np.int64)
         remaining_arrivals = [sum(len(s) for s in t.streams) for t in tenants]
+        total_remaining = sum(remaining_arrivals)
         rows_total = [
             sum(b.num_rows for s in t.streams for b in s) for t in tenants
         ]
         rows_completed = [0] * nq
         last_done = [t.arrival for t in tenants]
+        # tenant_active(q), maintained incrementally: flips False exactly
+        # once — at the _DONE event completing the tenant's last row
+        # after its arrivals are exhausted, or at the tenant's last
+        # arrival when there is no row left to complete (zero-row
+        # batches), matching the old live recomputation at both
+        # observation points.
+        active_flag = [
+            remaining_arrivals[q] > 0 or rows_completed[q] < rows_total[q]
+            for q in range(nq)
+        ]
+        for q, slot in member_slot.items():
+            grp_active[slot[0]][slot[1]] = active_flag[q]
+        # Closed-form drain: once every arrival has been routed, nothing
+        # a state machine does can change the result (routing is the only
+        # consumer of distribute masks / cost estimates), so the heap can
+        # be exited and each worker finished by prefix sums.
+        drain_on = self.closed_form_drain is not False
+        drained = False
+        # Event telemetry (self.last_event_counts).
+        tick_n = gtick_n = arrival_n = admitted_n = enq_n = done_n = 0
+        arrival_runs = arrivals_in_runs = enq_coalesced = 0
+        wf_calls = wf_rows = 0
+        drained_events = drained_chunks = drained_ticks = 0
+        elig_cache: Dict[Tuple[int, int], np.ndarray] = {}
 
         planner: Optional[FairShareAdmission] = None
         parked: List[Deque[Tuple[int, int]]] = [deque() for _ in range(nq)]
@@ -724,7 +939,7 @@ class MultiQuerySimulator:
             # Tick first (lower seq) so eager links distribute from row one.
             if links[q] is not None:
                 push(t.arrival, _TICK, q, 0, None)
-            elif use_batched and has_link[q]:
+            elif q in group_of:
                 g = group_of[q]
                 if t.arrival > groups[g][3]:
                     # Off-grid arrival: one-off masked join tick so this
@@ -734,12 +949,6 @@ class MultiQuerySimulator:
             for p, stream in enumerate(t.streams):
                 if stream:
                     push(t.arrival, _ARRIVAL, q, p, 0)
-
-        def tenant_active(q: int) -> bool:
-            return (
-                remaining_arrivals[q] > 0
-                or rows_completed[q] < rows_total[q]
-            )
 
         def start_worker(w: int, now: float):
             if worker_running[w]:
@@ -765,59 +974,99 @@ class MultiQuerySimulator:
             push(now + total, _DONE, 0, w, payload)
 
         def siblings_idle_frac(p: int) -> float:
-            idle = 0
-            for w in range(n):
-                if w != p and not worker_running[w] and rings[w].tail == rings[w].head:
-                    idle += 1
+            # Incremental census: same value the O(n) scan produced.
+            idle = idle_count - (1 if worker_idle[p] else 0)
             return idle / max(n - 1, 1)
 
-        def route_batch(q: int, p: int, b: Batch, now: float) -> None:
+        def eligible(q: int, p: int) -> np.ndarray:
+            mask = elig_cache.get((q, p))
+            if mask is None:
+                mask = admissions[q].eligible_destinations(n, p, c.node_of)
+                elig_cache[(q, p)] = mask
+            return mask
+
+        # The dyskew per-batch pipeline pieces, each defined ONCE and
+        # consulted by both the scalar `route_batch` path and the
+        # coalesced run's phase-1 planner — guard ordering, backlog
+        # formula and gate inputs cannot drift between the two.
+
+        def density_blocks(q: int, p: int, b: Batch) -> bool:
+            # Row Size Model admission guard (§III.B): low batch density
+            # + no skew benefit visible → keep the heavy rows local.
+            bpr = b.total_bytes / max(b.num_rows, 1)
+            return admissions[q].density_guard_blocks(
+                b.num_rows, bpr, lambda: siblings_idle_frac(p)
+            )
+
+        def waterfill_backlog(q: int, p: int, out_vec) -> np.ndarray:
+            """Waterfill inputs for tenant ``q`` routing from ``p``
+            against ``out_vec`` — the live outstanding list (scalar
+            path) or the run planner's shadow copy (same values)."""
+            bl = np.asarray(out_vec) * est_row_cost[q]
+            if strategies[q].dyskew.self_skip:
+                # Forced-remote ablation (§III.B): the producer must
+                # bypass its own node's interpreters entirely (Fig. 1 —
+                # redistribution targets interpreters on *other* VW
+                # nodes), leaving local CPU idle.
+                bl = np.where(eligible(q, p), bl, np.inf)
+            return bl
+
+        def waterfill_unit(q: int) -> float:
+            return max(est_row_cost[q], 1e-9)
+
+        def gate_rejects(q: int, p: int, b: Batch,
+                         dests: np.ndarray) -> bool:
+            # Cost gate (§I goal 3): refuse when estimated movement time
+            # exceeds estimated straggler savings.
+            if not strategies[q].enable_cost_gate:
+                return False
+            moving = dests != p
+            dec = admissions[q].admit_move(
+                float(b.sizes[moving].sum()), int(moving.sum()),
+                est_row_cost[q], n, net_bw, ser,
+            )
+            return not dec.admit
+
+        def route_batch(
+            q: int, p: int, b: Batch, now: float,
+            dests_pre: object = _RB_INLINE,
+            emit: Optional[Callable] = None,
+        ) -> None:
+            """Route one batch at virtual time ``now``.
+
+            ``dests_pre`` is either the `_RB_INLINE` sentinel (compute the
+            destinations here — the scalar path) or a precomputed plan
+            from a coalesced same-time arrival run (None = keep local, an
+            array = the batched-waterfill destinations, guards already
+            applied).  ``emit`` redirects the _ENQUEUE pushes into the
+            run's coalescing buffer instead of the heap.
+            """
             st = strategies[q]
-            cfg = st.dyskew
-            admission = admissions[q]
             out_q = outstanding[q]
-            dests: Optional[np.ndarray] = None
-            if st.kind == "static_rr":
+            if dests_pre is not _RB_INLINE:
+                dests = dests_pre
+            elif st.kind == "static_rr":
                 dests = (rr_counter[q] + np.arange(b.num_rows)) % n
                 rr_counter[q] += b.num_rows
-            elif distribute_mask[q][p]:
-                # Row Size Model admission guard (§III.B): low batch density
-                # + no skew benefit visible → keep the heavy rows local.
-                bpr = b.total_bytes / max(b.num_rows, 1)
-                if not admission.density_guard_blocks(
-                    b.num_rows, bpr, lambda: siblings_idle_frac(p)
-                ):
-                    bl = np.asarray(out_q) * est_row_cost[q]
-                    if cfg.self_skip:
-                        # Forced-remote ablation (§III.B): the producer must
-                        # bypass its own node's interpreters entirely
-                        # (Fig. 1 — redistribution targets interpreters on
-                        # *other* VW nodes), leaving local CPU idle.
-                        bl = np.where(
-                            admission.eligible_destinations(n, p, c.node_of),
-                            bl, np.inf,
-                        )
+            else:
+                dests = None
+                if distribute_mask[q][p] and not density_blocks(q, p, b):
                     counts = waterfill_counts(
-                        bl, b.num_rows, max(est_row_cost[q], 1e-9)
+                        waterfill_backlog(q, p, out_q), b.num_rows,
+                        waterfill_unit(q),
                     )
                     dests = np.repeat(np.arange(n), counts)
-                    if st.enable_cost_gate:
-                        # Cost gate (§I goal 3): refuse when estimated
-                        # movement time exceeds estimated straggler savings.
-                        moving = dests != p
-                        dec = admission.admit_move(
-                            float(b.sizes[moving].sum()), int(moving.sum()),
-                            est_row_cost[q], n,
-                            net_bw, ser,
-                        )
-                        if not dec.admit:
-                            dests = None
+                    if gate_rejects(q, p, b, dests):
+                        dests = None
 
             if dests is None:
                 # All-local fast path (no redistribution this batch):
                 # in-process pipeline, serialization delay only.
                 nrows = b.num_rows
-                push(now + nrows * ser, _ENQUEUE, q, p, b.costs)
+                if emit is None:
+                    push(now + nrows * ser, _ENQUEUE, q, p, b.costs)
+                else:
+                    emit(now + nrows * ser, q, p, b.costs)
                 out_q[p] += nrows
                 return
             sd, starts, ends, costs_s, sizes_s = _group_by_dest(
@@ -848,8 +1097,172 @@ class MultiQuerySimulator:
                 else:
                     rows_redist[q] += nrows
                     arrive = now + ipc_lat + nbytes / ipc_bw + nrows * ser
-                push(arrive, _ENQUEUE, q, d, costs_s[lo:hi])
+                if emit is None:
+                    push(arrive, _ENQUEUE, q, d, costs_s[lo:hi])
+                else:
+                    emit(arrive, q, d, costs_s[lo:hi])
                 out_q[d] += nrows
+
+        def fair_share_parks(kind: int, q: int, p: int, k: int,
+                             b: Batch) -> bool:
+            """Fair-share gate at an _ARRIVAL (re-offered _ADMITTED work
+            was already charged): True → the batch was parked.  The ONE
+            copy of the park-or-admit policy — both the singleton path
+            and the coalesced-run path go through it."""
+            if planner is None or kind != _ARRIVAL:
+                return False
+            bpr = b.total_bytes / max(b.num_rows, 1)
+            if planner.try_admit(q, b.num_rows, b.total_bytes, bpr):
+                return False
+            parked[q].append((p, k))
+            return True
+
+        def handle_arrival(
+            kind: int, q: int, p: int, k: int, now: float,
+            dests_pre: object = _RB_INLINE,
+            emit: Optional[Callable] = None,
+        ) -> bool:
+            """The _ARRIVAL/_ADMITTED bookkeeping around `route_batch`.
+            Returns False when the batch was parked by fair share."""
+            nonlocal total_remaining
+            st = strategies[q]
+            b = streams[q][p][k]
+            if fair_share_parks(kind, q, p, k, b):
+                return False
+            remaining_arrivals[q] -= 1
+            total_remaining -= 1
+            # The last arrival can retire a tenant whose rows are already
+            # all complete (zero-row batches) — without this check its
+            # tick chain would reschedule forever.
+            tenant_done_check(q)
+            rows_arr_in_tick[q][p] += b.num_rows
+            batches_arr_in_tick[q][p] += 1
+            bytes_arr_in_tick[q][p] += b.total_bytes
+            if has_link[q]:
+                dec_overhead[q] += st.decision_overhead
+                now += st.decision_overhead
+            route_batch(q, p, b, now, dests_pre, emit)
+            if k + 1 < len(streams[q][p]):
+                # Flow control: pace against the least-backlogged valid
+                # destination (own consumer when routing locally).
+                if st.kind == "static_rr" or distribute_mask[q][p]:
+                    bl = min(outstanding[q])
+                else:
+                    bl = outstanding[q][p]
+                backpressure = max(0.0, bl - flow_window) * est_row_cost[q]
+                push(now + tenants[q].arrival_gap + backpressure,
+                     _ARRIVAL, q, p, k + 1)
+            return True
+
+        def route_arrival_run(now: float, run_ev: List[Tuple]) -> None:
+            """Route a maximal run of same-instant arrival events.
+
+            The run is routed through ONE batched waterfill per cascade
+            level: same-instant batches of DIFFERENT tenants are provably
+            independent (backlog, cost estimate and masks are per-tenant,
+            and nothing that routing mutates is read by another tenant's
+            waterfill), while consecutive batches of the SAME tenant
+            cascade through its own `outstanding` backlog and therefore
+            form sequential levels.  Every side effect (fair-share
+            admission, NIC occupancy, ring pushes, flow-control pacing)
+            is applied strictly in heap pop order, so the trajectory is
+            bit-identical to routing the events one at a time.
+
+            Tie caveat (same class as the drain's documented tick tie):
+            the buffered _ENQUEUE events are pushed after the run's
+            flow-control _ARRIVAL pushes, so their heap seqs trail
+            those arrivals'.  Seq order is only observable when two
+            event timestamps are EXACTLY equal in float — here a
+            ``now + gap + backpressure`` arrival colliding with a
+            ``now + nrows*ser``-style delivery, quantities with no
+            algebraic relation — which no generic workload produces.
+            """
+            nonlocal wf_calls, wf_rows, enq_coalesced
+            # Phase 0 (pop order): fair-share admission; park or admit.
+            admitted: List[Tuple[int, int, int, int, Batch]] = []
+            for kind_e, q, p, k in run_ev:
+                b = streams[q][p][k]
+                if not fair_share_parks(kind_e, q, p, k, b):
+                    admitted.append((kind_e, q, p, k, b))
+            if not admitted:
+                return
+            # Phase 1: precompute every dyskew batch's routing plan.
+            # plans[i] is _RB_INLINE (none/static_rr — computed inline in
+            # pop order), None (stays local) or the waterfill dests.
+            plans: List[object] = [_RB_INLINE] * len(admitted)
+            chains: Dict[int, List[int]] = {}
+            for i, (_, q, p, k, b) in enumerate(admitted):
+                if has_link[q]:
+                    chains.setdefault(q, []).append(i)
+            shadow = {
+                q: np.asarray(outstanding[q], np.float64) for q in chains
+            }
+            cursor = {q: 0 for q in chains}
+            while chains:
+                level: List[int] = []
+                for q in list(chains):
+                    lst = chains[q]
+                    cur = cursor[q]
+                    while cur < len(lst):
+                        i = lst[cur]
+                        _, _, p, k, b = admitted[i]
+                        if distribute_mask[q][p] and not density_blocks(
+                            q, p, b
+                        ):
+                            break  # needs a waterfill at this level
+                        plans[i] = None
+                        shadow[q][p] += b.num_rows
+                        cur += 1
+                    if cur >= len(lst):
+                        del chains[q]
+                        continue
+                    level.append(lst[cur])
+                    cursor[q] = cur + 1
+                if not level:
+                    continue
+                bls = np.empty((len(level), n))
+                ks = np.empty(len(level), np.int64)
+                units = np.empty(len(level))
+                for r, i in enumerate(level):
+                    _, q, p, k, b = admitted[i]
+                    bls[r] = waterfill_backlog(q, p, shadow[q])
+                    ks[r] = b.num_rows
+                    units[r] = waterfill_unit(q)
+                counts_lvl = waterfill_counts_many(bls, ks, units)
+                wf_calls += 1
+                wf_rows += len(level)
+                for r, i in enumerate(level):
+                    _, q, p, k, b = admitted[i]
+                    counts = counts_lvl[r]
+                    dests = np.repeat(np.arange(n), counts)
+                    if gate_rejects(q, p, b, dests):
+                        plans[i] = None
+                        shadow[q][p] += b.num_rows
+                        continue
+                    plans[i] = dests
+                    shadow[q] += counts
+            # Phase 2 (pop order): apply everything — admission already
+            # done in phase 0, so pass kind=_ADMITTED to skip it — with
+            # same-(time, destination) _ENQUEUE pushes coalesced into one
+            # heap event carrying the concatenated segments.
+            pending_enq: Dict[Tuple[float, int], List] = {}
+
+            def emit(t: float, q: int, d: int, seg: np.ndarray) -> None:
+                lst = pending_enq.get((t, d))
+                if lst is None:
+                    pending_enq[(t, d)] = [(q, seg)]
+                else:
+                    lst.append((q, seg))
+
+            for i, (_, q, p, k, b) in enumerate(admitted):
+                handle_arrival(_ADMITTED, q, p, k, now, plans[i], emit)
+            for (t, d), segs in pending_enq.items():
+                if len(segs) == 1:
+                    q, seg = segs[0]
+                    push(t, _ENQUEUE, q, d, seg)
+                else:
+                    push(t, _ENQUEUE, -1, d, segs)
+                    enq_coalesced += len(segs) - 1
 
         def release_parked(now: float) -> None:
             """Re-offer parked arrivals (round-robin) after new credit."""
@@ -868,16 +1281,42 @@ class MultiQuerySimulator:
                         push(now, _ADMITTED, q, p, k)
                         progress = True
 
+        def tenant_done_check(q: int) -> None:
+            """Flip the incrementally-maintained tenant_active flag (and
+            its group mirror) when the tenant's last row completes."""
+            if (
+                active_flag[q]
+                and remaining_arrivals[q] == 0
+                and rows_completed[q] >= rows_total[q]
+            ):
+                active_flag[q] = False
+                slot = member_slot.get(q)
+                if slot is not None:
+                    grp_active[slot[0]][slot[1]] = False
+
         now = 0.0
         while events:
             now, _, kind, qid, who, payload = heappop(events)
             if kind == _ENQUEUE:
-                q, w = qid, who
-                rings[w].push(payload, qid=q)
-                recv_in_tick[q][w] += len(payload)
-                if not worker_running[w]:
-                    start_worker(w, now)
+                enq_n += 1
+                w = who
+                # A coalesced event replays each segment's push and the
+                # worker-start check it would have performed as its own
+                # heap event — identical trajectory, one pop; a classic
+                # event is the one-segment case of the same body.
+                segs = payload if type(payload) is list else ((qid, payload),)
+                for q, seg in segs:
+                    # A zero-row segment leaves (ring, running) — and
+                    # hence idleness — unchanged.
+                    if len(seg) and worker_idle[w]:
+                        worker_idle[w] = False
+                        idle_count -= 1
+                    rings[w].push(seg, qid=q)
+                    recv_in_tick[q][w] += len(seg)
+                    if not worker_running[w]:
+                        start_worker(w, now)
             elif kind == _DONE:
+                done_n += 1
                 w = who
                 total, nrows, counts, totals = payload
                 if counts is None:
@@ -892,6 +1331,7 @@ class MultiQuerySimulator:
                     outstanding[0][w] = left if left > 0.0 else 0.0
                     rows_completed[0] += nrows
                     last_done[0] = now
+                    tenant_done_check(0)
                     done_tenants = ((0, nrows),)
                 else:
                     done_tenants = []
@@ -910,43 +1350,53 @@ class MultiQuerySimulator:
                         outstanding[q][w] = left if left > 0.0 else 0.0
                         rows_completed[q] += cnt
                         last_done[q] = now
+                        tenant_done_check(q)
                         done_tenants.append((q, cnt))
                 worker_running[w] = False
                 start_worker(w, now)
+                if not worker_running[w]:
+                    worker_idle[w] = True
+                    idle_count += 1
                 if planner is not None:
                     for q, cnt in done_tenants:
                         planner.on_complete(q, cnt)
-                        if not tenant_active(q):
+                        if not active_flag[q]:
                             planner.deactivate(q)
                     release_parked(now)
             elif kind == _ARRIVAL or kind == _ADMITTED:
-                q, p, k = qid, who, payload
-                st = strategies[q]
-                b = streams[q][p][k]
-                if planner is not None and kind == _ARRIVAL:
-                    bpr = b.total_bytes / max(b.num_rows, 1)
-                    if not planner.try_admit(q, b.num_rows, b.total_bytes, bpr):
-                        parked[q].append((p, k))
-                        continue
-                remaining_arrivals[q] -= 1
-                rows_arr_in_tick[q][p] += b.num_rows
-                batches_arr_in_tick[q][p] += 1
-                bytes_arr_in_tick[q][p] += b.total_bytes
-                if has_link[q]:
-                    dec_overhead[q] += st.decision_overhead
-                    now += st.decision_overhead
-                route_batch(q, p, b, now)
-                if k + 1 < len(streams[q][p]):
-                    # Flow control: pace against the least-backlogged valid
-                    # destination (own consumer when routing locally).
-                    if st.kind == "static_rr" or distribute_mask[q][p]:
-                        bl = min(outstanding[q])
+                if events and events[0][0] == now and events[0][2] in (
+                    _ARRIVAL, _ADMITTED
+                ):
+                    # A maximal run of same-instant arrivals: route them
+                    # through the batched waterfill path.
+                    run_ev = [(kind, qid, who, payload)]
+                    if kind == _ARRIVAL:
+                        arrival_n += 1
                     else:
-                        bl = outstanding[q][p]
-                    backpressure = max(0.0, bl - flow_window) * est_row_cost[q]
-                    push(now + tenants[q].arrival_gap + backpressure,
-                         _ARRIVAL, q, p, k + 1)
+                        admitted_n += 1
+                    while events and events[0][0] == now and events[0][2] in (
+                        _ARRIVAL, _ADMITTED
+                    ):
+                        _, _, k2, q2, w2, pl2 = heappop(events)
+                        run_ev.append((k2, q2, w2, pl2))
+                        if k2 == _ARRIVAL:
+                            arrival_n += 1
+                        else:
+                            admitted_n += 1
+                    arrival_runs += 1
+                    arrivals_in_runs += len(run_ev)
+                    route_arrival_run(now, run_ev)
+                else:
+                    if kind == _ARRIVAL:
+                        arrival_n += 1
+                    else:
+                        admitted_n += 1
+                    handle_arrival(kind, qid, who, payload, now)
+                if drain_on and total_remaining == 0 and events:
+                    drained = True
+                    break
             elif kind == _TICK:
+                tick_n += 1
                 q = qid
                 num_ticks[q] += 1
                 rows_arr = np.asarray(rows_arr_in_tick[q])
@@ -970,9 +1420,10 @@ class MultiQuerySimulator:
                 rows_arr_in_tick[q] = [0.0] * n
                 batches_arr_in_tick[q] = [0.0] * n
                 bytes_arr_in_tick[q] = [0.0] * n
-                if tenant_active(q):
+                if active_flag[q]:
                     push(now + strategies[q].tick_interval, _TICK, q, 0, None)
             else:  # _GTICK — ONE coalesced tick drives a whole group
+                gtick_n += 1
                 g = qid
                 sim_g, members, interval, _ = groups[g]
                 # A member participates while it has arrived, has not
@@ -980,24 +1431,22 @@ class MultiQuerySimulator:
                 # a grid point), and is active — plus exactly one
                 # post-drain tick, mirroring the per-tenant cadence where
                 # the already-scheduled tick still fires after drain.
+                gact = grp_active[g]
                 if payload is None:
-                    live = [
-                        q for q in members
-                        if tenants[q].arrival <= now and last_tick[q] != now
-                        and (tenant_active(q) or not final_tick_done[q])
-                    ]
+                    elig = (
+                        (grp_arrival[g] <= now)
+                        & (grp_last_tick[g] != now)
+                        & (gact | ~grp_final[g])
+                    )
                 else:
                     q = payload
-                    live = (
-                        [q] if last_tick[q] != now
-                        and (tenant_active(q) or not final_tick_done[q])
-                        else []
-                    )
-                if live:
-                    live_set = set(live)
-                    active = np.fromiter(
-                        (q in live_set for q in members), bool, len(members)
-                    )
+                    i = member_slot[q][1]
+                    elig = np.zeros(len(members), bool)
+                    if grp_last_tick[g][i] != now and (
+                        gact[i] or not grp_final[g][i]
+                    ):
+                        elig[i] = True
+                if elig.any():
                     acc = group_acc[g]
                     rows_arr = acc["rows"]
                     batches_arr = acc["batches"]
@@ -1016,25 +1465,262 @@ class MultiQuerySimulator:
                     dist = sim_g.tick(
                         acc["recv"], acc["sync"], density, bpr,
                         np.asarray(worker_running, bool),
-                        active,
+                        elig,
                     )
-                    for i, q in enumerate(members):
-                        if not active[i]:
-                            continue
-                        num_ticks[q] += 1
-                        last_tick[q] = now
-                        distribute_mask[q] = dist[i].tolist()
-                        # Slice-assign: the per-tenant aliases must keep
-                        # viewing the group rows.
-                        recv_in_tick[q][:] = 0.0
-                        sync_in_tick[q][:] = 0.0
-                        rows_arr_in_tick[q][:] = 0.0
-                        batches_arr_in_tick[q][:] = 0.0
-                        bytes_arr_in_tick[q][:] = 0.0
-                        if not tenant_active(q):
-                            final_tick_done[q] = True
-                if payload is None and any(tenant_active(q) for q in members):
+                    idxs = np.flatnonzero(elig)
+                    num_ticks[grp_members_arr[g][idxs]] += 1
+                    grp_last_tick[g][idxs] = now
+                    # One bulk tolist (C loop) instead of a python-level
+                    # conversion per live member.
+                    dist_rows = dist.tolist()
+                    for i in idxs:
+                        distribute_mask[members[int(i)]] = dist_rows[int(i)]
+                    # Fancy-index reset writes through to the same rows
+                    # the per-tenant accumulator aliases view.
+                    for key in ("recv", "sync", "rows", "batches", "bytes"):
+                        acc[key][idxs] = 0.0
+                    grp_final[g][idxs[~gact[idxs]]] = True
+                if payload is None and gact.any():
                     push(now + interval, _GTICK, g, 0, None)
+
+        if drained:
+            # ---- Closed-form drain -------------------------------------
+            # Every arrival has been routed (total_remaining == 0, which
+            # also implies no parked fair-share work), so the events left
+            # in the heap are only in-flight _ENQUEUEs, running workers'
+            # _DONEs, and tick cadences.  From here on (a) routing never
+            # happens again, so distribute masks, cost estimates and the
+            # fair-share planner cannot influence the result, and (b)
+            # workers are independent FIFO servers (an _ENQUEUE/_DONE at
+            # worker w touches only w).  Each worker is finished exactly:
+            # a short per-event replay while transfers are still landing,
+            # then one prefix-sum walk over its fully-loaded ring — the
+            # same float operations in the same order as the heap (see
+            # `closed_form_none_result` for the op-order argument).  Tick
+            # cadences reduce to counting: a pending tick chain fires at
+            # chained times t, t+I, ... while its tenant is active plus
+            # exactly one final fire, so num_ticks is recovered from the
+            # completion times without advancing any state machine.
+            drained_events = len(events)
+            enq_by_w: Dict[int, List[Tuple]] = {}
+            done_by_w: Dict[int, Tuple] = {}
+            tick_chains: List[Tuple[float, int, int, int, object]] = []
+            for t_e, s_e, kind_e, qid_e, who_e, payload_e in events:
+                if kind_e == _ENQUEUE:
+                    enq_by_w.setdefault(who_e, []).append(
+                        (t_e, s_e, qid_e, payload_e)
+                    )
+                elif kind_e == _DONE:
+                    tot_e, nr_e, cnts_e, tots_e = payload_e
+                    done_by_w[who_e] = (t_e, s_e, tot_e, nr_e, cnts_e, tots_e)
+                else:  # _TICK chains, _GTICK chains AND pending join ticks
+                    tick_chains.append((t_e, s_e, kind_e, qid_e, payload_e))
+            events.clear()
+            # Fire order matters when a pending one-off join tick (a
+            # zero-batch member arriving after the fleet's last routed
+            # arrival) coexists with its group's recurring chain: the
+            # heap delivers whichever comes first, and the member's
+            # single post-inactive fire belongs to that event.
+            tick_chains.sort(key=lambda e: (e[0], e[1]))
+            inf = float("inf")
+
+            def apply_done_stats(w, t_d, tot, nr, cnts, tots):
+                if cnts is None:
+                    busy[0][w] += tot
+                    rows_done[0][w] += nr
+                    rows_completed[0] += nr
+                    if t_d > last_done[0]:
+                        last_done[0] = t_d
+                else:
+                    for q in np.flatnonzero(cnts):
+                        q = int(q)
+                        busy[q][w] += float(tots[q])
+                        rows_done[q][w] += int(cnts[q])
+                        rows_completed[q] += int(cnts[q])
+                        if t_d > last_done[q]:
+                            last_done[q] = t_d
+
+            def start_chunk(w, t_s):
+                ring = rings[w]
+                if ring.tail == ring.head:
+                    return None
+                chunk, qids = ring.pop(_SERVICE_CHUNK)
+                tot = sum(chunk.tolist())
+                if qids is None:
+                    return (t_s + tot, inf, tot, len(chunk), None, None)
+                cnts = np.bincount(qids, minlength=nq)
+                tots = np.bincount(qids, weights=chunk, minlength=nq)
+                return (t_s + tot, inf, tot, len(chunk), cnts, tots)
+
+            for w in range(n):
+                pend = done_by_w.get(w)
+                enqs = sorted(enq_by_w.get(w, ()))
+                # Phase A: replay the in-flight transfers exactly (chunk
+                # pops interleave with arrivals in (time, seq) order).
+                i = 0
+                while i < len(enqs):
+                    te, se = enqs[i][0], enqs[i][1]
+                    if pend is not None and (pend[0], pend[1]) < (te, se):
+                        t_d = pend[0]
+                        apply_done_stats(
+                            w, t_d, pend[2], pend[3], pend[4], pend[5]
+                        )
+                        drained_chunks += 1
+                        pend = start_chunk(w, t_d)
+                    else:
+                        _, _, qe, pl = enqs[i]
+                        i += 1
+                        segs = pl if type(pl) is list else ((qe, pl),)
+                        for q, seg in segs:
+                            rings[w].push(seg, qid=q)
+                            if pend is None:
+                                pend = start_chunk(w, te)
+                if pend is None:
+                    continue
+                # Phase B: the ring holds everything this worker will
+                # ever serve — finish it with one prefix-sum walk.
+                t0 = pend[0]
+                apply_done_stats(w, t0, pend[2], pend[3], pend[4], pend[5])
+                drained_chunks += 1
+                ring = rings[w]
+                m = ring.tail - ring.head
+                if not m:
+                    continue
+                costs = ring.buf[ring.head:ring.tail]
+                qids = (
+                    ring.qbuf[ring.head:ring.tail]
+                    if ring.qbuf is not None else None
+                )
+                nch = -(-m // _SERVICE_CHUNK)
+                drained_chunks += nch
+                padded = np.zeros(nch * _SERVICE_CHUNK)
+                padded[:m] = costs
+                # Within-chunk sequential accumulation (the loop's python
+                # sum), then sequential across chunks (now += total).
+                totals = np.cumsum(
+                    padded.reshape(nch, _SERVICE_CHUNK), axis=1
+                )[:, -1]
+                times = np.cumsum(np.concatenate(([t0], totals)))
+                if qids is None:
+                    busy[0][w] = float(np.cumsum(
+                        np.concatenate(([busy[0][w]], totals))
+                    )[-1])
+                    rows_done[0][w] += m
+                    rows_completed[0] += m
+                    tl = float(times[-1])
+                    if tl > last_done[0]:
+                        last_done[0] = tl
+                else:
+                    # Per-(chunk, tenant) splits: np.add.at accumulates in
+                    # ring order — the same per-cell float addition order
+                    # as the loop's per-chunk np.bincount.
+                    ci = np.arange(m) // _SERVICE_CHUNK
+                    tt = np.zeros((nch, nq))
+                    cc = np.zeros((nch, nq), np.int64)
+                    np.add.at(tt, (ci, qids), costs)
+                    np.add.at(cc, (ci, qids), 1)
+                    busy_row = np.asarray([busy[q][w] for q in range(nq)])
+                    walk = np.cumsum(
+                        np.vstack((busy_row[None, :], tt)), axis=0
+                    )[-1]
+                    colrows = cc.sum(axis=0)
+                    for q in np.flatnonzero(colrows):
+                        q = int(q)
+                        busy[q][w] = float(walk[q])
+                        rows_done[q][w] += int(colrows[q])
+                        rows_completed[q] += int(colrows[q])
+                        tl = float(times[int(np.flatnonzero(cc[:, q])[-1]) + 1])
+                        if tl > last_done[q]:
+                            last_done[q] = tl
+                ring.head = ring.tail
+            # Tick cadences: count the remaining fires in closed form.
+            # A chain fires at t0, t0+I, (t0+I)+I, ... (chained float
+            # adds, replayed here) while its tenant has uncompleted rows,
+            # plus one final fire from the already-scheduled event.
+            # Tie convention: a fire at EXACTLY the tenant's completion
+            # time counts as the final fire (as if the completing _DONE
+            # popped first).  The heap breaks such a tie by push seq and
+            # can count one extra tick — but the tie needs a chained
+            # tick time to equal a service-sum completion time in exact
+            # float, which no generic workload produces; the divergence
+            # is deterministic and confined to num_ticks (telemetry),
+            # never latencies or busy vectors.
+            for t0, _, kind_e, gid, payload_e in tick_chains:
+                if kind_e == _TICK:
+                    interval = strategies[gid].tick_interval
+                    t_c = t0
+                    cnt = 0
+                    t_q = last_done[gid]
+                    while t_c < t_q:
+                        cnt += 1
+                        t_c += interval
+                    num_ticks[gid] += cnt + 1
+                    drained_ticks += cnt + 1
+                    continue
+                _, members, interval, _ = groups[gid]
+                gfin = grp_final[gid]
+                glt = grp_last_tick[gid]
+                if payload_e is not None:
+                    # A pending one-off join tick: fires ONCE for its
+                    # member at t0 and never reschedules.  Reachable
+                    # only for a member with no batches at all (any
+                    # batch-carrying member's join tick pops before its
+                    # first arrival, hence before the drain).
+                    q = payload_e
+                    i = member_slot[q][1]
+                    if not gfin[i] and glt[i] != t0:
+                        num_ticks[q] += 1
+                        drained_ticks += 1
+                        if not grp_active[gid][i]:
+                            gfin[i] = True
+                    continue
+                for i, q in enumerate(members):
+                    if gfin[i]:
+                        continue
+                    if grp_arrival[gid][i] > t0:
+                        # Not yet arrived at this chain instant: the heap
+                        # gates eligibility on arrival, and the member's
+                        # single post-arrival fire belongs to its pending
+                        # one-off join tick (sorted into this loop) — an
+                        # active member can never be here, since all its
+                        # arrivals routed before the drain began.
+                        continue
+                    t_c = t0
+                    if glt[i] == t0:
+                        # The member already ticked at this instant
+                        # (join tick colliding with the pending grid
+                        # event — the heap's `last_tick != now`
+                        # guard); its chain starts one step later.
+                        t_c = t0 + interval
+                    cnt = 0
+                    t_q = last_done[q]
+                    while t_c < t_q:
+                        cnt += 1
+                        t_c += interval
+                    num_ticks[q] += cnt + 1
+                    drained_ticks += cnt + 1
+                    gfin[i] = True
+
+        self.last_event_counts = {
+            "tick": tick_n,
+            "gtick": gtick_n,
+            "arrival": arrival_n,
+            "admitted": admitted_n,
+            "enqueue": enq_n,
+            "done": done_n,
+            "heap_events": (
+                tick_n + gtick_n + arrival_n + admitted_n + enq_n + done_n
+            ),
+            "arrival_runs_coalesced": arrival_runs,
+            "arrivals_in_runs": arrivals_in_runs,
+            "enqueues_coalesced": enq_coalesced,
+            "waterfill_batched_calls": wf_calls,
+            "waterfill_batched_rows": wf_rows,
+            "drain_entered": int(drained),
+            "drained_heap_events": drained_events,
+            "drained_chunks": drained_chunks,
+            "drained_ticks": drained_ticks,
+        }
 
         results: List[QueryResult] = []
         for q, t in enumerate(tenants):

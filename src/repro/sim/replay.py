@@ -409,13 +409,36 @@ def open_loop_tenants(
     num_queries: int,
     seed: int = 0,
     feed_factor: float = 2.0,
+    grid_align: Optional[float] = None,
 ) -> List[TenantQuery]:
     """Materialize an open-loop query stream: ``num_queries`` arrivals at
     :func:`arrival_times` timestamps, cycling over ``specs`` —
     (profile, fair-share weight) pairs, e.g. from
     `workload.priority_class_suite`.  Each arrival is an independent
-    tenant (fresh streams, own link state) named '<profile>#<index>'."""
+    tenant (fresh streams, own link state) named '<profile>#<index>'.
+
+    ``grid_align`` snaps every arrival down onto the chained float grid
+    ``0, I, I+I, ...`` of that step — the engine's metrics subsystem
+    quantizes observation to tick boundaries anyway, and arrivals that
+    sit exactly on a shared tick grid put the whole fleet inside the
+    PROVEN batched-tick equivalence envelope (`sim/engine.py`'s
+    ``_arrivals_on_grid``), so `MultiQuerySimulator`'s auto default
+    drives hundreds of link tenants through one coalesced jitted tick
+    per cadence while staying bit-identical to the per-tenant path.
+    The grid values are built by the same chained additions the engine's
+    grid-tick event walks, so the float equality is exact by
+    construction, not approximate."""
     times = arrival_times(process, num_queries, seed=seed + 977)
+    if grid_align is not None and num_queries:
+        step = float(grid_align)
+        kmax = int(np.floor(float(times.max()) / step)) + 1
+        chain = np.empty(kmax + 1)
+        t = 0.0
+        for k in range(kmax + 1):
+            chain[k] = t
+            t += step
+        idx = np.searchsorted(chain, times, side="right") - 1
+        times = chain[np.clip(idx, 0, kmax)]
     tenants: List[TenantQuery] = []
     for i in range(num_queries):
         prof, weight = specs[i % len(specs)]
@@ -490,22 +513,31 @@ def run_open_loop(
     feed_factor: float = 2.0,
     batch_ticks: Optional[bool] = None,
     none_closed_form: Optional[bool] = None,
+    closed_form_drain: Optional[bool] = None,
+    grid_align: Optional[float] = None,
 ) -> Dict[str, object]:
     """One open-loop scenario end to end: materialize the arrival stream,
     run it on one shared cluster (optionally under fair-share admission),
     and summarize per-class tails + fairness.  ``batch_ticks`` /
-    ``none_closed_form`` forward to :class:`MultiQuerySimulator` — the
-    many-tenant bench passes ``batch_ticks=True`` to drive hundreds of
-    tenants through one jitted tick per cadence."""
+    ``none_closed_form`` / ``closed_form_drain`` forward to
+    :class:`MultiQuerySimulator`; ``grid_align`` snaps arrivals onto a
+    shared tick grid (see :func:`open_loop_tenants`), which puts a
+    homogeneous fleet inside the batched-tick auto envelope — the
+    many-tenant bench relies on this so hundreds of tenants batch BY
+    DEFAULT.  The run's per-kind event counters are returned under
+    ``"event_counts"``."""
     tenants = open_loop_tenants(
         specs, cluster, resolve, process, num_queries, seed=seed,
-        feed_factor=feed_factor,
+        feed_factor=feed_factor, grid_align=grid_align,
     )
-    results = MultiQuerySimulator(
+    sim = MultiQuerySimulator(
         cluster, fair_share=fair_share, batch_ticks=batch_ticks,
         none_closed_form=none_closed_form,
-    ).run(tenants)
+        closed_form_drain=closed_form_drain,
+    )
+    results = sim.run(tenants)
     out = summarize_open_loop(tenants, results, cluster)
     out["tenants"] = tenants
     out["results"] = results
+    out["event_counts"] = dict(sim.last_event_counts)
     return out

@@ -28,6 +28,7 @@ from repro.sim.engine import (
     MultiQuerySimulator,
     StrategyConfig,
     TenantQuery,
+    _arrivals_on_grid,
     closed_form_none_result,
 )
 from repro.sim.replay import dyskew_strategy, scan_arrival_gap, staggered_tenants
@@ -168,6 +169,124 @@ class TestBatchedEngineMode:
             total = sum(b.costs.sum() for s in t.streams for b in s)
             np.testing.assert_allclose(r.per_worker_busy.sum(), total,
                                        rtol=1e-9)
+
+
+class TestAutoEnvelope:
+    """The widened batched-tick auto envelope: a multi-link (config,
+    cadence) group batches by default when every member arrival lies
+    exactly on the group's chained tick grid — identical arrivals being
+    the trivial case — and falls back to per-tenant links otherwise."""
+
+    def test_on_grid_detection(self):
+        assert _arrivals_on_grid([0.3, 0.3, 0.3], 0.05)  # identical
+        # Chained grid values (the engine walks t += I, so must we).
+        t, grid = 0.1, [0.1]
+        for _ in range(5):
+            t += 0.008
+            grid.append(t)
+        assert _arrivals_on_grid([grid[0], grid[2], grid[5]], 0.008)
+        assert not _arrivals_on_grid([0.1, 0.1037], 0.008)  # off grid
+        # Exactness matters: k*I need not equal the chained sum.
+        assert not _arrivals_on_grid([0.0, 0.1 + 3e-18], 0.008)
+
+    def _identical_arrival_tenants(self, cluster, arrival=0.02):
+        profiles = multi_tenant_suite(4, seed=51)
+        tenants = staggered_tenants(profiles, cluster, dyskew_strategy,
+                                    seed=2)
+        for t in tenants:
+            t.arrival = arrival
+        return tenants
+
+    def test_identical_arrival_group_auto_batches_bit_exact(self):
+        """Identical-arrival multi-link tenants: the auto default must
+        take the batched path AND reproduce the per-tenant trajectory
+        bit-for-bit (ticks, latencies, busy vectors)."""
+        cluster = ClusterConfig(num_nodes=2)
+        tenants = self._identical_arrival_tenants(cluster)
+        assert sum(t.strategy.kind == "dyskew" for t in tenants) > 1
+        auto = MultiQuerySimulator(cluster).run(tenants)
+        per = MultiQuerySimulator(cluster, batch_ticks=False).run(
+            self._identical_arrival_tenants(cluster)
+        )
+        forced = MultiQuerySimulator(cluster, batch_ticks=True).run(
+            self._identical_arrival_tenants(cluster)
+        )
+        for a, p, f in zip(auto, per, forced):
+            assert a.latency == p.latency == f.latency
+            assert a.num_ticks == p.num_ticks == f.num_ticks
+            np.testing.assert_array_equal(a.per_worker_busy,
+                                          p.per_worker_busy)
+            np.testing.assert_array_equal(a.per_worker_busy,
+                                          f.per_worker_busy)
+
+    def test_off_grid_group_falls_back_per_tenant(self):
+        """Scattered arrivals: auto must keep the per-tenant cadence
+        (the shared grid would quantize tick times)."""
+        cluster = ClusterConfig(num_nodes=2)
+        profiles = multi_tenant_suite(4, seed=51)
+        tenants = staggered_tenants(profiles, cluster, dyskew_strategy,
+                                    seed=2)
+        arrivals = [t.arrival for t in tenants if
+                    t.strategy.kind == "dyskew"]
+        interval = tenants[0].strategy.tick_interval
+        assert not _arrivals_on_grid(arrivals, interval)
+        auto = MultiQuerySimulator(cluster).run(tenants)
+        per = MultiQuerySimulator(cluster, batch_ticks=False).run(
+            staggered_tenants(profiles, cluster, dyskew_strategy, seed=2)
+        )
+        for a, p in zip(auto, per):
+            assert a.latency == p.latency
+            assert a.num_ticks == p.num_ticks
+
+    def test_grid_aligned_open_loop_batches_by_default(self):
+        """`open_loop_tenants(grid_align=I)` snaps a whole open-loop
+        fleet onto the tick grid, so `many_tenants_suite`-style traffic
+        rides the batched path under the auto default, bit-identically."""
+        from repro.sim.replay import open_loop_tenants
+        from repro.sim.workload import ArrivalProcess, many_tenants_suite
+
+        cluster = ClusterConfig(num_nodes=1)
+        specs = many_tenants_suite(16, seed=71)
+        st = StrategyConfig(
+            kind="dyskew",
+            dyskew=DySkewConfig(policy=Policy.LATE,
+                                skew_model=SkewModelKind.IDLE_TIME),
+            tick_interval=8e-3,
+        )
+        proc = ArrivalProcess(kind="poisson", rate=30.0)
+        tenants = open_loop_tenants(
+            specs, cluster, lambda prof: st, proc, 16, seed=3,
+            grid_align=st.tick_interval,
+        )
+        assert _arrivals_on_grid([t.arrival for t in tenants],
+                                 st.tick_interval)
+        auto = MultiQuerySimulator(cluster).run(tenants)
+        per = MultiQuerySimulator(cluster, batch_ticks=False).run(tenants)
+        for a, p in zip(auto, per):
+            assert a.latency == p.latency
+            assert a.num_ticks == p.num_ticks
+            np.testing.assert_array_equal(a.per_worker_busy,
+                                          p.per_worker_busy)
+
+    def test_batched_waterfill_engages_on_same_time_arrivals(self):
+        """An eager tenant's producers all arrive at one instant — the
+        coalesced run must route them through `waterfill_counts_many`."""
+        cluster = ClusterConfig(num_nodes=2)
+        prof = QueryProfile(
+            name="wf", n_rows=1200, mean_row_cost=1e-3, cost_sigma=1.0,
+            partition_alpha=0.6, hot_fraction=0.2,
+        )
+        batches = generate_query(prof, cluster.num_workers, seed=13)
+        st = StrategyConfig(
+            kind="dyskew",
+            dyskew=DySkewConfig(policy=Policy.EAGER_SNOWPARK),
+        )
+        sim = MultiQuerySimulator(cluster)
+        sim.run([TenantQuery("wf", batches, st, 0.0,
+                             scan_arrival_gap(prof, cluster))])
+        counts = sim.last_event_counts
+        assert counts["arrival_runs_coalesced"] >= 1
+        assert counts["waterfill_batched_rows"] >= 1
 
 
 class TestClosedFormNone:

@@ -1,11 +1,11 @@
-"""Tests for routing planners + cost model + assembled AdaptiveLink."""
+"""Tests for routing planners + in-graph cost gate + AdaptiveLink."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import cost_model as cm
+from repro.core import admission
 from repro.core import redistribution as rd
 from repro.core.adaptive_link import AdaptiveLink, AdaptiveLinkConfig
 from repro.core.types import DySkewConfig, Policy
@@ -72,23 +72,39 @@ class TestPlanners:
 
 class TestCostModel:
     def test_cheap_move_admitted(self):
-        cfg = cm.CostModelConfig(link_bandwidth=50e9, per_item_overhead=1e-6)
+        cfg = admission.CostModelConfig(
+            link_bandwidth=50e9, per_item_overhead=1e-6
+        )
         before = jnp.array([10.0, 0.0])
         after = jnp.array([5.0, 5.0])
-        ok, saved, t = cm.admit(before, after, jnp.array(1e6), jnp.array(100), cfg)
+        ok, saved, t = admission.admit_redistribution(
+            before, after, jnp.array(1e6), jnp.array(100), cfg
+        )
         assert bool(ok)
         assert float(saved) == pytest.approx(5.0)
 
     def test_heavy_row_rejected(self):
         # The §III.B pathology: 100 GB row, tiny balance benefit.
-        cfg = cm.CostModelConfig(link_bandwidth=50e9)
+        cfg = admission.CostModelConfig(link_bandwidth=50e9)
         before = jnp.array([1.1, 1.0])
         after = jnp.array([1.05, 1.05])
-        ok, saved, t = cm.admit(
+        ok, saved, t = admission.admit_redistribution(
             before, after, jnp.array(100e9), jnp.array(1), cfg
         )
         assert not bool(ok)
         assert float(t) == pytest.approx(2.0, rel=0.01)  # 100GB / 50GB/s
+
+    def test_balance_benefit_clamped_and_polymorphic(self):
+        # numpy and jax operands run through the SAME implementation.
+        for xp in (np, jnp):
+            worse = admission.balance_benefit(
+                xp.asarray([1.0, 1.0]), xp.asarray([2.0, 0.5])
+            )
+            assert float(worse) == 0.0
+            gain = admission.balance_benefit(
+                xp.asarray([4.0, 0.0]), xp.asarray([2.0, 2.0])
+            )
+            assert float(gain) == pytest.approx(2.0)
 
 
 class TestAdaptiveLink:

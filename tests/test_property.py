@@ -14,7 +14,7 @@ from repro.core.types import DySkewConfig, LinkState, Policy, link_state_init
 from repro.kernels.topk_gating.ref import topk_gating_ref
 from repro.optim.grad_compress import dequantize_int8, quantize_int8
 from repro.roofline.analysis import shape_bytes
-from repro.sim.engine import waterfill_counts
+from repro.sim.engine import waterfill_counts, waterfill_counts_many
 
 # Keep runs fast on 1 CPU.
 FAST = settings(max_examples=25, deadline=None)
@@ -97,6 +97,38 @@ class TestRedistributionInvariants:
         bl = np.zeros(n)
         counts = waterfill_counts(bl, k, 1.0)
         assert counts.max() - counts.min() <= 1
+
+    @FAST
+    @given(
+        batch=st.integers(1, 6),
+        n=st.integers(1, 24),
+        seed=st.integers(0, 9999),
+    )
+    def test_waterfill_many_matches_scalar_row_for_row(self, batch, n, seed):
+        """`waterfill_counts_many` must be BIT-identical per row to the
+        scalar `waterfill_counts` — the engine's coalesced routing path
+        relies on it — including +inf backlogs (self-skip destination
+        masks), all-inf rows, k=0 rows, tied backlogs (repair
+        tie-breaking) and tiny units."""
+        rng = np.random.default_rng(seed)
+        bls, ks, units = [], [], []
+        for _ in range(batch):
+            bl = rng.exponential(5.0, n)
+            inf_frac = rng.choice([0.0, 0.3, 1.0], p=[0.5, 0.4, 0.1])
+            bl[rng.random(n) < inf_frac] = np.inf
+            if n > 2 and rng.random() < 0.5:
+                bl[: n // 2] = bl[0]  # ties exercise repair ordering
+            bls.append(bl)
+            ks.append(int(rng.integers(0, 300)))
+            units.append(float(rng.choice([1.0, 0.25, 1e-3, 1e-9])))
+        got = waterfill_counts_many(
+            np.stack(bls), np.asarray(ks), np.asarray(units)
+        )
+        for b in range(batch):
+            np.testing.assert_array_equal(
+                got[b], waterfill_counts(bls[b], ks[b], units[b]),
+                err_msg=f"row {b} diverged from scalar waterfill",
+            )
 
 
 class TestQuantizationInvariants:

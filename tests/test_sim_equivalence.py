@@ -23,6 +23,7 @@ from repro.core.admission import (
 )
 from repro.core.types import DySkewConfig, Policy
 from repro.sim.engine import (
+    Batch,
     ClusterConfig,
     MultiQuerySimulator,
     Simulator,
@@ -269,6 +270,207 @@ class TestMultiTenantEquivalence:
         for streams, res in zip((streams_a, streams_b), multi):
             solo = LegacySimulator(cluster, st, 0).run_query(streams, gap)
             self._assert_equal(res, solo)
+
+
+class TestClosedFormDrain:
+    """The closed-form drain (exit the heap once every arrival has been
+    routed; finish workers by prefix sums, recover tick counts in closed
+    form) must be bit-identical to replaying the heap to exhaustion —
+    and must never engage while an arrival (hence a mask-consuming
+    routing decision) is still pending."""
+
+    def _mixed_tenants(self, cluster):
+        # Mixed strategies on one shared cluster: an eagerly distributing
+        # tenant, a distribute-late tenant whose link TRANSITIONS
+        # mid-run, a static round-robin and a 'none' tenant.
+        profiles = multi_tenant_suite(4, seed=47)
+        tenants = staggered_tenants(profiles, cluster, dyskew_strategy,
+                                    seed=1)
+        tenants[1].strategy = StrategyConfig(kind="static_rr")
+        tenants[3].strategy = StrategyConfig(kind="none")
+        return tenants
+
+    def test_bit_identical_on_mixed_strategy_trace(self):
+        cluster = ClusterConfig(num_nodes=2)
+        heap = MultiQuerySimulator(
+            cluster, closed_form_drain=False
+        ).run(self._mixed_tenants(cluster))
+        sim = MultiQuerySimulator(cluster)
+        fast = sim.run(self._mixed_tenants(cluster))
+        assert sim.last_event_counts["drain_entered"] == 1
+        assert sim.last_event_counts["drained_heap_events"] > 0
+        for a, b in zip(fast, heap):
+            assert a.latency == b.latency
+            assert a.utilization == b.utilization
+            assert a.num_ticks == b.num_ticks
+            assert a.rows_redistributed == b.rows_redistributed
+            np.testing.assert_array_equal(a.per_worker_busy,
+                                          b.per_worker_busy)
+
+    def test_detector_conservative_while_arrivals_pending(self):
+        """While any batch remains unrouted a link transition could still
+        change routing, so every arrival must flow through the heap —
+        the drain may only absorb post-final-arrival events."""
+        cluster = ClusterConfig(num_nodes=2)
+        tenants = self._mixed_tenants(cluster)
+        total_batches = sum(len(s) for t in tenants for s in t.streams)
+        sim = MultiQuerySimulator(cluster)
+        res = sim.run(tenants)
+        counts = sim.last_event_counts
+        assert counts["drain_entered"] == 1
+        # Every arrival was popped from the heap, none synthesized by
+        # the drain ...
+        assert counts["arrival"] + counts["admitted"] == total_batches
+        # ... and links genuinely transitioned before the drain began
+        # (the late tenants redistribute only after mid-run strikes).
+        assert any(r.rows_redistributed > 0 for r in res)
+
+    def test_flag_false_keeps_the_heap(self):
+        cluster = ClusterConfig(num_nodes=2)
+        sim = MultiQuerySimulator(cluster, closed_form_drain=False)
+        sim.run(self._mixed_tenants(cluster))
+        assert sim.last_event_counts["drain_entered"] == 0
+        assert sim.last_event_counts["drained_heap_events"] == 0
+
+    def test_zero_row_batch_tenant_terminates(self):
+        """Regression: a link tenant whose batch carries ZERO rows never
+        sees a _DONE, so the incrementally-maintained active flag must
+        flip at its last arrival — with the drain disabled the tick
+        chain used to reschedule forever."""
+        cluster = ClusterConfig(num_nodes=1, interpreters_per_node=2)
+        streams = [[] for _ in range(cluster.num_workers)]
+        streams[0] = [Batch(costs=np.empty(0), sizes=np.empty(0))]
+        t = TenantQuery("empty", streams, default_strategies()["dyskew"],
+                        0.0, 1e-4)
+        for drain in (False, None):
+            res = MultiQuerySimulator(
+                cluster, closed_form_drain=drain
+            ).run([t])[0]
+            assert res.per_worker_busy.sum() == 0.0
+            assert res.num_ticks >= 1  # ticked at arrival, then stopped
+
+    def test_drain_num_ticks_exact_with_join_tick_at_pending_grid_event(
+        self,
+    ):
+        """Regression: a member whose join tick fires at EXACTLY the
+        pending grid event's time (an on-grid arrival that is also the
+        run's last arrival) must not be double-counted by the drain's
+        closed-form tick counting — the heap's `last_tick != now` guard
+        skips it at that instant."""
+        cluster = ClusterConfig(num_nodes=1, interpreters_per_node=4)
+        st = default_strategies()["dyskew"]
+        interval = st.tick_interval
+        g2 = (0.0 + interval) + interval  # chained grid value
+        rng = np.random.default_rng(7)
+
+        def tenant(name, arrival):
+            streams = [[] for _ in range(cluster.num_workers)]
+            streams[0] = [Batch(costs=rng.exponential(1e-3, 24),
+                                sizes=np.full(24, 256.0))]
+            return TenantQuery(name, streams, st, arrival, 1e-4)
+
+        tenants = [tenant("a", 0.0), tenant("b", g2)]
+        heap = MultiQuerySimulator(
+            cluster, closed_form_drain=False
+        ).run(tenants)
+        fast = MultiQuerySimulator(cluster).run(tenants)
+        for a, b in zip(fast, heap):
+            assert a.num_ticks == b.num_ticks
+            assert a.latency == b.latency
+
+    def test_zero_row_enqueue_does_not_corrupt_idle_census(self):
+        """Regression: a zero-row segment leaves its worker's ring empty
+        and the worker never starts, so it must NOT clear the
+        incremental idle flag — a bystander's density guard would
+        otherwise see a permanently-busy sibling and block a
+        redistribution the O(n) scan admitted."""
+        cluster = ClusterConfig(num_nodes=1, interpreters_per_node=4)
+        n = cluster.num_workers
+        rng = np.random.default_rng(23)
+
+        def zero_row_tenant():
+            streams = [[] for _ in range(n)]
+            streams[2] = [Batch(costs=np.empty(0), sizes=np.empty(0))]
+            return TenantQuery("z", streams, StrategyConfig(kind="none"),
+                               0.0, 1e-4)
+
+        def heavy_tenant():
+            # 2 sparse heavy rows: trips the density-guard size checks,
+            # so the decision comes down to the idle-sibling fraction —
+            # threshold 0.9 distinguishes all-3-idle (1.0, redistribute)
+            # from the corrupted census (2/3, blocked).
+            streams = [[] for _ in range(n)]
+            streams[0] = [Batch(costs=rng.exponential(0.05, 2),
+                                sizes=np.full(2, 2e6))]
+            st = StrategyConfig(
+                kind="dyskew",
+                dyskew=DySkewConfig(policy=Policy.EAGER_SNOWPARK,
+                                    idle_sibling_frac=0.9),
+                enable_cost_gate=False,
+            )
+            return TenantQuery("h", streams, st, 0.1, 1e-4)
+
+        res = MultiQuerySimulator(cluster, none_closed_form=False).run(
+            [zero_row_tenant(), heavy_tenant()]
+        )
+        assert res[1].rows_redistributed > 0
+
+    @pytest.mark.parametrize("arrival", [0.013, 0.253, 1.01])
+    def test_drain_pending_join_tick_fires_once(self, arrival):
+        """Regression: a batch-less member arriving after the fleet's
+        last routed arrival leaves its one-off join _GTICK pending at
+        drain entry — the drain must count it as ONE fire, not replay
+        it as a recurring grid chain, and must not count pending grid
+        fires from before the member arrived (arrivals beyond the first
+        pending chain instants cover that gate)."""
+        cluster = ClusterConfig(num_nodes=1, interpreters_per_node=4)
+        st = default_strategies()["dyskew"]
+        rng = np.random.default_rng(19)
+        streams_a = [[] for _ in range(cluster.num_workers)]
+        streams_a[0] = [Batch(costs=rng.exponential(1e-3, 24),
+                              sizes=np.full(24, 256.0))]
+        a = TenantQuery("a", streams_a, st, 0.0, 1e-4)
+        b = TenantQuery("b", [[] for _ in range(cluster.num_workers)],
+                        st, arrival, 1e-4)  # no batches, off-grid
+        heap = MultiQuerySimulator(
+            cluster, batch_ticks=True, closed_form_drain=False
+        ).run([a, b])
+        fast = MultiQuerySimulator(cluster, batch_ticks=True).run([a, b])
+        for x, y in zip(fast, heap):
+            assert x.num_ticks == y.num_ticks
+            assert x.latency == y.latency
+
+    def test_coalesced_enqueues_drain_exact(self):
+        """Same-(time, destination) _ENQUEUE pushes coalesce into one
+        heap event; the payload must replay per-segment both in the loop
+        and in the drain's per-worker replay."""
+        cluster = ClusterConfig(num_nodes=1, interpreters_per_node=4)
+        rng = np.random.default_rng(11)
+        st = StrategyConfig(kind="none")
+
+        def tenant(name):
+            costs = rng.exponential(1e-3, 40)
+            sizes = np.full(40, 256.0)
+            streams = [[] for _ in range(cluster.num_workers)]
+            streams[0] = [Batch(costs=costs, sizes=sizes.copy())]
+            return TenantQuery(name, streams, st, 0.0, 1e-4)
+
+        tenants = [tenant("a"), tenant("b")]
+        sim = MultiQuerySimulator(cluster, none_closed_form=False)
+        fast = sim.run(tenants)
+        assert sim.last_event_counts["enqueues_coalesced"] >= 1
+        heap = MultiQuerySimulator(
+            cluster, none_closed_form=False, closed_form_drain=False
+        ).run(tenants)
+        for a, b in zip(fast, heap):
+            assert a.latency == b.latency
+            np.testing.assert_array_equal(a.per_worker_busy,
+                                          b.per_worker_busy)
+        total = sum(b.costs.sum() for t in tenants for s in t.streams
+                    for b in s)
+        np.testing.assert_allclose(
+            sum(r.per_worker_busy.sum() for r in fast), total, rtol=1e-9
+        )
 
 
 class TestMultiQuerySimulator:
