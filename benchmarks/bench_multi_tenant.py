@@ -21,7 +21,14 @@ regimes:
       `BatchedLinkSim` path (``batch_ticks=True``, one jitted tick call
       per cadence), reporting the tick-batching wall-clock speedup;
       plus the closed-form 'none' fast path vs the event loop on
-      disjoint-producer tenants.
+      disjoint-producer tenants;
+  slo         — the SLO-layer study (``--slo``; `slo_suite` — gold/
+      silver classes with deadlines + deadline-free bulk — under
+      open-loop OVERLOAD): four arms on identical traffic — weight-only
+      fair share, deadline-aware admission (EDF credit boost),
+      deadline-aware + preemption, and deadline-aware + warehouse
+      autoscaling — reporting per-class SLO attainment (fraction of
+      queries meeting their deadline) and p99 tardiness.
 """
 
 from __future__ import annotations
@@ -41,7 +48,11 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 
 import numpy as np
 
-from repro.core.admission import FairShareConfig
+from repro.core.admission import (
+    AutoscaleConfig,
+    DeadlineConfig,
+    FairShareConfig,
+)
 from repro.core.types import DySkewConfig, Policy, SkewModelKind
 from repro.sim.engine import (
     ClusterConfig,
@@ -63,6 +74,7 @@ from repro.sim.workload import (
     many_tenants_suite,
     multi_tenant_suite,
     priority_class_suite,
+    slo_suite,
 )
 
 Row = Tuple[str, float, str]
@@ -285,8 +297,85 @@ def _many_tenants(quick: bool) -> List[Row]:
     return rows
 
 
+def _slo(quick: bool) -> List[Row]:
+    """SLO layer under open-loop OVERLOAD (the warehouse is offered
+    ~2.5x its service capacity, so queueing is unavoidable and admission
+    ORDER is what decides who meets a deadline): identical traffic from
+    `slo_suite` (gold 0.5s / silver 2.0s deadlines + deadline-free bulk)
+    through four arms — weight-only fair share, deadline-aware admission
+    (EDF credit boost), + preemption of admitted-but-unstarted rows, and
+    + warehouse autoscaling (which may also GROW the pool instead of
+    only reordering entry).  Reported: per-class SLO attainment and p99
+    tardiness, overall attainment, preempted rows, applied resizes."""
+    num_queries = 14 if quick else 32
+    cluster = ClusterConfig(num_nodes=2 if quick else 4)
+    specs = slo_suite()
+    proc = ArrivalProcess(
+        kind="poisson",
+        rate=open_loop_rate([p for p, _, _ in specs], cluster, load=2.5),
+    )
+    fs = FairShareConfig(quantum_rows=128.0, heavy_row_bytes=1e6)
+    dc = DeadlineConfig(urgency_horizon=1.0, boost_quanta=4.0)
+    # Autoscale arm: start at half the warehouse, allowed to grow to all
+    # of it under backlog/attainment pressure.
+    asc = AutoscaleConfig(
+        min_workers=cluster.num_workers // 2,
+        max_workers=cluster.num_workers,
+        backlog_high=48.0, backlog_low=4.0,
+        step=cluster.interpreters_per_node,
+        interval=0.1, cooldown=0.2,
+    )
+    t0 = time.time()
+    arms = [
+        ("fairshare", dict()),
+        ("deadline", dict(deadline_aware=True, deadline_cfg=dc)),
+        ("preempt", dict(deadline_aware=True, deadline_cfg=dc,
+                         preemption=True)),
+        ("autoscale", dict(deadline_aware=True, deadline_cfg=dc,
+                           preemption=True, autoscale=asc)),
+    ]
+    outs = {
+        name: run_open_loop(specs, cluster, proc, num_queries, seed=0,
+                            fair_share=fs, **kw)
+        for name, kw in arms
+    }
+    rows: List[Row] = []
+    base = outs["fairshare"]
+    for name, _ in arms:
+        out = outs[name]
+        ev = out["event_counts"]
+        for cls in ("gold", "silver"):
+            stats = out["per_class"].get(cls)
+            if stats is None:
+                continue
+            rows.append((
+                f"slo_{name}_{cls}_attainment",
+                stats["slo_attainment"],
+                f"p99_tardiness_s={stats['p99_tardiness']:.3f};"
+                f"p99_latency_s={stats['p99']:.3f};n={stats['n']}",
+            ))
+        rows.append((
+            f"slo_{name}_overall_attainment",
+            out["slo_attainment"],
+            f"vs_fairshare={out['slo_attainment'] - base['slo_attainment']:+.3f};"
+            f"preempted_rows={ev.get('preempted_rows', 0)};"
+            f"resizes_applied={ev.get('resizes_applied', 0)};"
+            f"bulk_p99_s={out['per_class']['bulk']['p99']:.2f};"
+            f"queries={num_queries};load=2.5",
+        ))
+    rows.append((
+        "slo_section_wall",
+        (time.time() - t0) * 1e6,
+        f"arms={len(arms)};wall_s={time.time() - t0:.1f}",
+    ))
+    return rows
+
+
 def run(quick: bool = False) -> List[Row]:
-    return _closed_loop(quick) + _open_loop(quick) + _many_tenants(quick)
+    return (
+        _closed_loop(quick) + _open_loop(quick) + _many_tenants(quick)
+        + _slo(quick)
+    )
 
 
 if __name__ == "__main__":
@@ -298,7 +387,15 @@ if __name__ == "__main__":
     ap.add_argument("--many", action="store_true",
                     help="run ONLY the hundreds-of-tenants tick-batching "
                          "scaling section")
+    ap.add_argument("--slo", action="store_true",
+                    help="run ONLY the SLO deadline/preemption/autoscale "
+                         "section")
     args = ap.parse_args()
-    rows = _many_tenants(args.quick) if args.many else run(quick=args.quick)
+    if args.many:
+        rows = _many_tenants(args.quick)
+    elif args.slo:
+        rows = _slo(args.quick)
+    else:
+        rows = run(quick=args.quick)
     for r in rows:
         print(",".join(str(x) for x in r))

@@ -13,6 +13,21 @@ call-site needs before it may move work off its producer:
   self-skip     — destination eligibility for the §III.B forced-remote
       ablation (the producer — or its whole node — is excluded).
 
+:class:`DeadlineAwareAdmission` — the SLO layer on top of
+:class:`FairShareAdmission`: per-tenant SLO targets translate pending
+work into absolute deadlines, an earliest-deadline-first credit boost
+relaxes the admission threshold as slack runs out (the full charge still
+lands on the deficit, so long-run throughput shares stay weighted), EDF
+ordering of parked-work release, and a :meth:`preempt_candidates` /
+:meth:`preempt_transfer` API that names admitted-but-unstarted work of
+over-share tenants to displace in favour of an urgent tenant.
+
+:class:`AutoscalePolicy` — hysteresis warehouse autoscaling: grow the
+interpreter pool (whole workers) when backlog per active worker or SLO
+attainment degrades, shrink when the pool runs light, with a cooldown
+between actions.  Pure decision logic — the simulator/serving engines
+own the actual pool rescaling.
+
 :class:`FairShareAdmission` — a weighted deficit-round-robin admission
 layer for multi-tenant execution over ONE shared virtual warehouse.
 Tenants carry priority weights; the planner paces each tenant's entry
@@ -49,7 +64,7 @@ Invariants:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -392,27 +407,46 @@ class FairShareAdmission:
             return 0.0
         return nbytes
 
-    def try_admit(
-        self, q: int, rows: int, nbytes: float, bytes_per_row: float = 0.0
+    def _admissible(
+        self,
+        q: int,
+        rows: int,
+        charge_b: float,
+        boost_r: float = 0.0,
+        boost_b: float = 0.0,
+        rows_advance: float = 0.0,
     ) -> bool:
-        """Admit ``rows``/``nbytes`` of tenant ``q`` now, or refuse.
+        """Pure threshold test (no mutation): would ``rows``/``charge_b``
+        clear admission now?  ``rows_advance`` hypothesizes extra row
+        credit (capped) — the preemption dry-run probe, so engines can
+        check an admission WOULD succeed before displacing victims."""
+        if self._total_outstanding <= 0.0:
+            return True
+        dr = min(self.deficit_rows[q] + rows_advance, self._cap_rows(q))
+        ok_rows = dr + boost_r >= rows or dr >= self._cap_rows(q)
+        ok_bytes = (
+            charge_b == 0.0
+            or self.deficit_bytes[q] + boost_b >= charge_b
+            or self.deficit_bytes[q] >= self._cap_bytes(q)
+        )
+        return ok_rows and ok_bytes
 
-        On True the charge is deducted and the work counts as in-service
-        until :meth:`on_complete`.  On False nothing is deducted — park
-        the work and retry after the next completion.
-        """
+    def _admit_checked(
+        self,
+        q: int,
+        rows: int,
+        nbytes: float,
+        bytes_per_row: float,
+        boost_r: float = 0.0,
+        boost_b: float = 0.0,
+    ) -> bool:
+        """The ONE copy of the park-or-admit body, shared with
+        :class:`DeadlineAwareAdmission` (which passes its EDF boosts;
+        the base planner's boosts are zero).  The boost relaxes only the
+        admission THRESHOLD — the charge always lands in full."""
         charge_b = self._nic_charge(nbytes, bytes_per_row)
         if self._total_outstanding > 0.0:
-            ok_rows = (
-                self.deficit_rows[q] >= rows
-                or self.deficit_rows[q] >= self._cap_rows(q)
-            )
-            ok_bytes = (
-                charge_b == 0.0
-                or self.deficit_bytes[q] >= charge_b
-                or self.deficit_bytes[q] >= self._cap_bytes(q)
-            )
-            if not (ok_rows and ok_bytes):
+            if not self._admissible(q, rows, charge_b, boost_r, boost_b):
                 self.deferred[q] += 1
                 self.backlogged[q] = True
                 return False
@@ -428,6 +462,17 @@ class FairShareAdmission:
         self.admitted[q] += 1
         self.backlogged[q] = False
         return True
+
+    def try_admit(
+        self, q: int, rows: int, nbytes: float, bytes_per_row: float = 0.0
+    ) -> bool:
+        """Admit ``rows``/``nbytes`` of tenant ``q`` now, or refuse.
+
+        On True the charge is deducted and the work counts as in-service
+        until :meth:`on_complete`.  On False nothing is deducted — park
+        the work and retry after the next completion.
+        """
+        return self._admit_checked(q, rows, nbytes, bytes_per_row)
 
     def on_complete(self, q: int, rows: int) -> None:
         """Report ``rows`` of tenant ``q`` finishing service.  Credits one
@@ -499,6 +544,273 @@ class FairShareAdmission:
                 self.admitted[q] += 1
                 return q
         q = max(cand, key=lambda a: self.deficit_rows[a])
-        self.deficit_rows[q] = 0.0
+        # Charge the served item like the normal path does (carrying debt)
+        # — zeroing the deficit here let a tenant with oversized items
+        # earn a free reset every time the rotation bound tripped,
+        # systematically exceeding its weighted share.
+        self.deficit_rows[q] -= float(costs[q])
         self.admitted[q] += 1
         return q
+
+
+# --------------------------------------------------------------------- #
+# SLO layer: deadline-aware admission + warehouse autoscaling
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineConfig:
+    """Tuning for :class:`DeadlineAwareAdmission`.
+
+    ``urgency_horizon`` is the slack (seconds to deadline) below which the
+    EDF credit boost ramps in: at slack >= horizon the planner behaves
+    exactly like weight-only fair share, at slack <= 0 the boost is at
+    its ``boost_quanta`` maximum.  ``preempt_headroom`` is the multiple
+    of a tenant's weighted share of in-service rows beyond which it is
+    named a preemption candidate (1.0 = any over-share tenant; higher =
+    only clearly-over tenants).
+    """
+
+    urgency_horizon: float = 1.0
+    boost_quanta: float = 2.0
+    preempt_headroom: float = 1.25
+
+
+class DeadlineAwareAdmission(FairShareAdmission):
+    """Per-tenant SLO targets + EDF credit boost over weighted DRR.
+
+    Each tenant may declare an SLO target (seconds from a work item's
+    arrival to its completion).  Callers pass the item's absolute
+    ``deadline`` and the current virtual ``now`` to :meth:`try_admit`;
+    under contention the admission threshold is relaxed by a boost that
+    grows linearly as slack shrinks inside ``urgency_horizon`` — but the
+    FULL charge still lands on the tenant's deficit (debt), so admitted
+    throughput still converges to the weighted shares over time; the
+    boost only reorders WHO gets through while the deadline is live.
+
+    Three additions over the base planner:
+
+      * EDF release ordering — :meth:`release_order` sorts the parked
+        tenants by earliest refused deadline (stable w.r.t. the base
+        round-robin rotation, so tenants without deadlines keep rotating
+        fairly behind the urgent ones).
+      * :meth:`preempt_candidates` — names tenants whose in-service rows
+        exceed ``preempt_headroom`` times their weighted share of the
+        total (most-over-share first): their admitted-but-unstarted work
+        is what an engine may re-park to make room for an urgent tenant.
+      * :meth:`preempt_transfer` — the bookkeeping for one preemption:
+        the victim's re-parked rows leave service (their charge is
+        refunded, since re-admission will charge them again) and the
+        urgent tenant's row deficit is advanced by the same amount
+        (capped), which is what makes its retry admissible.
+
+    Starvation-freedom is inherited: boosts and advances only ever ADD
+    admissibility, deficits stay capped, and a tenant at its cap remains
+    always admissible, so every backlogged tenant — with or without an
+    SLO — is still eventually served.
+    """
+
+    def __init__(
+        self,
+        weights: Sequence[float],
+        slo_targets: Sequence[Optional[float]],
+        cfg: FairShareConfig = FairShareConfig(),
+        deadline_cfg: DeadlineConfig = DeadlineConfig(),
+    ):
+        super().__init__(weights, cfg)
+        if len(slo_targets) != self.nq:
+            raise ValueError(
+                f"slo_targets length {len(slo_targets)} != tenant count "
+                f"{self.nq}"
+            )
+        self.slo_targets = [
+            None if s is None else float(s) for s in slo_targets
+        ]
+        self.dcfg = deadline_cfg
+        inf = float("inf")
+        #: Earliest deadline among each tenant's currently-refused offers
+        #: (inf = none pending); drives the EDF release order.
+        self.pending_deadline = [inf] * self.nq
+        # Telemetry.
+        self.preempted_rows = [0.0] * self.nq
+        self.boost_admits = [0] * self.nq
+
+    # -- EDF credit boost ---------------------------------------------- #
+
+    def _urgency(self, deadline: Optional[float], now: float) -> float:
+        """0 (relaxed) → 1 (at/past deadline) inside the horizon."""
+        if deadline is None or deadline == float("inf"):
+            return 0.0
+        h = max(self.dcfg.urgency_horizon, 1e-12)
+        u = 1.0 - (deadline - now) / h
+        return min(max(u, 0.0), 1.0)
+
+    def try_admit(
+        self,
+        q: int,
+        rows: int,
+        nbytes: float,
+        bytes_per_row: float = 0.0,
+        deadline: Optional[float] = None,
+        now: float = 0.0,
+    ) -> bool:
+        u = self._urgency(deadline, now)
+        s = max(self.share_of(q), 1e-9)
+        boost_r = u * self.dcfg.boost_quanta * self.cfg.quantum_rows * s
+        boost_b = u * self.dcfg.boost_quanta * self.cfg.quantum_bytes * s
+        contended = self._total_outstanding > 0.0
+        boosted = (
+            contended and boost_r > 0.0 and self.deficit_rows[q] < rows
+        )
+        # One shared park-or-admit body (the base class's), with the EDF
+        # boosts relaxing the threshold; the full charge still lands.
+        if not self._admit_checked(
+            q, rows, nbytes, bytes_per_row, boost_r, boost_b
+        ):
+            if deadline is not None and deadline < self.pending_deadline[q]:
+                self.pending_deadline[q] = deadline
+            return False
+        if boosted:
+            self.boost_admits[q] += 1
+        self.pending_deadline[q] = float("inf")
+        return True
+
+    def would_admit(
+        self,
+        q: int,
+        rows: int,
+        nbytes: float,
+        bytes_per_row: float = 0.0,
+        deadline: Optional[float] = None,
+        now: float = 0.0,
+        rows_advance: float = 0.0,
+    ) -> bool:
+        """Dry-run of :meth:`try_admit` (no state touched):
+        ``rows_advance`` hypothesizes the row credit a preemption could
+        transfer, so an engine can verify the urgent admission WOULD
+        succeed before it displaces any victim's work."""
+        u = self._urgency(deadline, now)
+        s = max(self.share_of(q), 1e-9)
+        return self._admissible(
+            q, rows, self._nic_charge(nbytes, bytes_per_row),
+            u * self.dcfg.boost_quanta * self.cfg.quantum_rows * s,
+            u * self.dcfg.boost_quanta * self.cfg.quantum_bytes * s,
+            rows_advance,
+        )
+
+    def release_order(self) -> List[int]:
+        """EDF first: parked tenants with earlier refused deadlines come
+        before later/deadline-free ones; ties keep the base round-robin
+        rotation (the sort is stable), so no-SLO tenants still rotate."""
+        order = super().release_order()
+        return sorted(order, key=lambda q: self.pending_deadline[q])
+
+    # -- preemption ----------------------------------------------------- #
+
+    def preempt_candidates(
+        self, protect: Sequence[int] = ()
+    ) -> List[Tuple[int, float]]:
+        """Over-share tenants whose in-service rows exceed
+        ``preempt_headroom`` × their weighted share of total in-service
+        rows.  Returns ``(tenant, excess_rows)`` pairs, most-over-share
+        first (ties by tenant index); ``protect`` tenants are skipped."""
+        tot = self._total_outstanding
+        if tot <= 0.0:
+            return []
+        skip = set(protect)
+        out: List[Tuple[int, float]] = []
+        for q in range(self.nq):
+            if q in skip or not self.live[q]:
+                continue
+            fair = self.dcfg.preempt_headroom * self.share_of(q) * tot
+            excess = self.outstanding_rows[q] - fair
+            if excess > 0.0:
+                out.append((q, excess))
+        out.sort(key=lambda t: -t[1])
+        return out
+
+    def preempt_transfer(self, victim: int, urgent: int, rows: float) -> None:
+        """Account one preemption of ``rows`` admitted-but-unstarted rows
+        from ``victim`` in favour of ``urgent`` (see class docstring)."""
+        take = min(float(rows), self.outstanding_rows[victim])
+        self.outstanding_rows[victim] -= take
+        self._total_outstanding = max(self._total_outstanding - take, 0.0)
+        # Refund the victim (its re-parked rows will be charged again on
+        # re-admission) and advance the urgent tenant by the same amount.
+        self.deficit_rows[victim] = min(
+            self.deficit_rows[victim] + take, self._cap_rows(victim)
+        )
+        self.deficit_rows[urgent] = min(
+            self.deficit_rows[urgent] + take, self._cap_rows(urgent)
+        )
+        self.preempted_rows[victim] += take
+        self.backlogged[victim] = True
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleConfig:
+    """Tuning for :class:`AutoscalePolicy`.
+
+    The pool grows by ``step`` whole workers when queued rows per active
+    worker exceed ``backlog_high`` — or when running SLO attainment sags
+    below ``attainment_low`` while any backlog exists — and shrinks when
+    backlog per worker falls under ``backlog_low`` with attainment
+    healthy.  ``interval`` is the decision cadence (virtual seconds) and
+    ``cooldown`` the minimum time between two resizes (the hysteresis
+    that stops flapping).  ``min_workers``/``max_workers`` bound the pool
+    (engines clamp ``max_workers`` to the physical cluster).
+    """
+
+    min_workers: int = 8
+    max_workers: int = 1 << 30
+    backlog_high: float = 64.0
+    backlog_low: float = 8.0
+    attainment_low: float = 0.9
+    step: int = 4
+    interval: float = 0.25
+    cooldown: float = 0.5
+
+
+class AutoscalePolicy:
+    """Deterministic hysteresis autoscaler (decision logic only).
+
+    Engines call :meth:`decide` on a fixed cadence with the observed
+    backlog and (optionally) the running SLO attainment; the returned
+    worker count is what the pool should be rescaled to.  No randomness,
+    no wall clock — the same observation sequence always produces the
+    same resize sequence, preserving the engines' determinism contract.
+    """
+
+    def __init__(self, cfg: AutoscaleConfig):
+        self.cfg = cfg
+        self._last_resize = -float("inf")
+        #: (now, old, new) log of every applied resize (telemetry).
+        self.resizes: List[Tuple[float, int, int]] = []
+
+    def decide(
+        self,
+        now: float,
+        active: int,
+        backlog_rows: float,
+        attainment: Optional[float] = None,
+    ) -> int:
+        c = self.cfg
+        if now - self._last_resize < c.cooldown:
+            return active
+        per = backlog_rows / max(active, 1)
+        target = active
+        if per > c.backlog_high or (
+            attainment is not None
+            and attainment < c.attainment_low
+            and backlog_rows > 0.0
+        ):
+            target = active + c.step
+        elif per < c.backlog_low and (
+            attainment is None or attainment >= c.attainment_low
+        ):
+            target = active - c.step
+        target = min(max(target, c.min_workers), c.max_workers)
+        if target != active:
+            self._last_resize = now
+            self.resizes.append((now, active, target))
+        return target

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -53,6 +53,16 @@ class DataConfig:
     tenant_weights: Optional[Tuple[float, ...]] = None
 
 
+class _TenantDoc(np.ndarray):
+    """ndarray view carrying its owning tenant index (``tenant`` attr).
+
+    Lets the packer credit `DataPipeline.tenant_tokens` when a document
+    is actually placed — crediting at draw time over-counted whenever a
+    document fit no sequence and was carried (previously: dropped)."""
+
+    tenant: int
+
+
 class SyntheticDocs:
     """Deterministic document stream (id, tokens)."""
 
@@ -75,22 +85,59 @@ class SyntheticDocs:
 
 
 def pack_documents(
-    docs: Iterator[np.ndarray], seq_len: int, count: int
+    docs: Iterator[np.ndarray],
+    seq_len: int,
+    count: int,
+    carry: Optional[List[np.ndarray]] = None,
+    on_pack: Optional[Callable[[np.ndarray], None]] = None,
 ) -> List[np.ndarray]:
-    """Greedy first-fit packing of documents into `count` sequences."""
+    """Greedy first-fit packing of documents into `count` sequences.
+
+    ``carry`` (when given) is the cross-batch leftover buffer: documents
+    in it are offered FIRST, and a drawn document that fits no open
+    sequence is appended to it for the next batch instead of being
+    silently dropped (the drop both lost data and broke the tenant token
+    accounting — the mixer had already credited the tokens).
+    ``on_pack`` fires once per document actually placed, which is where
+    per-tenant token accounting now lives."""
     seqs: List[List[np.ndarray]] = [[] for _ in range(count)]
     fill = np.zeros(count, np.int64)
-    for i in range(count * 4):  # bounded attempts
+    offer: List[np.ndarray] = list(carry) if carry else []
+    if carry is not None:
+        carry.clear()
+    oi = 0
+    for i in range(count * 4 + len(offer)):  # bounded attempts
         if fill.min() >= seq_len:
             break
-        doc = next(docs)
+        if oi < len(offer):
+            doc = offer[oi]
+            oi += 1
+        else:
+            try:
+                doc = next(docs)
+            except StopIteration:
+                # Finite stream exhausted (pipeline streams are infinite;
+                # direct callers may not be): pack what we have.
+                break
         # first shard with room
         order = np.argsort(fill)
         for s in order:
             if fill[s] + len(doc) <= seq_len:
                 seqs[s].append(doc)
                 fill[s] += len(doc)
+                if on_pack is not None:
+                    on_pack(doc)
                 break
+        else:
+            # Fits nowhere this batch: keep it for the next one — unless
+            # it can never fit ANY sequence (len > seq_len), which would
+            # carry it forever; such a doc is structurally unpackable
+            # and is discarded uncounted (the pipeline's own streams
+            # clip to seq_len, so this only guards direct callers).
+            if carry is not None and len(doc) <= seq_len:
+                carry.append(doc)
+    if carry is not None:
+        carry.extend(offer[oi:])
     out = []
     for s in range(count):
         toks = (np.concatenate(seqs[s]) if seqs[s]
@@ -109,8 +156,14 @@ class DataPipeline:
 
     def __init__(self, cfg: DataConfig):
         self.cfg = cfg
+        # Cross-batch leftover buffer: documents that fit no sequence of
+        # the current batch are carried to the next one, never dropped.
+        self._carry: List[np.ndarray] = []
         if cfg.tenant_weights:
-            # Per-tenant token accounting for observability/tests.
+            # Per-tenant token accounting for observability/tests —
+            # credited when a document is actually PACKED (see
+            # `_on_pack`), not when the mixer draws it, so the counters
+            # always equal the tokens that really reached batches.
             self.tenant_tokens = np.zeros(len(cfg.tenant_weights), np.int64)
             self.docs = iter(self._mixed_docs())
         else:
@@ -133,7 +186,11 @@ class DataPipeline:
     def _mixed_docs(self) -> Iterator[np.ndarray]:
         """Interleave per-tenant document streams by deficit round robin:
         each pick is charged the document's token count, so token share
-        (not just document count) follows the weights."""
+        (not just document count) follows the weights.  Documents are
+        tagged with their owning tenant (`_TenantDoc` view); the token
+        credit happens at PACK time via `_on_pack`, so a document parked
+        in the carry buffer is not counted until it really lands in a
+        batch."""
         cfg = self.cfg
         weights = list(cfg.tenant_weights)
         planner = FairShareAdmission(
@@ -149,12 +206,24 @@ class DataPipeline:
             q = planner.pick_next([float(len(d)) for d in pending])
             doc = pending[q]
             pending[q] = next(streams[q])
+            tagged = doc.view(_TenantDoc)
+            tagged.tenant = q
+            yield tagged
+
+    def _on_pack(self, doc: np.ndarray) -> None:
+        """Per-document pack callback: credit the owning tenant's token
+        counter (docs from `_mixed_docs` carry a tenant tag)."""
+        q = getattr(doc, "tenant", None)
+        if q is not None:
             self.tenant_tokens[q] += len(doc)
-            yield doc
 
     def _assemble(self) -> Dict[str, np.ndarray]:
         cfg = self.cfg
-        seqs = pack_documents(self.docs, cfg.seq_len, cfg.global_batch)
+        seqs = pack_documents(
+            self.docs, cfg.seq_len, cfg.global_batch,
+            carry=self._carry,
+            on_pack=self._on_pack if cfg.tenant_weights else None,
+        )
         tokens = np.stack(seqs)
         if cfg.dyskew_balance and cfg.num_shards > 1:
             lens = (tokens != 0).sum(axis=1).astype(np.float32)

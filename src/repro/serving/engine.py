@@ -16,8 +16,27 @@ Multi-tenant serving: requests carry a ``tenant`` class index and
 ``ServeConfig.tenant_weights`` turns on the shared weighted fair-share
 admission layer (`repro.core.admission.FairShareAdmission`) — the same
 deficit-round-robin planner the multi-tenant simulator uses — pacing each
-class's entry into the decode batches, with KV bytes charged on the
-Row-Size-Model NIC lane.
+class's entry into the decode batches, with MIGRATED KV bytes (the ones
+that actually crossed the interconnect) charged on the Row-Size-Model
+NIC lane at the request's next admission.
+
+Request timeline (honest accounting): a request materializes KV only by
+PREFILLING — after it enters a decode batch, its prompt is processed at
+``prefill_rate`` before any decode progress accrues — so ``kv_bytes``
+reports the KV that actually exists (prefilled prompt + generated
+tokens), fresh queued requests are free to move (the eager path), and a
+migrated request is in transit for ``migration_latency + kv_bytes /
+interconnect_bw`` simulated seconds before it can be scheduled again.
+``migrated_gb`` therefore counts only KV that was really transferred.
+
+SLO layer: ``ServeConfig.slo_targets`` declares per-tenant-class
+deadlines (seconds from arrival); with ``deadline_aware=True`` decode
+admission runs through `repro.core.admission.DeadlineAwareAdmission`
+(EDF credit boost as slack runs out), and ``preemption=True`` lets an
+urgent queued request displace a running slot of an over-share tenant —
+the victim re-queues with its KV intact (so moving it later costs real
+bytes and real transit time).  Per-tenant results then include SLO
+attainment and p99 tardiness.
 """
 
 from __future__ import annotations
@@ -29,7 +48,12 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import AdaptiveLink, AdaptiveLinkConfig, BatchAdmission, CostModelConfig
-from repro.core.admission import FairShareAdmission, FairShareConfig
+from repro.core.admission import (
+    DeadlineAwareAdmission,
+    DeadlineConfig,
+    FairShareAdmission,
+    FairShareConfig,
+)
 from repro.core.types import DySkewConfig, Policy
 
 
@@ -44,11 +68,21 @@ class Request:
     replica: int = -1
     generated: int = 0       # whole tokens emitted (integral by invariant)
     progress: float = 0.0    # fractional decode progress, in tokens
+    prefilled: int = 0       # prompt tokens with materialized KV
+    pf_progress: float = 0.0  # fractional prefill progress, in tokens
+    available_at: float = 0.0  # in transit (migrating) until this time
+    nic_debt: float = 0.0    # KV bytes moved over the NIC, not yet billed
+    deadline: float = float("inf")  # absolute SLO deadline (set by engine)
+    preemptions: int = 0     # times this request lost its decode slot
     done_at: float = -1.0
 
     @property
     def kv_len(self) -> int:
-        return self.prompt_len + self.generated
+        # Only MATERIALIZED KV counts: prefilled prompt + generated
+        # tokens.  A request that never prefilled carries no KV — its
+        # migration is free and moves zero bytes (the seed engine charged
+        # the full prompt here, billing KV that was never built).
+        return self.prefilled + self.generated
 
     def kv_bytes(self, bytes_per_token: float) -> float:
         return self.kv_len * bytes_per_token
@@ -68,9 +102,25 @@ class ServeConfig:
     # requests carry a `tenant` index into these weights, and entry into
     # a replica's decode batch is paced by the shared
     # `repro.core.admission.FairShareAdmission` planner (the same layer
-    # the multi-tenant simulator uses), with KV bytes as the Row Size
-    # Model NIC-lane charge.
+    # the multi-tenant simulator uses), with the KV bytes a request
+    # actually moved over the interconnect as the Row Size Model
+    # NIC-lane charge.
     tenant_weights: Optional[Tuple[float, ...]] = None
+    # Per-tenant-class SLO targets (seconds from arrival to completion;
+    # None entries = no deadline for that class).  Length must match
+    # ``tenant_weights`` when both are set.
+    slo_targets: Optional[Tuple[Optional[float], ...]] = None
+    # Upgrade fair-share admission to the deadline-aware planner (EDF
+    # credit boost; requires tenant_weights + slo_targets).
+    deadline_aware: bool = False
+    # Allow urgent queued requests to preempt a running decode slot of an
+    # over-share tenant (requires deadline_aware).
+    preemption: bool = False
+    deadline_cfg: DeadlineConfig = DeadlineConfig()
+    # Simulated-time budget: runs longer than this stop and REPORT the
+    # truncation (the seed engine silently broke, making a stuck run
+    # indistinguishable from a finished one).
+    max_sim_s: float = 3600.0
 
 
 class ServingScheduler:
@@ -169,18 +219,46 @@ class ServingEngine:
     def _make_planner(self) -> Optional[FairShareAdmission]:
         """Fair-share admission over tenant classes: requests = rows, a
         decode slot = the pool resource, KV bytes = the NIC-lane charge.
-        Built fresh per run — the planner is stateful (deficits,
-        in-service counts) like the queues it paces."""
-        if not self.cfg.tenant_weights:
+        ``deadline_aware`` upgrades to the EDF-boosted planner (per-class
+        ``slo_targets`` become admission deadlines).  Built fresh per run
+        — the planner is stateful (deficits, in-service counts) like the
+        queues it paces."""
+        cfg = self.cfg
+        if cfg.deadline_aware and not cfg.tenant_weights:
+            raise ValueError(
+                "deadline_aware requires tenant_weights (the deadline-"
+                "aware planner is an upgrade of the fair-share layer)"
+            )
+        if cfg.preemption and not cfg.deadline_aware:
+            raise ValueError(
+                "preemption requires deadline_aware (victims are picked "
+                "by the deadline-aware planner)"
+            )
+        if not cfg.tenant_weights:
             return None
-        return FairShareAdmission(
-            list(self.cfg.tenant_weights),
-            FairShareConfig(
-                quantum_rows=float(self.cfg.max_batch),
-                quantum_bytes=64e6,
-                heavy_row_bytes=64e6,
-            ),
+        fs = FairShareConfig(
+            quantum_rows=float(cfg.max_batch),
+            quantum_bytes=64e6,
+            heavy_row_bytes=64e6,
         )
+        if cfg.deadline_aware:
+            if not cfg.slo_targets:
+                raise ValueError(
+                    "deadline_aware requires slo_targets (otherwise the "
+                    "SLO layer would be silently inert)"
+                )
+            if len(cfg.slo_targets) != len(cfg.tenant_weights):
+                raise ValueError(
+                    f"slo_targets length {len(cfg.slo_targets)} != "
+                    f"tenant_weights length {len(cfg.tenant_weights)}"
+                )
+            return DeadlineAwareAdmission(
+                list(cfg.tenant_weights),
+                list(cfg.slo_targets),
+                fs,
+                cfg.deadline_cfg,
+            )
+        return FairShareAdmission(list(cfg.tenant_weights), fs)
 
     def run(self, requests: List[Request]) -> Dict:
         cfg = self.cfg
@@ -190,11 +268,24 @@ class ServingEngine:
         t = 0.0
         done: List[Request] = []
         pending = sorted(requests, key=lambda r: r.arrival)
+        if cfg.slo_targets:
+            for r in pending:
+                slo = (
+                    cfg.slo_targets[r.tenant]
+                    if r.tenant < len(cfg.slo_targets) else None
+                )
+                r.deadline = (
+                    r.arrival + slo if slo is not None else float("inf")
+                )
         i = 0
         migrations = 0
         migrated_bytes = 0.0
+        migration_delay_s = 0.0
+        preemptions = 0
+        truncated = False
         dt = 10e-3
         planner = self._make_planner()
+        dl = planner if isinstance(planner, DeadlineAwareAdmission) else None
 
         def load_tokens() -> np.ndarray:
             out = np.zeros(n)
@@ -205,6 +296,25 @@ class ServingEngine:
                 )
             return out
 
+        def admit(r: Request) -> bool:
+            if planner is None:
+                return True
+            # NIC lane: bill the KV bytes this request actually moved
+            # over the interconnect since its last admission (set at
+            # migration time) — NOT its resident KV.  A fresh request
+            # and a preempted request re-entering on the same replica
+            # moved nothing and charge nothing.
+            nic = r.nic_debt
+            if dl is None:
+                ok = planner.try_admit(r.tenant, 1, nic, nic)
+            else:
+                ok = dl.try_admit(
+                    r.tenant, 1, nic, nic, deadline=r.deadline, now=t
+                )
+            if ok:
+                r.nic_debt = 0.0
+            return ok
+
         while i < len(pending) or any(queues) or any(running):
             # admit arrivals
             while i < len(pending) and pending[i].arrival <= t:
@@ -212,9 +322,11 @@ class ServingEngine:
                 r.replica = self.sched.place(r, load_tokens())
                 queues[r.replica].append(r)
                 i += 1
-            # periodic DySkew rebalance of queued work
+            # periodic DySkew rebalance of queued work (requests still in
+            # transit from a previous migration cannot move again yet)
             moves = self.sched.rebalance(
-                [r for q in queues for r in q], load_tokens()
+                [r for q in queues for r in q if r.available_at <= t],
+                load_tokens(),
             )
             if moves:
                 # Detach movers first, append after: appending to a queue
@@ -226,9 +338,21 @@ class ServingEngine:
                     for r in queues[rep]:
                         if moves.get(r.rid, rep) != rep:
                             migrations += 1
-                            migrated_bytes += r.kv_bytes(
-                                cfg.kv_bytes_per_token
+                            # Only MATERIALIZED KV is transferred: zero
+                            # for a never-prefilled request (free eager
+                            # move), real bytes for preempted requests
+                            # carrying prefill + generated KV — and the
+                            # move costs simulated transit time either
+                            # way (latency + bytes over the interconnect).
+                            kv = r.kv_bytes(cfg.kv_bytes_per_token)
+                            migrated_bytes += kv
+                            r.nic_debt += kv
+                            delay = (
+                                cfg.migration_latency
+                                + kv / cfg.interconnect_bw
                             )
+                            r.available_at = t + delay
+                            migration_delay_s += delay
                             r.replica = moves[r.rid]
                             moved.append(r)
                         else:
@@ -245,18 +369,100 @@ class ServingEngine:
                 qi = 0
                 while len(running[rep]) < cfg.max_batch and qi < len(queues[rep]):
                     r = queues[rep][qi]
-                    if planner is not None:
-                        kv = r.kv_bytes(cfg.kv_bytes_per_token)
-                        if not planner.try_admit(r.tenant, 1, kv, kv):
-                            qi += 1
-                            continue
+                    if r.available_at > t or not admit(r):
+                        qi += 1
+                        continue
                     running[rep].append(queues[rep].pop(qi))
+                # Slot preemption: an urgent queued request (slack inside
+                # the horizon) may displace a running request of an
+                # over-share tenant with a later (or no) deadline.  The
+                # victim re-queues at the head with its KV intact and
+                # must re-clear fair share; the planner transfers one
+                # slot of credit to the urgent tenant.
+                if (
+                    cfg.preemption and dl is not None
+                    and len(running[rep]) >= cfg.max_batch and queues[rep]
+                ):
+                    horizon = cfg.deadline_cfg.urgency_horizon
+                    urgent = min(
+                        (
+                            r for r in queues[rep]
+                            if r.available_at <= t
+                            and r.deadline - t < horizon
+                        ),
+                        key=lambda r: (r.deadline, r.rid),
+                        default=None,
+                    )
+                    # Dry-run probe: displace a victim only if the urgent
+                    # admission WOULD succeed with the transferred slot
+                    # of credit — otherwise the freed slot would idle and
+                    # the refunded victim would be thrashed every step.
+                    if urgent is not None and not dl.would_admit(
+                        urgent.tenant, 1, urgent.nic_debt, urgent.nic_debt,
+                        deadline=urgent.deadline, now=t, rows_advance=1.0,
+                    ):
+                        urgent = None
+                    if urgent is not None:
+                        over = {
+                            q for q, _ in dl.preempt_candidates(
+                                protect=(urgent.tenant,)
+                            )
+                        }
+                        victim = max(
+                            (
+                                v for v in running[rep]
+                                if v.tenant in over
+                                and v.deadline > urgent.deadline
+                            ),
+                            key=lambda v: (
+                                v.deadline,
+                                v.max_new_tokens - v.generated,
+                                v.rid,
+                            ),
+                            default=None,
+                        )
+                        if victim is not None:
+                            running[rep].remove(victim)
+                            victim.preemptions += 1
+                            queues[rep].insert(0, victim)
+                            dl.preempt_transfer(
+                                victim.tenant, urgent.tenant, 1
+                            )
+                            preemptions += 1
+                            if admit(urgent):
+                                queues[rep].remove(urgent)
+                                running[rep].append(urgent)
                 if not running[rep]:
                     continue
-                # decode_rate shared across active slots
-                per_slot = cfg.decode_rate * dt / len(running[rep])
+                # Prefill first: prompt KV is materialized at
+                # prefill_rate (FIFO across the replica's unprefilled
+                # slots); only prefilled requests accrue decode progress.
+                pf_budget = cfg.prefill_rate * dt
+                decoders = []
+                for r in running[rep]:
+                    if r.prefilled < r.prompt_len:
+                        if pf_budget > 0.0:
+                            take = min(
+                                pf_budget, r.prompt_len - r.pf_progress
+                            )
+                            r.pf_progress += take
+                            pf_budget -= take
+                            if r.pf_progress >= r.prompt_len - 1e-9:
+                                r.pf_progress = float(r.prompt_len)
+                            r.prefilled = min(
+                                int(r.pf_progress), r.prompt_len
+                            )
+                    if r.prefilled >= r.prompt_len:
+                        decoders.append(r)
+                if not decoders:
+                    continue
+                # decode_rate shared across the DECODING slots
+                per_slot = cfg.decode_rate * dt / len(decoders)
                 still = []
                 for r in running[rep]:
+                    if r.prefilled < r.prompt_len:
+                        still.append(r)
+                        continue
                     # Tokens are integral: accumulate fractional decode
                     # progress separately and clamp `generated` so
                     # kv_len/kv_bytes keep whole-token semantics.
@@ -271,30 +477,82 @@ class ServingEngine:
                         still.append(r)
                 running[rep] = still
             t += dt
-            if t > 3600:
+            if t > cfg.max_sim_s:
+                # Out of simulated-time budget: stop and SAY so — the
+                # seed engine silently broke here, reporting a truncated
+                # run as if it had completed.
+                truncated = True
                 break
 
         lat = np.array([r.done_at - r.arrival for r in done])
+        incomplete = (
+            (len(pending) - i)
+            + sum(len(q) for q in queues)
+            + sum(len(b) for b in running)
+        )
         out = {
             "completed": len(done),
             "mean_latency": float(lat.mean()) if len(lat) else 0.0,
             "p99_latency": float(np.percentile(lat, 99)) if len(lat) else 0.0,
             "migrations": migrations,
             "migrated_gb": migrated_bytes / 1e9,
+            "migration_delay_s": migration_delay_s,
+            "preemptions": preemptions,
+            "truncated": truncated,
+            "incomplete": incomplete,
             "makespan": t,
         }
         if planner is not None:
             per_tenant: Dict[int, Dict[str, float]] = {}
+            nan = float("nan")
+            slo_met_all = slo_total_all = 0
+            # Unfinished requests whose deadline has already passed are
+            # definitive MISSES — counting only completions would let a
+            # truncated run report better attainment than a finished one.
+            unfinished = (
+                pending[i:]
+                + [r for q in queues for r in q]
+                + [r for b in running for r in b]
+            )
             for tid in range(len(cfg.tenant_weights)):
                 tl = np.array(
                     [r.done_at - r.arrival for r in done if r.tenant == tid]
                 )
-                per_tenant[tid] = {
+                entry: Dict[str, float] = {
                     "completed": int(len(tl)),
                     "mean_latency": float(tl.mean()) if len(tl) else 0.0,
                     "p99_latency": (
                         float(np.percentile(tl, 99)) if len(tl) else 0.0
                     ),
                 }
+                slo = (
+                    cfg.slo_targets[tid]
+                    if cfg.slo_targets and tid < len(cfg.slo_targets)
+                    else None
+                )
+                if slo is not None:
+                    overdue = sum(
+                        1 for r in unfinished
+                        if r.tenant == tid and r.deadline <= t
+                    )
+                    denom = len(tl) + overdue
+                    if denom:
+                        met = tl <= slo
+                        entry["slo_attainment"] = float(met.sum()) / denom
+                        # Tardiness is measurable only for completions.
+                        entry["p99_tardiness"] = (
+                            float(np.percentile(np.maximum(tl - slo, 0.0),
+                                                99))
+                            if len(tl) else nan
+                        )
+                        entry["slo_overdue_incomplete"] = overdue
+                        slo_met_all += int(met.sum())
+                        slo_total_all += denom
+                    else:
+                        entry["slo_attainment"] = nan
+                        entry["p99_tardiness"] = nan
+                per_tenant[tid] = entry
             out["per_tenant"] = per_tenant
+            if slo_total_all:
+                out["slo_attainment"] = slo_met_all / slo_total_all
         return out

@@ -131,6 +131,33 @@ reference trajectory:
     ``True`` extends it to multi-batch streams, where it is exact while
     workers stay backlogged and a lower bound otherwise.
 
+SLO layer (all OFF by default — with the defaults the loop takes no new
+branches, so the equivalence pins are untouched):
+
+  * Deadline-aware admission (``deadline_aware``).  Tenants carry
+    ``slo_target`` (seconds from arrival); the fair-share planner is
+    upgraded to `repro.core.admission.DeadlineAwareAdmission`, whose EDF
+    credit boost relaxes the admission threshold as slack runs out
+    (charging in full — debt — so weighted shares still hold) and whose
+    release order re-offers parked work earliest-deadline-first.
+  * Preemption (``preemption``).  An urgent tenant whose batch was
+    parked may displace admitted-but-unstarted rows of over-share
+    tenants: `_RowRing.extract` pulls the victim's rows from the tail
+    of the worker rings, they re-enter through fair share
+    (`release_parked`) and return to their ORIGINAL worker (transfer
+    already paid; only the rows lane is re-charged).  The closed-form
+    drain's conservative detector counts preempt-parked rows as pending
+    work, so the drain cannot fire while any displaced row awaits
+    re-injection.
+  * Autoscaling (``autoscale``).  A recurring RESIZE heap event feeds
+    `AutoscalePolicy` the queued-row backlog and running SLO attainment
+    and resizes the active pool in whole workers.  Decommissioned
+    workers drain gracefully but are ineligible destinations (+inf
+    waterfill backlog; static_rr cycles the active set; a
+    decommissioned producer's scan re-targets the least-backlogged
+    active worker and pays the transfer).  Post-drain RESIZE events are
+    inert.
+
 Per-event hygiene: the density guard's idle-sibling fraction comes from
 an incrementally-maintained idle-worker census (not an O(n) scan per
 batch), and every run records per-kind event counters in
@@ -151,7 +178,15 @@ import jax
 import numpy as np
 
 from repro.core import state_machine
-from repro.core.admission import BatchAdmission, FairShareAdmission, FairShareConfig
+from repro.core.admission import (
+    AutoscaleConfig,
+    AutoscalePolicy,
+    BatchAdmission,
+    DeadlineAwareAdmission,
+    DeadlineConfig,
+    FairShareAdmission,
+    FairShareConfig,
+)
 from repro.core.types import DySkewConfig, Policy
 from repro.sim.batched_link import BatchedLinkSim
 
@@ -222,6 +257,9 @@ class QueryResult:
     per_worker_busy: np.ndarray
     decision_overhead: float
     num_ticks: int = 0
+    #: Rows of this tenant displaced back through fair share by the SLO
+    #: preemption path (0 unless the engine ran with ``preemption=True``).
+    preempted_rows: int = 0
 
 
 # --------------------------------------------------------------------- #
@@ -490,6 +528,33 @@ class _RowRing:
         qids = self.qbuf[i:i + k] if self.qbuf is not None else None
         return costs, qids
 
+    def extract(self, qid: int, max_rows: int) -> np.ndarray:
+        """Remove up to ``max_rows`` rows owned by ``qid`` from the queued
+        region (taken from the TAIL end — the rows that would have been
+        served last), compacting the survivors in FIFO order.  Returns
+        the extracted costs.  Requires the tenant lane (``track_qids``);
+        used by the SLO preemption path to re-park admitted-but-unstarted
+        service of an over-share tenant."""
+        if self.qbuf is None or self.tail == self.head or max_rows <= 0:
+            return np.empty(0, np.float64)
+        seg_q = self.qbuf[self.head:self.tail]
+        idx = np.flatnonzero(seg_q == qid)
+        if not len(idx):
+            return np.empty(0, np.float64)
+        if len(idx) > max_rows:
+            idx = idx[-max_rows:]
+        seg_c = self.buf[self.head:self.tail]
+        costs = seg_c[idx].copy()
+        keep = np.ones(len(seg_q), bool)
+        keep[idx] = False
+        live_c = seg_c[keep]      # fancy indexing copies — safe to write back
+        live_q = seg_q[keep]
+        m = len(live_c)
+        self.buf[self.head:self.head + m] = live_c
+        self.qbuf[self.head:self.head + m] = live_q
+        self.tail = self.head + m
+        return costs
+
 
 def _transfer_delay(c: ClusterConfig, src_worker: int, dst_worker: int,
                     nbytes: float, nrows: int) -> float:
@@ -584,9 +649,13 @@ def closed_form_none_result(
 # The simulator
 # --------------------------------------------------------------------- #
 
-_TICK, _ARRIVAL, _ENQUEUE, _DONE, _ADMITTED, _GTICK = 0, 1, 2, 3, 4, 5
+_TICK, _ARRIVAL, _ENQUEUE, _DONE, _ADMITTED, _GTICK, _RESIZE = (
+    0, 1, 2, 3, 4, 5, 6
+)
 
-_KIND_NAMES = ("tick", "arrival", "enqueue", "done", "admitted", "gtick")
+_KIND_NAMES = (
+    "tick", "arrival", "enqueue", "done", "admitted", "gtick", "resize"
+)
 
 #: Rows per service burst (completion-ack granularity).
 _SERVICE_CHUNK = 16
@@ -666,6 +735,11 @@ class TenantQuery:
     arrival: float = 0.0
     arrival_gap: float = 1e-4
     weight: float = 1.0
+    #: SLO target: seconds from arrival to last-row completion.  None =
+    #: no deadline.  Consulted only when the engine runs with
+    #: ``deadline_aware=True`` (and by the replay harness's attainment
+    #: metrics); otherwise inert.
+    slo_target: Optional[float] = None
 
 
 class MultiQuerySimulator:
@@ -714,6 +788,10 @@ class MultiQuerySimulator:
         batch_ticks: Optional[bool] = None,
         none_closed_form: Optional[bool] = None,
         closed_form_drain: Optional[bool] = None,
+        deadline_aware: bool = False,
+        deadline_cfg: Optional[DeadlineConfig] = None,
+        preemption: bool = False,
+        autoscale: Optional[AutoscaleConfig] = None,
     ):
         # Fully deterministic given the tenants (streams/arrivals carry
         # their own seeds), so no RNG state is held here.
@@ -722,14 +800,41 @@ class MultiQuerySimulator:
         self.batch_ticks = batch_ticks
         self.none_closed_form = none_closed_form
         self.closed_form_drain = closed_form_drain
+        # SLO layer (all default OFF — with the defaults the loop takes
+        # not a single new branch, so the legacy equivalence pin is
+        # untouched).  ``deadline_aware`` upgrades the fair-share planner
+        # to `DeadlineAwareAdmission` (tenants' `slo_target` become
+        # admission deadlines with an EDF credit boost); ``preemption``
+        # lets an urgent tenant displace admitted-but-unstarted rows of
+        # over-share tenants back through fair share; ``autoscale``
+        # schedules a recurring RESIZE event that grows/shrinks the
+        # active interpreter pool per `AutoscalePolicy`.
+        if deadline_aware and fair_share is None:
+            raise ValueError(
+                "deadline_aware requires fair_share (the deadline-aware "
+                "planner is an upgrade of the fair-share layer)"
+            )
+        if preemption and not deadline_aware:
+            raise ValueError(
+                "preemption requires deadline_aware (victims are picked "
+                "by the deadline-aware planner)"
+            )
+        self.deadline_aware = deadline_aware
+        self.deadline_cfg = deadline_cfg
+        self.preemption = preemption
+        self.autoscale = autoscale
         #: Per-kind event counters of the most recent `run` (heap events
         #: popped by kind, coalescing stats, drain stats).  Telemetry
         #: only — reported by `benchmarks/bench_multi_tenant.py`.
         self.last_event_counts: Dict[str, int] = {}
+        #: (time, old, new) resize log of the most recent autoscaled run.
+        self.last_resizes: List[Tuple[float, int, int]] = []
 
     def _none_fast_path_ok(self, tenants: List[TenantQuery]) -> bool:
         """True when the closed-form 'none' path may replace the loop."""
         if self.none_closed_form is False or self.fair_share is not None:
+            return False
+        if self.autoscale is not None:
             return False
         if not tenants:
             return False
@@ -911,17 +1016,70 @@ class MultiQuerySimulator:
         drained = False
         # Event telemetry (self.last_event_counts).
         tick_n = gtick_n = arrival_n = admitted_n = enq_n = done_n = 0
+        resize_n = 0
         arrival_runs = arrivals_in_runs = enq_coalesced = 0
         wf_calls = wf_rows = 0
         drained_events = drained_chunks = drained_ticks = 0
         elig_cache: Dict[Tuple[int, int], np.ndarray] = {}
 
         planner: Optional[FairShareAdmission] = None
+        dl_planner: Optional[DeadlineAwareAdmission] = None
         parked: List[Deque[Tuple[int, int]]] = [deque() for _ in range(nq)]
         if self.fair_share is not None and nq > 0:
-            planner = FairShareAdmission(
-                [t.weight for t in tenants], self.fair_share
+            if self.deadline_aware:
+                planner = dl_planner = DeadlineAwareAdmission(
+                    [t.weight for t in tenants],
+                    [t.slo_target for t in tenants],
+                    self.fair_share,
+                    self.deadline_cfg or DeadlineConfig(),
+                )
+            else:
+                planner = FairShareAdmission(
+                    [t.weight for t in tenants], self.fair_share
+                )
+        # ---- SLO layer state (inert with the default flags) ----------- #
+        # Absolute per-tenant deadlines (inf = no SLO target).
+        deadlines = [
+            t.arrival + t.slo_target if t.slo_target is not None
+            else float("inf")
+            for t in tenants
+        ]
+        # Preemption re-parks ring rows (worker, costs) per victim; they
+        # re-enter through fair share in `release_parked` and return to
+        # the SAME worker (their transfer was already paid, so only the
+        # rows lane is re-charged).
+        preempt_on = self.preemption and dl_planner is not None and nq > 1
+        preempt_parked: List[Deque[Tuple[int, np.ndarray]]] = [
+            deque() for _ in range(nq)
+        ]
+        preempt_pending = 0           # re-parked rows not yet re-injected
+        parked_rows_total = 0         # rows in fair-share-parked batches
+        preempted_rows = [0] * nq     # per-tenant telemetry
+        slo_done = slo_met = 0        # running attainment (autoscale input)
+        # Autoscale: the active pool is a prefix-biased subset of the
+        # physical workers; inactive workers drain their queues but
+        # receive no new rows (waterfill sees them as +inf backlog).
+        autoscale_on = self.autoscale is not None
+        as_policy: Optional[AutoscalePolicy] = None
+        worker_active = [True] * n
+        active_count = n
+        if autoscale_on:
+            as_cfg = dataclasses.replace(
+                self.autoscale,
+                min_workers=min(max(self.autoscale.min_workers, 1), n),
+                max_workers=min(self.autoscale.max_workers, n),
             )
+            as_policy = AutoscalePolicy(as_cfg)
+            active_count = as_cfg.min_workers
+            for w in range(active_count, n):
+                worker_active[w] = False
+        worker_active_np = np.asarray(worker_active)
+        active_ids = np.flatnonzero(worker_active_np)
+        # Idle census restricted to the ACTIVE pool (the density guard's
+        # sibling signal under autoscale) — maintained incrementally at
+        # the same flip points as the global census, never scanned.
+        active_idle_count = active_count
+        self.last_resizes = []
 
         events: List[Tuple[float, int, int, int, int, object]] = []
         seq = 0
@@ -949,6 +1107,10 @@ class MultiQuerySimulator:
             for p, stream in enumerate(t.streams):
                 if stream:
                     push(t.arrival, _ARRIVAL, q, p, 0)
+        if autoscale_on and tenants:
+            # First decision at the earliest arrival; the chain then
+            # recurs every `interval` while any tenant is active.
+            push(min(t.arrival for t in tenants), _RESIZE, 0, 0, None)
 
         def start_worker(w: int, now: float):
             if worker_running[w]:
@@ -975,6 +1137,15 @@ class MultiQuerySimulator:
 
         def siblings_idle_frac(p: int) -> float:
             # Incremental census: same value the O(n) scan produced.
+            if autoscale_on:
+                # Decommissioned-but-draining workers must not count as
+                # idle siblings (they are not eligible destinations).
+                idle = active_idle_count - (
+                    1 if worker_active[p] and worker_idle[p] else 0
+                )
+                return idle / max(
+                    active_count - (1 if worker_active[p] else 0), 1
+                )
             idle = idle_count - (1 if worker_idle[p] else 0)
             return idle / max(n - 1, 1)
 
@@ -1003,6 +1174,9 @@ class MultiQuerySimulator:
             against ``out_vec`` — the live outstanding list (scalar
             path) or the run planner's shadow copy (same values)."""
             bl = np.asarray(out_vec) * est_row_cost[q]
+            if autoscale_on:
+                # Decommissioned workers are ineligible destinations.
+                bl = np.where(worker_active_np, bl, np.inf)
             if strategies[q].dyskew.self_skip:
                 # Forced-remote ablation (§III.B): the producer must
                 # bypass its own node's interpreters entirely (Fig. 1 —
@@ -1046,7 +1220,13 @@ class MultiQuerySimulator:
             if dests_pre is not _RB_INLINE:
                 dests = dests_pre
             elif st.kind == "static_rr":
-                dests = (rr_counter[q] + np.arange(b.num_rows)) % n
+                if autoscale_on:
+                    dests = active_ids[
+                        (rr_counter[q] + np.arange(b.num_rows))
+                        % len(active_ids)
+                    ]
+                else:
+                    dests = (rr_counter[q] + np.arange(b.num_rows)) % n
                 rr_counter[q] += b.num_rows
             else:
                 dests = None
@@ -1058,6 +1238,15 @@ class MultiQuerySimulator:
                     dests = np.repeat(np.arange(n), counts)
                     if gate_rejects(q, p, b, dests):
                         dests = None
+
+            if dests is None and autoscale_on and not worker_active[p]:
+                # Decommissioned producer worker: its scan re-targets the
+                # least-backlogged active worker (one grouped transfer, so
+                # the IPC/NIC cost below is priced like any redistribution).
+                d = int(active_ids[
+                    int(np.argmin(np.asarray(out_q)[active_ids]))
+                ])
+                dests = np.full(b.num_rows, d, np.int64)
 
             if dests is None:
                 # All-local fast path (no redistribution this batch):
@@ -1103,18 +1292,89 @@ class MultiQuerySimulator:
                     emit(arrive, q, d, costs_s[lo:hi])
                 out_q[d] += nrows
 
+        def try_admit(q: int, rows: int, nbytes: float, bpr: float,
+                      now: float) -> bool:
+            """The one planner-admission call: plain fair share, or the
+            deadline-aware variant fed the tenant's absolute deadline."""
+            if dl_planner is None:
+                return planner.try_admit(q, rows, nbytes, bpr)
+            return dl_planner.try_admit(
+                q, rows, nbytes, bpr, deadline=deadlines[q], now=now
+            )
+
+        def preempt_for(uq: int, need: int, now: float) -> bool:
+            """Displace up to ``need`` admitted-but-unstarted rows of
+            over-share tenants (never ones at least as urgent as ``uq``)
+            out of the worker rings, re-parking them for fair-share
+            re-injection; the planner advances ``uq``'s credit by the
+            freed amount.  Returns True if anything was preempted."""
+            nonlocal preempt_pending, idle_count, active_idle_count
+            freed = 0
+            for victim, excess in dl_planner.preempt_candidates(
+                protect=(uq,)
+            ):
+                if deadlines[victim] <= deadlines[uq]:
+                    continue
+                want = int(min(excess, need - freed))
+                for w in range(n):
+                    if want <= 0:
+                        break
+                    costs = rings[w].extract(victim, want)
+                    kk = len(costs)
+                    if not kk:
+                        continue
+                    want -= kk
+                    freed += kk
+                    left = outstanding[victim][w] - kk
+                    outstanding[victim][w] = left if left > 0.0 else 0.0
+                    preempt_parked[victim].append((w, costs))
+                    preempt_pending += kk
+                    preempted_rows[victim] += kk
+                    dl_planner.preempt_transfer(victim, uq, kk)
+                    if (
+                        not worker_running[w] and not worker_idle[w]
+                        and rings[w].tail == rings[w].head
+                    ):
+                        worker_idle[w] = True
+                        idle_count += 1
+                        if autoscale_on and worker_active[w]:
+                            active_idle_count += 1
+                if freed >= need:
+                    break
+            return freed > 0
+
         def fair_share_parks(kind: int, q: int, p: int, k: int,
-                             b: Batch) -> bool:
+                             b: Batch, now: float) -> bool:
             """Fair-share gate at an _ARRIVAL (re-offered _ADMITTED work
             was already charged): True → the batch was parked.  The ONE
             copy of the park-or-admit policy — both the singleton path
             and the coalesced-run path go through it."""
+            nonlocal parked_rows_total
             if planner is None or kind != _ARRIVAL:
                 return False
             bpr = b.total_bytes / max(b.num_rows, 1)
-            if planner.try_admit(q, b.num_rows, b.total_bytes, bpr):
+            if try_admit(q, b.num_rows, b.total_bytes, bpr, now):
+                return False
+            if (
+                preempt_on
+                # Urgency gate (same policy as the serving engine): only
+                # a tenant whose slack has run inside the horizon may
+                # displace others' work — and only when the admission
+                # WOULD succeed given the credit a full preemption could
+                # transfer (dry-run probe; displacing victims for a
+                # doomed retry would delay them for nothing).
+                and deadlines[q] - now < dl_planner.dcfg.urgency_horizon
+                and dl_planner.would_admit(
+                    q, b.num_rows, b.total_bytes, bpr,
+                    deadline=deadlines[q], now=now,
+                    rows_advance=float(b.num_rows),
+                )
+                and preempt_for(q, b.num_rows, now)
+                and try_admit(q, b.num_rows, b.total_bytes, bpr, now)
+            ):
                 return False
             parked[q].append((p, k))
+            parked_rows_total += b.num_rows
             return True
 
         def handle_arrival(
@@ -1127,7 +1387,7 @@ class MultiQuerySimulator:
             nonlocal total_remaining
             st = strategies[q]
             b = streams[q][p][k]
-            if fair_share_parks(kind, q, p, k, b):
+            if fair_share_parks(kind, q, p, k, b, now):
                 return False
             remaining_arrivals[q] -= 1
             total_remaining -= 1
@@ -1146,7 +1406,10 @@ class MultiQuerySimulator:
                 # Flow control: pace against the least-backlogged valid
                 # destination (own consumer when routing locally).
                 if st.kind == "static_rr" or distribute_mask[q][p]:
-                    bl = min(outstanding[q])
+                    if autoscale_on:
+                        bl = min(outstanding[q][w] for w in active_ids)
+                    else:
+                        bl = min(outstanding[q])
                 else:
                     bl = outstanding[q][p]
                 backpressure = max(0.0, bl - flow_window) * est_row_cost[q]
@@ -1182,7 +1445,7 @@ class MultiQuerySimulator:
             admitted: List[Tuple[int, int, int, int, Batch]] = []
             for kind_e, q, p, k in run_ev:
                 b = streams[q][p][k]
-                if not fair_share_parks(kind_e, q, p, k, b):
+                if not fair_share_parks(kind_e, q, p, k, b, now):
                     admitted.append((kind_e, q, p, k, b))
             if not admitted:
                 return
@@ -1265,25 +1528,42 @@ class MultiQuerySimulator:
                     enq_coalesced += len(segs) - 1
 
         def release_parked(now: float) -> None:
-            """Re-offer parked arrivals (round-robin) after new credit."""
+            """Re-offer parked arrivals after new credit (round-robin
+            order; EDF-first under the deadline-aware planner).
+            Preemption-parked rows are re-offered ahead of a tenant's
+            parked batches — they already paid their transfer and return
+            straight to their original worker's ring."""
+            nonlocal preempt_pending, parked_rows_total
             progress = True
             while progress:
                 progress = False
                 for q in planner.release_order():
+                    pq = preempt_parked[q]
+                    while pq:
+                        w, costs = pq[0]
+                        if not try_admit(q, len(costs), 0.0, 0.0, now):
+                            break
+                        pq.popleft()
+                        preempt_pending -= len(costs)
+                        outstanding[q][w] += len(costs)
+                        push(now, _ENQUEUE, q, w, costs)
+                        progress = True
                     dq = parked[q]
                     if not dq:
                         continue
                     p, k = dq[0]
                     b = streams[q][p][k]
                     bpr = b.total_bytes / max(b.num_rows, 1)
-                    if planner.try_admit(q, b.num_rows, b.total_bytes, bpr):
+                    if try_admit(q, b.num_rows, b.total_bytes, bpr, now):
                         dq.popleft()
+                        parked_rows_total -= b.num_rows
                         push(now, _ADMITTED, q, p, k)
                         progress = True
 
         def tenant_done_check(q: int) -> None:
             """Flip the incrementally-maintained tenant_active flag (and
             its group mirror) when the tenant's last row completes."""
+            nonlocal slo_done, slo_met
             if (
                 active_flag[q]
                 and remaining_arrivals[q] == 0
@@ -1293,6 +1573,11 @@ class MultiQuerySimulator:
                 slot = member_slot.get(q)
                 if slot is not None:
                     grp_active[slot[0]][slot[1]] = False
+                if tenants[q].slo_target is not None:
+                    # Running attainment — the autoscaler's SLO signal.
+                    slo_done += 1
+                    if last_done[q] <= deadlines[q]:
+                        slo_met += 1
 
         now = 0.0
         while events:
@@ -1311,6 +1596,8 @@ class MultiQuerySimulator:
                     if len(seg) and worker_idle[w]:
                         worker_idle[w] = False
                         idle_count -= 1
+                        if autoscale_on and worker_active[w]:
+                            active_idle_count -= 1
                     rings[w].push(seg, qid=q)
                     recv_in_tick[q][w] += len(seg)
                     if not worker_running[w]:
@@ -1357,6 +1644,8 @@ class MultiQuerySimulator:
                 if not worker_running[w]:
                     worker_idle[w] = True
                     idle_count += 1
+                    if autoscale_on and worker_active[w]:
+                        active_idle_count += 1
                 if planner is not None:
                     for q, cnt in done_tenants:
                         planner.on_complete(q, cnt)
@@ -1364,8 +1653,13 @@ class MultiQuerySimulator:
                             planner.deactivate(q)
                     release_parked(now)
             elif kind == _ARRIVAL or kind == _ADMITTED:
-                if events and events[0][0] == now and events[0][2] in (
-                    _ARRIVAL, _ADMITTED
+                # Under autoscale, arrivals route strictly one at a time:
+                # the coalesced run's phase-1 shadow cannot see the
+                # decommissioned-producer redirect (it credits kept-local
+                # rows to the inactive worker), so the batched plan would
+                # diverge from pop-order routing.
+                if not autoscale_on and events and events[0][0] == now and (
+                    events[0][2] in (_ARRIVAL, _ADMITTED)
                 ):
                     # A maximal run of same-instant arrivals: route them
                     # through the batched waterfill path.
@@ -1392,9 +1686,55 @@ class MultiQuerySimulator:
                     else:
                         admitted_n += 1
                     handle_arrival(kind, qid, who, payload, now)
-                if drain_on and total_remaining == 0 and events:
+                if (
+                    drain_on and total_remaining == 0
+                    and preempt_pending == 0 and events
+                ):
                     drained = True
                     break
+            elif kind == _RESIZE:
+                resize_n += 1
+                if any(active_flag):
+                    # Backlog = everything queued for service: ring rows,
+                    # preempt-parked rows, AND fair-share-parked batches
+                    # — under admission-paced overload the parked queues
+                    # are the dominant backlog, and an autoscaler blind
+                    # to them would never grow.  (Parked rows are an
+                    # incrementally-maintained counter, like the idle
+                    # census — no per-decision scan.)
+                    backlog = float(
+                        sum(len(r) for r in rings)
+                        + preempt_pending + parked_rows_total
+                    )
+                    att = (slo_met / slo_done) if slo_done else None
+                    target = as_policy.decide(now, active_count, backlog, att)
+                    if target != active_count:
+                        # (De)commission whole workers: lowest-index
+                        # inactive first on grow, highest-index active
+                        # first on shrink.  A decommissioned worker keeps
+                        # serving its ring (graceful drain) but receives
+                        # no new rows.
+                        if target > active_count:
+                            for w in range(n):
+                                if active_count >= target:
+                                    break
+                                if not worker_active[w]:
+                                    worker_active[w] = True
+                                    active_count += 1
+                                    if worker_idle[w]:
+                                        active_idle_count += 1
+                        else:
+                            for w in range(n - 1, -1, -1):
+                                if active_count <= target:
+                                    break
+                                if worker_active[w]:
+                                    worker_active[w] = False
+                                    active_count -= 1
+                                    if worker_idle[w]:
+                                        active_idle_count -= 1
+                        worker_active_np = np.asarray(worker_active)
+                        active_ids = np.flatnonzero(worker_active_np)
+                    push(now + as_policy.cfg.interval, _RESIZE, 0, 0, None)
             elif kind == _TICK:
                 tick_n += 1
                 q = qid
@@ -1513,6 +1853,10 @@ class MultiQuerySimulator:
                 elif kind_e == _DONE:
                     tot_e, nr_e, cnts_e, tots_e = payload_e
                     done_by_w[who_e] = (t_e, s_e, tot_e, nr_e, cnts_e, tots_e)
+                elif kind_e == _RESIZE:
+                    # Post-drain resizes are inert: routing is over, so
+                    # the pool size can no longer affect any result.
+                    pass
                 else:  # _TICK chains, _GTICK chains AND pending join ticks
                     tick_chains.append((t_e, s_e, kind_e, qid_e, payload_e))
             events.clear()
@@ -1701,6 +2045,8 @@ class MultiQuerySimulator:
                     drained_ticks += cnt + 1
                     gfin[i] = True
 
+        if as_policy is not None:
+            self.last_resizes = list(as_policy.resizes)
         self.last_event_counts = {
             "tick": tick_n,
             "gtick": gtick_n,
@@ -1708,8 +2054,12 @@ class MultiQuerySimulator:
             "admitted": admitted_n,
             "enqueue": enq_n,
             "done": done_n,
+            "resize": resize_n,
+            "resizes_applied": len(self.last_resizes),
+            "preempted_rows": int(sum(preempted_rows)),
             "heap_events": (
                 tick_n + gtick_n + arrival_n + admitted_n + enq_n + done_n
+                + resize_n
             ),
             "arrival_runs_coalesced": arrival_runs,
             "arrivals_in_runs": arrivals_in_runs,
@@ -1737,6 +2087,7 @@ class MultiQuerySimulator:
                 per_worker_busy=busy_q,
                 decision_overhead=float(dec_overhead[q]),
                 num_ticks=int(num_ticks[q]),
+                preempted_rows=int(preempted_rows[q]),
             ))
         return results
 

@@ -15,7 +15,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.admission import FairShareConfig
+from repro.core.admission import (
+    AutoscaleConfig,
+    DeadlineConfig,
+    FairShareConfig,
+)
 from repro.core.types import DySkewConfig, Policy, SkewModelKind
 from repro.sim.engine import (
     ClusterConfig,
@@ -402,7 +406,7 @@ def open_loop_rate(
 
 
 def open_loop_tenants(
-    specs: Sequence[Tuple[QueryProfile, float]],
+    specs: Sequence[Tuple],
     cluster: ClusterConfig,
     resolve: Callable[[QueryProfile], StrategyConfig],
     process: ArrivalProcess,
@@ -414,8 +418,11 @@ def open_loop_tenants(
     """Materialize an open-loop query stream: ``num_queries`` arrivals at
     :func:`arrival_times` timestamps, cycling over ``specs`` —
     (profile, fair-share weight) pairs, e.g. from
-    `workload.priority_class_suite`.  Each arrival is an independent
-    tenant (fresh streams, own link state) named '<profile>#<index>'.
+    `workload.priority_class_suite`, or (profile, weight, slo_target)
+    triples, e.g. from `workload.slo_suite` (the target becomes each
+    arrival's `TenantQuery.slo_target`, seconds from arrival).  Each
+    arrival is an independent tenant (fresh streams, own link state)
+    named '<profile>#<index>'.
 
     ``grid_align`` snaps every arrival down onto the chained float grid
     ``0, I, I+I, ...`` of that step — the engine's metrics subsystem
@@ -441,7 +448,9 @@ def open_loop_tenants(
         times = chain[np.clip(idx, 0, kmax)]
     tenants: List[TenantQuery] = []
     for i in range(num_queries):
-        prof, weight = specs[i % len(specs)]
+        spec = specs[i % len(specs)]
+        prof, weight = spec[0], spec[1]
+        slo = spec[2] if len(spec) > 2 else None
         tenants.append(TenantQuery(
             name=f"{prof.name}#{i:03d}",
             streams=generate_query(prof, cluster.num_workers,
@@ -450,6 +459,7 @@ def open_loop_tenants(
             arrival=float(times[i]),
             arrival_gap=scan_arrival_gap(prof, cluster, feed_factor),
             weight=weight,
+            slo_target=slo,
         ))
     return tenants
 
@@ -461,20 +471,45 @@ def summarize_open_loop(
 ) -> Dict[str, object]:
     """Aggregate an open-loop run into the numbers the multi-tenant bench
     reports: per-class latency percentiles (p50/p99/p999) + mean
-    slowdown, and Jain's fairness index over per-tenant slowdowns
-    (latency / perfectly-balanced ideal; equal slowdowns = fair)."""
+    slowdown, Jain's fairness index over per-tenant slowdowns
+    (latency / perfectly-balanced ideal; equal slowdowns = fair), and —
+    for tenants that declare an `slo_target` — per-class SLO attainment
+    (fraction of completed queries whose latency met the deadline) and
+    p99 tardiness (seconds past the deadline, 0 when met)."""
     classes: Dict[str, List[Tuple[float, float]]] = {}
+    # Per class: met flags (incl. never-completed = missed) and the
+    # tardiness samples of COMPLETED queries only.
+    slo_by_class: Dict[str, Dict[str, list]] = {}
     slowdowns: List[float] = []
+    slo_met = slo_total = 0
     for t, r in zip(tenants, results):
         cls = classes.setdefault(tenant_class(t), [])
+        sb = (
+            slo_by_class.setdefault(
+                tenant_class(t), {"met": [], "tard": []}
+            )
+            if t.slo_target is not None else None
+        )
         if r is None:
             # Tenant did not complete (aborted/partial run): its class
-            # still appears in the report, with n=0 and NaN stats.
+            # still appears in the report, with n=0 and NaN latency
+            # stats — but a deadline it can no longer meet is a MISS,
+            # not a gap in the books (otherwise a truncated run looks
+            # better than one that finished its work).
+            if sb is not None:
+                sb["met"].append(False)
+                slo_total += 1
             continue
         ideal = max(ideal_latency(t, cluster), 1e-12)
         sd = r.latency / ideal
         slowdowns.append(sd)
         cls.append((r.latency, sd))
+        if sb is not None:
+            met = r.latency <= t.slo_target
+            sb["met"].append(met)
+            sb["tard"].append(max(r.latency - t.slo_target, 0.0))
+            slo_total += 1
+            slo_met += int(met)
     nan = float("nan")
     per_class: Dict[str, Dict[str, float]] = {}
     for name, vals in sorted(classes.items()):
@@ -492,6 +527,16 @@ def summarize_open_loop(
             "mean": nan if empty else float(lat.mean()),
             "mean_slowdown": nan if empty else float(sds.mean()),
         }
+        if name in slo_by_class:
+            sb = slo_by_class[name]
+            per_class[name]["slo_attainment"] = (
+                float(np.mean(sb["met"])) if sb["met"] else nan
+            )
+            # Tardiness is measurable only for completed queries.
+            per_class[name]["p99_tardiness"] = (
+                float(np.percentile(np.array(sb["tard"]), 99))
+                if sb["tard"] else nan
+            )
     return {
         "per_class": per_class,
         "jain": jain_fairness(slowdowns),
@@ -499,11 +544,12 @@ def summarize_open_loop(
             float(np.mean([r.latency for r in results if r is not None]))
             if any(r is not None for r in results) else nan
         ),
+        "slo_attainment": (slo_met / slo_total) if slo_total else nan,
     }
 
 
 def run_open_loop(
-    specs: Sequence[Tuple[QueryProfile, float]],
+    specs: Sequence[Tuple],
     cluster: ClusterConfig,
     process: ArrivalProcess,
     num_queries: int,
@@ -515,17 +561,24 @@ def run_open_loop(
     none_closed_form: Optional[bool] = None,
     closed_form_drain: Optional[bool] = None,
     grid_align: Optional[float] = None,
+    deadline_aware: bool = False,
+    deadline_cfg: Optional["DeadlineConfig"] = None,
+    preemption: bool = False,
+    autoscale: Optional["AutoscaleConfig"] = None,
 ) -> Dict[str, object]:
     """One open-loop scenario end to end: materialize the arrival stream,
     run it on one shared cluster (optionally under fair-share admission),
-    and summarize per-class tails + fairness.  ``batch_ticks`` /
-    ``none_closed_form`` / ``closed_form_drain`` forward to
-    :class:`MultiQuerySimulator`; ``grid_align`` snaps arrivals onto a
-    shared tick grid (see :func:`open_loop_tenants`), which puts a
-    homogeneous fleet inside the batched-tick auto envelope — the
-    many-tenant bench relies on this so hundreds of tenants batch BY
-    DEFAULT.  The run's per-kind event counters are returned under
-    ``"event_counts"``."""
+    and summarize per-class tails + fairness (+ SLO attainment/tardiness
+    when ``specs`` carry slo targets).  ``batch_ticks`` /
+    ``none_closed_form`` / ``closed_form_drain`` and the SLO-layer flags
+    (``deadline_aware`` / ``deadline_cfg`` / ``preemption`` /
+    ``autoscale``) forward to :class:`MultiQuerySimulator`;
+    ``grid_align`` snaps arrivals onto a shared tick grid (see
+    :func:`open_loop_tenants`), which puts a homogeneous fleet inside
+    the batched-tick auto envelope — the many-tenant bench relies on
+    this so hundreds of tenants batch BY DEFAULT.  The run's per-kind
+    event counters are returned under ``"event_counts"`` and its resize
+    log under ``"resizes"``."""
     tenants = open_loop_tenants(
         specs, cluster, resolve, process, num_queries, seed=seed,
         feed_factor=feed_factor, grid_align=grid_align,
@@ -534,10 +587,13 @@ def run_open_loop(
         cluster, fair_share=fair_share, batch_ticks=batch_ticks,
         none_closed_form=none_closed_form,
         closed_form_drain=closed_form_drain,
+        deadline_aware=deadline_aware, deadline_cfg=deadline_cfg,
+        preemption=preemption, autoscale=autoscale,
     )
     results = sim.run(tenants)
     out = summarize_open_loop(tenants, results, cluster)
     out["tenants"] = tenants
     out["results"] = results
     out["event_counts"] = dict(sim.last_event_counts)
+    out["resizes"] = list(sim.last_resizes)
     return out

@@ -16,9 +16,11 @@ Beyond per-query profiles, this module also generates multi-tenant
 where query arrival times do NOT react to completions, the regime tail
 latency must be measured in), cross-tenant interference scenarios
 (:func:`skew_interference_suite`, :func:`priority_class_suite`) for the
-fair-share admission studies in `sim/replay.py`, and the
-hundreds-of-tenants scaling mix (:func:`many_tenants_suite`) that
-exercises the batched-tick engine path.
+fair-share admission studies in `sim/replay.py`, the mixed-SLO-class
+overload mix (:func:`slo_suite`) for the deadline-aware admission /
+preemption / autoscale studies, and the hundreds-of-tenants scaling mix
+(:func:`many_tenants_suite`) that exercises the batched-tick engine
+path.
 
 Invariants:
 
@@ -384,6 +386,54 @@ def many_tenants_suite(
                 cost_sigma=float(rng.uniform(0.3, 0.6)),
                 batch_rows=64,
             ), 1.0))
+    return out
+
+
+def slo_suite(
+    seed: int = 67,
+) -> List[Tuple[QueryProfile, float, Optional[float]]]:
+    """Mixed SLO classes for the deadline-aware admission study under
+    open-loop overload:
+
+      gold   — small, balanced, latency-critical interactive queries with
+               a TIGHT deadline (and a high fair-share weight);
+      silver — medium queries with a loose deadline;
+      bulk   — larger skewed batch queries with NO deadline (weight 1),
+               the background pressure the SLO classes contend with.
+
+    Returns (profile, weight, slo_target_seconds) triples for
+    `replay.open_loop_tenants`; targets are seconds from a query's
+    arrival to its last-row completion.  The interesting comparison
+    (`bench_multi_tenant.py --slo`) is weight-only fair share vs
+    deadline-aware admission (± preemption, ± autoscale) on gold/silver
+    attainment and p99 tardiness while the warehouse is offered more
+    load than it can serve.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[Tuple[QueryProfile, float, Optional[float]]] = []
+    for i in range(3):
+        out.append((QueryProfile(
+            name="gold",
+            n_rows=int(rng.integers(900, 1_500)),
+            mean_row_cost=float(10 ** rng.uniform(-3.4, -3.1)),
+            cost_sigma=float(rng.uniform(0.3, 0.5)),
+        ), 4.0, 0.5))
+    for i in range(2):
+        out.append((QueryProfile(
+            name="silver",
+            n_rows=int(rng.integers(2_000, 3_200)),
+            mean_row_cost=float(10 ** rng.uniform(-3.2, -2.9)),
+            cost_sigma=float(rng.uniform(0.4, 0.7)),
+        ), 2.0, 2.0))
+    for i in range(3):
+        out.append((QueryProfile(
+            name="bulk",
+            n_rows=int(rng.integers(4_000, 7_000)),
+            mean_row_cost=float(10 ** rng.uniform(-3.0, -2.6)),
+            cost_sigma=float(rng.uniform(1.0, 1.6)),
+            partition_alpha=float(rng.uniform(0.6, 1.2)),
+            hot_fraction=float(rng.uniform(0.10, 0.25)),
+        ), 1.0, None))
     return out
 
 
