@@ -29,6 +29,12 @@ regimes:
       deadline-aware + preemption, and deadline-aware + warehouse
       autoscaling — reporting per-class SLO attainment (fraction of
       queries meeting their deadline) and p99 tardiness.
+  tournament  — the policy tournament (``--tournament``): every policy
+      registered in `repro.core.policy` (built-ins plus plugins) runs
+      the SAME skewed/overload/SLO open-loop traffic and emits one
+      report-card row per policy — p99 latency, Jain fairness, SLO
+      attainment, bytes moved, decision overhead — plus a same-seed
+      reproducibility check for the stochastic entrants.
 """
 
 from __future__ import annotations
@@ -53,6 +59,7 @@ from repro.core.admission import (
     DeadlineConfig,
     FairShareConfig,
 )
+from repro.core.policy import available_policies
 from repro.core.types import DySkewConfig, Policy, SkewModelKind
 from repro.sim.engine import (
     ClusterConfig,
@@ -371,10 +378,83 @@ def _slo(quick: bool) -> List[Row]:
     return rows
 
 
+def _tournament(quick: bool) -> List[Row]:
+    """Policy tournament: one report card per REGISTERED policy.
+
+    Every name in the `repro.core.policy` registry — the ported built-in
+    trio plus every plugin — runs the identical open-loop traffic: the
+    `slo_suite` classes (gold 0.5s / silver 2.0s deadlines +
+    deadline-free skewed bulk) offered at ~2x service capacity with the
+    weighted fair-share admission layer on, so skew, overload and SLO
+    pressure all bear on the same run.  Per policy: p99/p50 latency,
+    Jain's fairness over per-tenant slowdowns, overall SLO attainment,
+    remote bytes moved and total decision overhead — the trade-off
+    surface a new policy has to earn its place on.  A final row reruns
+    the stochastic `p2c` entrant with the same seed and reports
+    bit-identity (the injected-RNG reproducibility contract)."""
+    num_queries = 10 if quick else 24
+    cluster = ClusterConfig(num_nodes=2 if quick else 4)
+    specs = slo_suite()
+    proc = ArrivalProcess(
+        kind="poisson",
+        rate=open_loop_rate([p for p, _, _ in specs], cluster, load=2.0),
+    )
+    fs = FairShareConfig(quantum_rows=128.0, heavy_row_bytes=1e6)
+    rows: List[Row] = []
+
+    def arm(pname: str, sim_seed: int):
+        t0 = time.time()
+        out = run_open_loop(
+            specs, cluster, proc, num_queries, seed=0,
+            resolve=lambda prof, _k=pname: StrategyConfig(kind=_k),
+            fair_share=fs, sim_seed=sim_seed,
+        )
+        return out, time.time() - t0
+
+    p2c_lats = {}
+    for pname in available_policies():
+        out, wall = arm(pname, sim_seed=11)
+        lats = np.array([r.latency for r in out["results"]])
+        if pname == "p2c":
+            p2c_lats[11] = lats
+        gold = out["per_class"].get("gold", {})
+        rows.append((
+            f"tournament_{pname}_p99_latency",
+            float(np.percentile(lats, 99)) * 1e6,
+            f"p50_us={float(np.percentile(lats, 50)) * 1e6:.1f};"
+            f"jain={out['jain']:.3f};"
+            f"slo_attainment={out.get('slo_attainment', float('nan')):.3f};"
+            f"gold_attainment={gold.get('slo_attainment', float('nan')):.3f};"
+            f"bytes_moved_gb="
+            f"{sum(r.bytes_moved_remote for r in out['results']) / 1e9:.4f};"
+            f"decision_overhead_s="
+            f"{sum(r.decision_overhead for r in out['results']):.4f};"
+            f"rows_redistributed="
+            f"{sum(r.rows_redistributed for r in out['results'])};"
+            f"queries={num_queries};load=2.0;wall_s={wall:.1f}",
+        ))
+    # Reproducibility check: the stochastic policy rerun with the SAME
+    # injected seed must replay bit-identically; a different seed is
+    # allowed (and expected) to diverge.
+    out_same, _ = arm("p2c", sim_seed=11)
+    out_diff, _ = arm("p2c", sim_seed=12)
+    same = bool(np.array_equal(
+        p2c_lats[11], np.array([r.latency for r in out_same["results"]])
+    ))
+    diff_lats = np.array([r.latency for r in out_diff["results"]])
+    rows.append((
+        "tournament_p2c_same_seed_identical",
+        float(same),
+        f"cross_seed_differs={int(not np.array_equal(p2c_lats[11], diff_lats))};"
+        f"policies={len(available_policies())}",
+    ))
+    return rows
+
+
 def run(quick: bool = False) -> List[Row]:
     return (
         _closed_loop(quick) + _open_loop(quick) + _many_tenants(quick)
-        + _slo(quick)
+        + _slo(quick) + _tournament(quick)
     )
 
 
@@ -390,11 +470,16 @@ if __name__ == "__main__":
     ap.add_argument("--slo", action="store_true",
                     help="run ONLY the SLO deadline/preemption/autoscale "
                          "section")
+    ap.add_argument("--tournament", action="store_true",
+                    help="run ONLY the registered-policy tournament "
+                         "(one report card per policy)")
     args = ap.parse_args()
     if args.many:
         rows = _many_tenants(args.quick)
     elif args.slo:
         rows = _slo(args.quick)
+    elif args.tournament:
+        rows = _tournament(args.quick)
     else:
         rows = run(quick=args.quick)
     for r in rows:

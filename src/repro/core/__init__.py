@@ -16,6 +16,11 @@ Public API:
               formula set for the host planners and the jitted step),
               and the weighted fair-share multi-tenant layer
   adaptive_link.AdaptiveLink — the assembled adaptive data link
+  policy — the pluggable redistribution-policy seam: the
+           `RedistributionPolicy` interface and name registry that
+           `StrategyConfig` (simulator), `ServeConfig.scheduler`
+           (serving) and `DataConfig.placement` (data pipeline) all
+           resolve placement through
 """
 
 from repro.core.adaptive_link import AdaptiveLink, AdaptiveLinkConfig
@@ -25,6 +30,14 @@ from repro.core.admission import (
     CostModelConfig,
     FairShareAdmission,
     FairShareConfig,
+)
+from repro.core.policy import (
+    PolicyContext,
+    RedistributionPolicy,
+    StrategyConfig,
+    available_policies,
+    register_policy,
+    resolve_policy,
 )
 from repro.core.types import (
     DySkewConfig,
@@ -46,7 +59,13 @@ __all__ = [
     "FairShareConfig",
     "LinkState",
     "Policy",
+    "PolicyContext",
+    "RedistributionPolicy",
     "RoutingPlan",
     "SkewModelKind",
+    "StrategyConfig",
+    "available_policies",
     "link_state_init",
+    "register_policy",
+    "resolve_policy",
 ]

@@ -32,6 +32,7 @@ from repro.core import (
     Policy,
 )
 from repro.core.admission import FairShareAdmission, FairShareConfig
+from repro.core.policy import PolicyContext, StrategyConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +48,12 @@ class DataConfig:
     dyskew_balance: bool = True
     num_shards: int = 1
     prefetch: int = 2
+    # Shard-placement policy: any name registered in `repro.core.policy`
+    # (unknown names raise ValueError at pipeline construction).  The
+    # default 'dyskew' keeps the AdaptiveLink balancing path; any other
+    # policy assigns sequences through its `assign` placement over the
+    # quadratic per-sequence cost model instead.
+    placement: str = "dyskew"
     # Weighted fair-share mixing across tenant document streams (None =
     # single-tenant).  Tenant i's share of emitted tokens converges to
     # tenant_weights[i] / sum(tenant_weights).
@@ -168,6 +175,13 @@ class DataPipeline:
             self.docs = iter(self._mixed_docs())
         else:
             self.docs = iter(SyntheticDocs(cfg))
+        # Resolve the shard-placement policy through the shared registry
+        # (ValueError on unknown names — construction-time, not deep in
+        # a prefetch thread).  `uses_link` decides whether the
+        # AdaptiveLink balancing path below is active.
+        self.policy = StrategyConfig(kind=cfg.placement).make_policy(
+            PolicyContext(num_workers=max(cfg.num_shards, 1))
+        )
         self.link = AdaptiveLink(AdaptiveLinkConfig(
             dyskew=DySkewConfig(policy=Policy.EAGER_SNOWPARK),
             num_instances=max(cfg.num_shards, 1),
@@ -235,19 +249,28 @@ class DataPipeline:
         else:
             balance = False
         if balance:
-            import jax.numpy as jnp
-
             costs = lens**2 / float(cfg.seq_len) ** 2
             sizes = lens * 4.0
             producer = (
                 np.arange(cfg.global_batch) * cfg.num_shards
                 // cfg.global_batch
             ).astype(np.int32)
-            self.link_state, plan = self.link.step(
-                self.link_state,
-                jnp.asarray(costs), jnp.asarray(sizes), jnp.asarray(producer),
-            )
-            dest = np.asarray(plan.dest)
+            if self.policy.uses_link:
+                import jax.numpy as jnp
+
+                self.link_state, plan = self.link.step(
+                    self.link_state,
+                    jnp.asarray(costs), jnp.asarray(sizes),
+                    jnp.asarray(producer),
+                )
+                dest = np.asarray(plan.dest)
+            else:
+                # Registry policies place through the shared `assign`
+                # seam: per-sequence quadratic costs, producer = the
+                # shard the row-block layout would give the sequence.
+                dest = self.policy.assign(
+                    costs, producer, max(cfg.num_shards, 1)
+                )
             # Reorder sequences so shard s receives contiguous rows: the
             # device layout maps row-blocks to DP shards.
             order = np.argsort(dest, kind="stable")

@@ -54,7 +54,15 @@ from repro.core.admission import (
     FairShareAdmission,
     FairShareConfig,
 )
+from repro.core.policy import PolicyContext, StrategyConfig, resolve_policy
 from repro.core.types import DySkewConfig, Policy
+
+#: Historical scheduler names, mapped onto the shared policy registry
+#: (`repro.core.policy`): round_robin is the static per-row cycle and
+#: least_loaded is the registry's 'none' policy, whose fresh-row
+#: placement is least-loaded (placing a new request is not
+#: redistributing).  Any registered policy name works directly.
+_SCHEDULER_ALIASES = {"round_robin": "static_rr", "least_loaded": "none"}
 
 
 @dataclasses.dataclass
@@ -97,7 +105,11 @@ class ServeConfig:
     kv_bytes_per_token: float = 2 * 64 * 8 * 128 * 2.0  # L*K*hd*2B (bf16)
     interconnect_bw: float = 50e9       # ICI
     migration_latency: float = 2e-3
-    scheduler: str = "dyskew"           # dyskew | round_robin | least_loaded
+    # Placement policy: any name in the `repro.core.policy` registry
+    # (dyskew | none | static_rr | p2c | key_affinity | hillclimb | ...)
+    # plus the historical aliases round_robin / least_loaded.  Unknown
+    # names raise ValueError when the scheduler is built.
+    scheduler: str = "dyskew"
     # Weighted fair-share admission across tenant classes (None = off):
     # requests carry a `tenant` index into these weights, and entry into
     # a replica's decode batch is paced by the shared
@@ -126,9 +138,19 @@ class ServeConfig:
 class ServingScheduler:
     """Places new requests and (optionally) migrates queued ones."""
 
-    def __init__(self, cfg: ServeConfig):
+    def __init__(self, cfg: ServeConfig, seed: int = 0):
         self.cfg = cfg
         n = cfg.num_replicas
+        # Resolve the placement policy through the shared registry —
+        # unknown scheduler names fail HERE, not by silently falling
+        # through to least-loaded.
+        kind = _SCHEDULER_ALIASES.get(cfg.scheduler, cfg.scheduler)
+        self.policy = StrategyConfig(kind=kind).make_policy(PolicyContext(
+            num_workers=n,
+            rng=np.random.default_rng(seed),
+            network_bandwidth=cfg.interconnect_bw,
+            per_row_serialize=cfg.migration_latency,
+        ))
         self.link = AdaptiveLink(AdaptiveLinkConfig(
             dyskew=DySkewConfig(
                 policy=Policy.EAGER_SNOWPARK,
@@ -148,20 +170,18 @@ class ServingScheduler:
         # Shared per-batch admission planner (same guards the simulator and
         # the data pipeline use): prices queued-request migrations.
         self.admission = BatchAdmission(self.link.config.dyskew)
-        self._rr = 0
 
     def place(self, req: Request, load_tokens: np.ndarray) -> int:
-        """Choose a replica for a NEW request (no KV yet → free to move)."""
-        cfg = self.cfg
-        if cfg.scheduler == "round_robin":
-            # Use the current slot, then advance — replica 0 must receive
-            # the first request (seed bug skipped it).
-            rep = self._rr
-            self._rr = (rep + 1) % cfg.num_replicas
-            return rep
-        # least-loaded by outstanding token estimate (dyskew placement is
-        # least-loaded too: eager + zero-size row always clears the gate).
-        return int(np.argmin(load_tokens))
+        """Choose a replica for a NEW request (no KV yet → free to move).
+
+        Delegates to the policy's single-row placement: static_rr uses
+        the current slot then advances (replica 0 must receive the first
+        request — a seed bug skipped it), none/dyskew place least-loaded
+        by outstanding token estimate (dyskew's eager zero-size row
+        always clears the gate), stochastic policies draw from their
+        injected RNG stream.
+        """
+        return int(self.policy.place_one(load_tokens))
 
     def rebalance(
         self,
@@ -173,7 +193,9 @@ class ServingScheduler:
         Returns {rid: new_replica}. Queued requests that already prefilled
         on a replica carry KV; the cost gate decides if moving pays off.
         """
-        if self.cfg.scheduler != "dyskew" or not queued:
+        # Only link-consuming policies (class flag, same hook the
+        # simulator's tick machinery asks) run the rebalance pass.
+        if not self.policy.uses_link or not queued:
             return {}
         import jax.numpy as jnp
 
@@ -213,7 +235,7 @@ class ServingEngine:
 
     def __init__(self, cfg: ServeConfig, seed: int = 0):
         self.cfg = cfg
-        self.sched = ServingScheduler(cfg)
+        self.sched = ServingScheduler(cfg, seed=seed)
         self.rng = np.random.default_rng(seed)
 
     def _make_planner(self) -> Optional[FairShareAdmission]:

@@ -18,11 +18,17 @@ distribute mask plus the shared per-batch admission planner
 self-skip eligibility — the same planner the serving engine and the data
 pipeline call).
 
-Strategies:
-  none       — default 1:1 link (no redistribution)
-  static_rr  — the legacy Snowpark solution: per-row round-robin across all
-               interpreters from the start (paper §II.B, Fig. 1)
-  dyskew     — the paper's adaptive link (configurable policy/models)
+Strategies are pluggable: ``StrategyConfig.kind`` names a policy in the
+`repro.core.policy` registry — ``none`` (default 1:1 link), ``static_rr``
+(the legacy Snowpark per-row round-robin, paper §II.B Fig. 1) and
+``dyskew`` (the paper's adaptive link) are the built-in trio, and new
+policies (``p2c``, ``key_affinity``, ``hillclimb``, ...) land as plugins
+through the same seam (`repro.core.policy.available_policies()` lists the
+roster; an unknown kind raises at `StrategyConfig` construction).  The
+engine asks the POLICY CLASS — never a kind string — which fast paths
+apply: ``never_redistributes`` licenses the closed-form 'none' path,
+``drain_safe`` the closed-form drain, ``uses_link`` the (batched-)tick
+machinery and ``batched_waterfill`` the coalesced-run waterfill planner.
 
 ONE event loop.  ``MultiQuerySimulator.run`` is the only event loop in
 this module; ``Simulator.run_query`` is its N=1 specialization (one
@@ -181,11 +187,25 @@ from repro.core import state_machine
 from repro.core.admission import (
     AutoscaleConfig,
     AutoscalePolicy,
-    BatchAdmission,
     DeadlineAwareAdmission,
     DeadlineConfig,
     FairShareAdmission,
     FairShareConfig,
+)
+# The policy seam lives in repro.core.policy since the registry refactor;
+# StrategyConfig and the waterfill trio are re-exported here because the
+# legacy oracle (`repro.sim.legacy`) and the test suite import them from
+# this module.  noqa: F401 on the re-exports.
+from repro.core.policy import (  # noqa: F401
+    PolicyContext,
+    RedistributionPolicy,
+    StrategyConfig,
+    _waterfill_repair,
+    available_policies,
+    register_policy,
+    resolve_policy,
+    waterfill_counts,
+    waterfill_counts_many,
 )
 from repro.core.types import DySkewConfig, Policy
 from repro.sim.batched_link import BatchedLinkSim
@@ -349,121 +369,9 @@ class AdaptiveLinkSim:
 # Routing helpers
 # --------------------------------------------------------------------- #
 
-
-def _waterfill_repair(
-    bl: np.ndarray, counts: np.ndarray, diff: int, finite: np.ndarray,
-    unit: float,
-) -> np.ndarray:
-    """Repair the floor rounding of a closed-form waterfill in place.
-
-    Shared verbatim between the scalar :func:`waterfill_counts` and the
-    batched :func:`waterfill_counts_many` (which calls it per row needing
-    repair), so the two are bit-identical by construction — including the
-    argmax/argsort tie-breaking that a re-implementation would have to
-    replicate exactly.
-    """
-    while diff > 0:
-        # Trim one item at a time from the currently most-loaded bin —
-        # bulk-trimming a single bin un-levels the fill (hypothesis-found).
-        loads = np.where(counts > 0, bl + counts * unit, -np.inf)
-        d = int(np.argmax(loads))
-        counts[d] -= 1
-        diff -= 1
-    if diff < 0:
-        order = np.argsort(np.where(finite, bl + counts * unit, np.inf))
-        ne = int(finite.sum())
-        i = 0
-        while diff < 0:
-            counts[order[i % ne]] += 1
-            diff += 1
-            i += 1
-    return counts
-
-
-def waterfill_counts(backlog: np.ndarray, k: int, unit: float) -> np.ndarray:
-    """Assign ``k`` unit-cost rows to bins so resulting loads are as level
-    as possible (vectorized least-backlog greedy for identical costs).
-
-    The continuous water level is solved in closed form (with the j lowest
-    backlogs submerged, level_j = (k*unit + sum of those backlogs) / j; the
-    true level is the largest j consistent with its own submerged set) and
-    the integer counts are floored from it, so no bisection loop is needed;
-    the trim/top-up passes of `_waterfill_repair` fix the floor rounding
-    exactly.
-    """
-    n = len(backlog)
-    finite = np.isfinite(backlog)
-    out = np.zeros(n, np.int64)
-    if k == 0:
-        return out
-    if not finite.any():
-        out[0] = k
-        return out
-    bl = backlog.copy()
-    blf = np.sort(bl[finite])
-    levels = (k * unit + np.cumsum(blf)) / np.arange(1, len(blf) + 1)
-    j = int(np.nonzero(levels >= blf)[0][-1])  # always valid at j=0
-    counts = np.floor(np.maximum(levels[j] - bl, 0.0) / unit)
-    counts[~finite] = 0
-    counts = counts.astype(np.int64)
-    diff = int(counts.sum()) - k
-    if diff:
-        counts = _waterfill_repair(bl, counts, diff, finite, unit)
-    return counts
-
-
-def waterfill_counts_many(
-    backlogs: np.ndarray, ks: np.ndarray, units: np.ndarray
-) -> np.ndarray:
-    """:func:`waterfill_counts` batched over a leading axis: row ``b`` of
-    the (B, n) result equals ``waterfill_counts(backlogs[b], ks[b],
-    units[b])`` bit-for-bit.
-
-    The closed-form level is solved for every row at once (one (B, n)
-    sort + cumsum instead of B scalar calls; rows pad their non-finite
-    backlogs with +inf so the sorted prefix — and hence the cumsum prefix
-    the level formula reads — matches the scalar compacted sort exactly),
-    and the rank-based trim/top-up repair runs only on the rows whose
-    floored counts missed ``k`` — through the SAME `_waterfill_repair`
-    the scalar path uses, so tie-breaking cannot drift.
-    """
-    bl = np.asarray(backlogs, np.float64)
-    B, n = bl.shape
-    ks = np.asarray(ks, np.int64)
-    units = np.asarray(units, np.float64)
-    finite = np.isfinite(bl)
-    ne = finite.sum(axis=1)
-    out = np.zeros((B, n), np.int64)
-    live = (ks > 0) & (ne > 0)
-    # Degenerate rows: k == 0 → all zeros; no finite bin → everything on
-    # bin 0 (same as the scalar fallback).
-    none_finite = (ks > 0) & (ne == 0)
-    out[none_finite, 0] = ks[none_finite]
-    if not live.any():
-        return out
-    padded = np.where(finite, bl, np.inf)
-    blf = np.sort(padded, axis=1)
-    with np.errstate(invalid="ignore"):
-        levels = (
-            ks[:, None] * units[:, None] + np.cumsum(blf, axis=1)
-        ) / np.arange(1, n + 1)
-        cond = (levels >= blf) & (np.arange(n) < ne[:, None])
-    j = n - 1 - np.argmax(cond[:, ::-1], axis=1)  # last True per row
-    level = levels[np.arange(B), j]
-    with np.errstate(invalid="ignore"):
-        counts = np.floor(
-            np.maximum(level[:, None] - bl, 0.0) / units[:, None]
-        )
-    counts[~finite] = 0.0
-    counts[~live] = 0.0
-    counts = counts.astype(np.int64)
-    diffs = counts.sum(axis=1) - np.where(live, ks, 0)
-    for b in np.flatnonzero(diffs):
-        counts[b] = _waterfill_repair(
-            bl[b], counts[b], int(diffs[b]), finite[b], float(units[b])
-        )
-    out[live] = counts[live]
-    return out
+# (`_waterfill_repair` / `waterfill_counts` / `waterfill_counts_many`
+# moved verbatim to `repro.core.policy` with the registry refactor and
+# are re-exported above.)
 
 
 class _RowRing:
@@ -694,32 +602,9 @@ def _arrivals_on_grid(
     return True
 
 
-@dataclasses.dataclass(frozen=True)
-class StrategyConfig:
-    kind: str = "dyskew"              # none | static_rr | dyskew
-    dyskew: DySkewConfig = dataclasses.field(
-        default_factory=lambda: DySkewConfig(policy=Policy.EAGER_SNOWPARK)
-    )
-    # Metrics-subsystem cadence: state machines tick every `tick_interval`
-    # seconds of virtual time.
-    tick_interval: float = 50e-3
-    # Adaptive-decision CPU overhead charged per routed batch (metrics
-    # sampling + state machine + waterfill in the VW worker thread). The
-    # legacy static strategy pays none.
-    decision_overhead: float = 200e-6
-    # EMA horizon for the opaque per-row cost estimate.
-    cost_ema: float = 0.2
-    # Disable the per-batch admission guards (ablations).
-    enable_density_guard: bool = True
-    enable_cost_gate: bool = True
-
-    def admission(self) -> BatchAdmission:
-        """The shared `repro.core` admission planner for this strategy."""
-        return BatchAdmission(
-            self.dyskew,
-            enable_density_guard=self.enable_density_guard,
-            enable_cost_gate=self.enable_cost_gate,
-        )
+# (`StrategyConfig` moved to `repro.core.policy` with the registry
+# refactor — it now validates `kind` against the registry at construction
+# — and is re-exported above for the legacy oracle and existing callers.)
 
 
 @dataclasses.dataclass
@@ -792,9 +677,14 @@ class MultiQuerySimulator:
         deadline_cfg: Optional[DeadlineConfig] = None,
         preemption: bool = False,
         autoscale: Optional[AutoscaleConfig] = None,
+        seed: int = 0,
     ):
-        # Fully deterministic given the tenants (streams/arrivals carry
-        # their own seeds), so no RNG state is held here.
+        # Fully deterministic given (tenants, seed): the streams/arrivals
+        # carry their own seeds, and `seed` only feeds the per-tenant
+        # policy RNG streams (child streams [seed, q]) — the
+        # deterministic built-in policies never consult theirs, so the
+        # legacy no-RNG-in-the-loop invariant still holds for them.
+        self.seed = seed
         self.cluster = cluster
         self.fair_share = fair_share
         self.batch_ticks = batch_ticks
@@ -838,7 +728,10 @@ class MultiQuerySimulator:
             return False
         if not tenants:
             return False
-        if any(t.strategy.kind != "none" for t in tenants):
+        if any(
+            not resolve_policy(t.strategy.kind).never_redistributes
+            for t in tenants
+        ):
             return False
         # Producers must be disjoint: a worker fed by two tenants serves
         # an interleaved FIFO the per-tenant closed form cannot see.
@@ -894,9 +787,14 @@ class MultiQuerySimulator:
 
         # Per-tenant state (outer index = tenant).
         strategies = [t.strategy for t in tenants]
-        admissions = [t.strategy.admission() for t in tenants]
         streams = [t.streams for t in tenants]
-        has_link = [t.strategy.kind == "dyskew" for t in tenants]
+        # Capability flags come from the POLICY CLASS, not a kind string:
+        # the registry is the single source of truth for which engine
+        # machinery (links, overhead billing, batched planning) applies.
+        pol_cls = [resolve_policy(t.strategy.kind) for t in tenants]
+        has_link = [cls.uses_link for cls in pol_cls]
+        pays_overhead = [cls.pays_decision_overhead for cls in pol_cls]
+        batched_wf = [cls.batched_waterfill for cls in pol_cls]
         links: List[Optional[AdaptiveLinkSim]] = [None] * nq
         # Batched-tick groups: tenants sharing (DySkewConfig,
         # tick_interval) ride one BatchedLinkSim and ONE coalesced grid
@@ -951,7 +849,6 @@ class MultiQuerySimulator:
             grp_last_tick.append(np.full(len(members), np.nan))
             grp_active.append(np.ones(len(members), bool))
             grp_final.append(np.zeros(len(members), bool))
-        distribute_mask = [[False] * n for _ in range(nq)]
         est_row_cost = [1e-3] * nq
         # Observable backlog: rows sent to each consumer minus rows acked
         # complete (the producer sees its own sends and completion acks;
@@ -984,7 +881,6 @@ class MultiQuerySimulator:
                 bytes_arr_in_tick[q] = acc["bytes"][i]
         busy = [[0.0] * n for _ in range(nq)]
         rows_done = [[0] * n for _ in range(nq)]
-        rr_counter = [0] * nq
         bytes_moved = [0.0] * nq
         rows_redist = [0] * nq
         dec_overhead = [0.0] * nq
@@ -1011,8 +907,13 @@ class MultiQuerySimulator:
         # Closed-form drain: once every arrival has been routed, nothing
         # a state machine does can change the result (routing is the only
         # consumer of distribute masks / cost estimates), so the heap can
-        # be exited and each worker finished by prefix sums.
-        drain_on = self.closed_form_drain is not False
+        # be exited and each worker finished by prefix sums.  Gated on
+        # every policy CLASS declaring itself drain-safe (state changes
+        # only inside `route`) — a policy that mutates observable state
+        # on another trigger forces the heap to run to exhaustion.
+        drain_on = self.closed_form_drain is not False and all(
+            cls.drain_safe for cls in pol_cls
+        )
         drained = False
         # Event telemetry (self.last_event_counts).
         tick_n = gtick_n = arrival_n = admitted_n = enq_n = done_n = 0
@@ -1020,7 +921,6 @@ class MultiQuerySimulator:
         arrival_runs = arrivals_in_runs = enq_coalesced = 0
         wf_calls = wf_rows = 0
         drained_events = drained_chunks = drained_ticks = 0
-        elig_cache: Dict[Tuple[int, int], np.ndarray] = {}
 
         planner: Optional[FairShareAdmission] = None
         dl_planner: Optional[DeadlineAwareAdmission] = None
@@ -1149,57 +1049,40 @@ class MultiQuerySimulator:
             idle = idle_count - (1 if worker_idle[p] else 0)
             return idle / max(n - 1, 1)
 
-        def eligible(q: int, p: int) -> np.ndarray:
-            mask = elig_cache.get((q, p))
-            if mask is None:
-                mask = admissions[q].eligible_destinations(n, p, c.node_of)
-                elig_cache[(q, p)] = mask
-            return mask
+        # One policy instance per tenant, observing the live engine state
+        # through `PolicyContext` closures (est_row_cost / outstanding /
+        # autoscale masks are run() locals that get REASSIGNED, so the
+        # views must read them late).  The per-batch guard pipeline —
+        # density guard, backlog masking, cost gate — lives on the policy
+        # (`RedistributionPolicy`, one copy), consulted by both the
+        # scalar `route_batch` path and the coalesced run's phase-1
+        # planner, so guard ordering and gate inputs cannot drift.  Each
+        # tenant gets an independent child RNG stream of the simulator
+        # seed; the deterministic built-ins never consult it, preserving
+        # the no-RNG-in-the-loop invariant.
 
-        # The dyskew per-batch pipeline pieces, each defined ONCE and
-        # consulted by both the scalar `route_batch` path and the
-        # coalesced run's phase-1 planner — guard ordering, backlog
-        # formula and gate inputs cannot drift between the two.
-
-        def density_blocks(q: int, p: int, b: Batch) -> bool:
-            # Row Size Model admission guard (§III.B): low batch density
-            # + no skew benefit visible → keep the heavy rows local.
-            bpr = b.total_bytes / max(b.num_rows, 1)
-            return admissions[q].density_guard_blocks(
-                b.num_rows, bpr, lambda: siblings_idle_frac(p)
+        def _make_policy(q: int) -> RedistributionPolicy:
+            ctx = PolicyContext(
+                num_workers=n,
+                rng=np.random.default_rng([self.seed, q]),
+                node_of=c.node_of,
+                network_bandwidth=net_bw,
+                per_row_serialize=ser,
+                est_row_cost=lambda: est_row_cost[q],
+                outstanding=lambda: outstanding[q],
+                idle_sibling_frac=siblings_idle_frac,
+                active_mask=(
+                    (lambda: worker_active_np) if autoscale_on
+                    else (lambda: None)
+                ),
+                active_ids=(
+                    (lambda: active_ids) if autoscale_on
+                    else (lambda: None)
+                ),
             )
+            return strategies[q].make_policy(ctx)
 
-        def waterfill_backlog(q: int, p: int, out_vec) -> np.ndarray:
-            """Waterfill inputs for tenant ``q`` routing from ``p``
-            against ``out_vec`` — the live outstanding list (scalar
-            path) or the run planner's shadow copy (same values)."""
-            bl = np.asarray(out_vec) * est_row_cost[q]
-            if autoscale_on:
-                # Decommissioned workers are ineligible destinations.
-                bl = np.where(worker_active_np, bl, np.inf)
-            if strategies[q].dyskew.self_skip:
-                # Forced-remote ablation (§III.B): the producer must
-                # bypass its own node's interpreters entirely (Fig. 1 —
-                # redistribution targets interpreters on *other* VW
-                # nodes), leaving local CPU idle.
-                bl = np.where(eligible(q, p), bl, np.inf)
-            return bl
-
-        def waterfill_unit(q: int) -> float:
-            return max(est_row_cost[q], 1e-9)
-
-        def gate_rejects(q: int, p: int, b: Batch,
-                         dests: np.ndarray) -> bool:
-            # Cost gate (§I goal 3): refuse when estimated movement time
-            # exceeds estimated straggler savings.
-            if not strategies[q].enable_cost_gate:
-                return False
-            moving = dests != p
-            dec = admissions[q].admit_move(
-                float(b.sizes[moving].sum()), int(moving.sum()),
-                est_row_cost[q], n, net_bw, ser,
-            )
-            return not dec.admit
+        policies = [_make_policy(q) for q in range(nq)]
 
         def route_batch(
             q: int, p: int, b: Batch, now: float,
@@ -1215,29 +1098,15 @@ class MultiQuerySimulator:
             applied).  ``emit`` redirects the _ENQUEUE pushes into the
             run's coalescing buffer instead of the heap.
             """
-            st = strategies[q]
             out_q = outstanding[q]
             if dests_pre is not _RB_INLINE:
                 dests = dests_pre
-            elif st.kind == "static_rr":
-                if autoscale_on:
-                    dests = active_ids[
-                        (rr_counter[q] + np.arange(b.num_rows))
-                        % len(active_ids)
-                    ]
-                else:
-                    dests = (rr_counter[q] + np.arange(b.num_rows)) % n
-                rr_counter[q] += b.num_rows
             else:
-                dests = None
-                if distribute_mask[q][p] and not density_blocks(q, p, b):
-                    counts = waterfill_counts(
-                        waterfill_backlog(q, p, out_q), b.num_rows,
-                        waterfill_unit(q),
-                    )
-                    dests = np.repeat(np.arange(n), counts)
-                    if gate_rejects(q, p, b, dests):
-                        dests = None
+                # The policy seam: per-row destinations or None (keep
+                # local).  The base `RedistributionPolicy.route` wraps
+                # the proposal with the shared guard pipeline (density
+                # guard → proposal over the masked backlog → cost gate).
+                dests = policies[q].route(p, b, now)
 
             if dests is None and autoscale_on and not worker_active[p]:
                 # Decommissioned producer worker: its scan re-targets the
@@ -1398,14 +1267,14 @@ class MultiQuerySimulator:
             rows_arr_in_tick[q][p] += b.num_rows
             batches_arr_in_tick[q][p] += 1
             bytes_arr_in_tick[q][p] += b.total_bytes
-            if has_link[q]:
+            if pays_overhead[q]:
                 dec_overhead[q] += st.decision_overhead
                 now += st.decision_overhead
             route_batch(q, p, b, now, dests_pre, emit)
             if k + 1 < len(streams[q][p]):
                 # Flow control: pace against the least-backlogged valid
                 # destination (own consumer when routing locally).
-                if st.kind == "static_rr" or distribute_mask[q][p]:
+                if policies[q].paces_spread(p):
                     if autoscale_on:
                         bl = min(outstanding[q][w] for w in active_ids)
                     else:
@@ -1455,7 +1324,11 @@ class MultiQuerySimulator:
             plans: List[object] = [_RB_INLINE] * len(admitted)
             chains: Dict[int, List[int]] = {}
             for i, (_, q, p, k, b) in enumerate(admitted):
-                if has_link[q]:
+                # Only policies whose proposal IS a waterfill over
+                # `spread_backlog` (class flag) may be planned through
+                # the batched call; everything else routes inline in pop
+                # order, which is always correct.
+                if batched_wf[q]:
                     chains.setdefault(q, []).append(i)
             shadow = {
                 q: np.asarray(outstanding[q], np.float64) for q in chains
@@ -1469,9 +1342,7 @@ class MultiQuerySimulator:
                     while cur < len(lst):
                         i = lst[cur]
                         _, _, p, k, b = admitted[i]
-                        if distribute_mask[q][p] and not density_blocks(
-                            q, p, b
-                        ):
+                        if policies[q].wants_spread(p, b):
                             break  # needs a waterfill at this level
                         plans[i] = None
                         shadow[q][p] += b.num_rows
@@ -1488,9 +1359,9 @@ class MultiQuerySimulator:
                 units = np.empty(len(level))
                 for r, i in enumerate(level):
                     _, q, p, k, b = admitted[i]
-                    bls[r] = waterfill_backlog(q, p, shadow[q])
+                    bls[r] = policies[q].spread_backlog(p, shadow[q])
                     ks[r] = b.num_rows
-                    units[r] = waterfill_unit(q)
+                    units[r] = policies[q].spread_unit()
                 counts_lvl = waterfill_counts_many(bls, ks, units)
                 wf_calls += 1
                 wf_rows += len(level)
@@ -1498,7 +1369,7 @@ class MultiQuerySimulator:
                     _, q, p, k, b = admitted[i]
                     counts = counts_lvl[r]
                     dests = np.repeat(np.arange(n), counts)
-                    if gate_rejects(q, p, b, dests):
+                    if not policies[q].admits(p, b, dests):
                         plans[i] = None
                         shadow[q][p] += b.num_rows
                         continue
@@ -1751,10 +1622,10 @@ class MultiQuerySimulator:
                     np.asarray(bytes_arr_in_tick[q]) / np.maximum(rows_arr, 1),
                     0.0,
                 )
-                distribute_mask[q] = links[q].tick(
+                policies[q].set_link_mask(links[q].tick(
                     np.asarray(recv_in_tick[q]), np.asarray(sync_in_tick[q]),
                     density, bpr, np.asarray(worker_running, bool),
-                ).tolist()
+                ).tolist())
                 recv_in_tick[q] = [0.0] * n
                 sync_in_tick[q] = [0.0] * n
                 rows_arr_in_tick[q] = [0.0] * n
@@ -1814,7 +1685,9 @@ class MultiQuerySimulator:
                     # conversion per live member.
                     dist_rows = dist.tolist()
                     for i in idxs:
-                        distribute_mask[members[int(i)]] = dist_rows[int(i)]
+                        policies[members[int(i)]].set_link_mask(
+                            dist_rows[int(i)]
+                        )
                     # Fancy-index reset writes through to the same rows
                     # the per-tenant accumulator aliases view.
                     for key in ("recv", "sync", "rows", "batches", "bytes"):
@@ -2110,6 +1983,7 @@ class Simulator:
     ):
         self.cluster = cluster
         self.strategy = strategy
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
 
     def _transfer_delay(self, src_worker: int, dst_worker: int, nbytes: float,
@@ -2135,4 +2009,6 @@ class Simulator:
             arrival=0.0,
             arrival_gap=arrival_gap,
         )
-        return MultiQuerySimulator(self.cluster).run([tenant])[0]
+        return MultiQuerySimulator(self.cluster, seed=self.seed).run(
+            [tenant]
+        )[0]

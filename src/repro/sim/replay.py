@@ -565,6 +565,7 @@ def run_open_loop(
     deadline_cfg: Optional["DeadlineConfig"] = None,
     preemption: bool = False,
     autoscale: Optional["AutoscaleConfig"] = None,
+    sim_seed: int = 0,
 ) -> Dict[str, object]:
     """One open-loop scenario end to end: materialize the arrival stream,
     run it on one shared cluster (optionally under fair-share admission),
@@ -578,7 +579,9 @@ def run_open_loop(
     the batched-tick auto envelope — the many-tenant bench relies on
     this so hundreds of tenants batch BY DEFAULT.  The run's per-kind
     event counters are returned under ``"event_counts"`` and its resize
-    log under ``"resizes"``."""
+    log under ``"resizes"``.  ``sim_seed`` feeds the engine's per-tenant
+    policy RNG streams (stochastic registry policies; the deterministic
+    built-ins never consult theirs)."""
     tenants = open_loop_tenants(
         specs, cluster, resolve, process, num_queries, seed=seed,
         feed_factor=feed_factor, grid_align=grid_align,
@@ -588,7 +591,7 @@ def run_open_loop(
         none_closed_form=none_closed_form,
         closed_form_drain=closed_form_drain,
         deadline_aware=deadline_aware, deadline_cfg=deadline_cfg,
-        preemption=preemption, autoscale=autoscale,
+        preemption=preemption, autoscale=autoscale, seed=sim_seed,
     )
     results = sim.run(tenants)
     out = summarize_open_loop(tenants, results, cluster)

@@ -1,0 +1,239 @@
+"""The pluggable redistribution-policy seam (`repro.core.policy`).
+
+Covers the registry contract end to end:
+
+  * unknown `StrategyConfig.kind` raises ValueError at CONSTRUCTION time
+    (regression — it used to fall through to no redistribution silently);
+  * every registered policy's `propose` conserves rows: counts sum to
+    the batch size, nothing goes negative, and +inf-masked (self-skip /
+    decommissioned) destinations receive zero;
+  * engine-level conservation — each policy run end to end on a skewed
+    workload accounts for every row of work exactly once;
+  * the three ported built-ins reproduce the pre-refactor engine
+    bit-for-bit (pinned digests of a fixed trace);
+  * stochastic policies replay bit-identically under the same injected
+    seed and diverge across seeds;
+  * the serving scheduler and data pipeline resolve placement through
+    the same registry (aliases work, unknown names raise).
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.policy import (
+    PolicyContext,
+    RedistributionPolicy,
+    StrategyConfig,
+    available_policies,
+    register_policy,
+    resolve_policy,
+    waterfill_counts,
+)
+from repro.sim.engine import ClusterConfig, MultiQuerySimulator, TenantQuery
+from repro.sim.workload import QueryProfile, generate_query
+
+BUILTINS = ("none", "static_rr", "dyskew")
+NEW_POLICIES = ("p2c", "key_affinity", "hillclimb")
+
+
+def _ctx(n=8, seed=0):
+    return PolicyContext(num_workers=n, rng=np.random.default_rng(seed))
+
+
+def _skewed_tenant(kind, seed=3, alpha=1.4):
+    prof = QueryProfile(
+        name=f"t_{kind}", n_rows=4096, partition_alpha=alpha,
+        hot_fraction=0.3, cost_sigma=0.8,
+    )
+    streams = generate_query(prof, n_producers=8, seed=seed)
+    return TenantQuery(
+        name=prof.name, streams=streams,
+        strategy=StrategyConfig(kind=kind), arrival=0.0,
+    )
+
+
+class TestRegistry:
+    def test_unknown_kind_raises_at_construction(self):
+        # Regression: unknown kinds used to silently behave like 'none'.
+        with pytest.raises(ValueError, match="bogus"):
+            StrategyConfig(kind="bogus")
+
+    def test_unknown_kind_lists_registered_names(self):
+        with pytest.raises(ValueError, match="static_rr"):
+            resolve_policy("nope")
+
+    def test_builtins_and_new_policies_registered(self):
+        names = available_policies()
+        for k in BUILTINS + NEW_POLICIES:
+            assert k in names
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="dyskew"):
+            @register_policy
+            class Dup(RedistributionPolicy):  # noqa: F811
+                name = "dyskew"
+
+    def test_registry_returns_classes_with_flags(self):
+        assert resolve_policy("none").never_redistributes
+        assert resolve_policy("dyskew").uses_link
+        assert resolve_policy("p2c").stochastic
+        assert not resolve_policy("static_rr").pays_decision_overhead
+
+
+class TestConservation:
+    """propose() must neither lose nor duplicate rows — including when
+    self-skip or decommission masks destinations to +inf."""
+
+    @pytest.mark.parametrize("kind", sorted(available_policies()))
+    @pytest.mark.parametrize("mask_mode", ["none", "self", "decom"])
+    def test_propose_conserves_rows(self, kind, mask_mode):
+        rng = np.random.default_rng(17)
+        pol = StrategyConfig(kind=kind).make_policy(_ctx(n=8, seed=5))
+        for trial in range(20):
+            n = 8
+            backlog = rng.exponential(2.0, size=n)
+            producer = int(rng.integers(n))
+            if mask_mode == "self":
+                backlog[producer] = np.inf
+            elif mask_mode == "decom":
+                backlog[rng.integers(n, size=2)] = np.inf
+            k = int(rng.integers(1, 600))
+            counts = pol.propose(producer, k, backlog.copy(), unit=1e-5)
+            if counts is None:  # 'none' never proposes a spread
+                assert kind == "none"
+                continue
+            counts = np.asarray(counts)
+            assert counts.shape == (n,)
+            assert int(counts.sum()) == k, (kind, mask_mode, trial)
+            assert (counts >= 0).all()
+            assert (counts[~np.isfinite(backlog)] == 0).all(), (
+                kind, mask_mode)
+
+    @pytest.mark.parametrize("kind", sorted(available_policies()))
+    def test_engine_level_conservation(self, kind):
+        """End to end: total busy-time across workers equals the total
+        cost of every row generated — no row lost, none run twice."""
+        t = _skewed_tenant(kind)
+        total_cost = sum(
+            float(b.costs.sum()) for stream in t.streams for b in stream
+        )
+        sim = MultiQuerySimulator(ClusterConfig(num_nodes=2, interpreters_per_node=4), seed=0)
+        res = sim.run([t])[0]
+        busy = float(np.asarray(res.per_worker_busy).sum())
+        assert busy == pytest.approx(total_cost, rel=1e-9), kind
+
+    def test_waterfill_counts_exact_sum(self):
+        backlog = np.array([0.0, 5.0, np.inf, 1.0])
+        counts = waterfill_counts(backlog, 1000, unit=0.01)
+        assert counts.sum() == 1000 and counts[2] == 0
+
+
+class TestBuiltinsBitIdentity:
+    """Pinned digests of a fixed skewed trace: the registry-resolved
+    built-ins must keep producing the exact same schedules the string-
+    dispatch engine produced before the refactor (the rtol-1e-9 legacy
+    equivalence suite pins dyskew separately; these pin all three)."""
+
+    PINS = {
+        # Digest over (latency, per_worker_busy, rows_redistributed)
+        # for the fixed trace below, generated by the PRE-refactor
+        # string-dispatch engine (verified identical at the refactor
+        # commit).  Regenerate ONLY for an intentional engine-semantics
+        # change, never for a policy-port change.
+        "none": "5fa8fac3ab82d020",
+        "static_rr": "6dcc87585b324bb5",
+        "dyskew": "cbe950b4b8c3feff",
+    }
+
+    @staticmethod
+    def _digest(kind):
+        t = _skewed_tenant(kind, seed=11, alpha=1.8)
+        res = MultiQuerySimulator(
+            ClusterConfig(num_nodes=2, interpreters_per_node=4), seed=0
+        ).run([t])[0]
+        h = hashlib.sha256()
+        h.update(np.float64(res.latency).tobytes())
+        h.update(np.asarray(res.per_worker_busy, np.float64).tobytes())
+        h.update(np.int64(res.rows_redistributed).tobytes())
+        return h.hexdigest()[:16]
+
+    @pytest.mark.parametrize("kind", BUILTINS)
+    def test_builtin_matches_pin(self, kind):
+        assert self._digest(kind) == self.PINS[kind], kind
+
+
+class TestStochasticDeterminism:
+    """Injected-RNG contract: same seed => bit-identical replay; the
+    built-ins never touch the stream at all."""
+
+    @staticmethod
+    def _run(kind, seed):
+        t = _skewed_tenant(kind)
+        res = MultiQuerySimulator(
+            ClusterConfig(num_nodes=2, interpreters_per_node=4), seed=seed
+        ).run([t])[0]
+        return res.latency, np.asarray(res.per_worker_busy)
+
+    @pytest.mark.parametrize("kind", sorted(available_policies()))
+    def test_same_seed_bit_identical(self, kind):
+        l1, b1 = self._run(kind, 7)
+        l2, b2 = self._run(kind, 7)
+        assert l1 == l2 and np.array_equal(b1, b2)
+
+    def test_p2c_diverges_across_seeds(self):
+        l1, _ = self._run("p2c", 7)
+        l2, _ = self._run("p2c", 8)
+        assert l1 != l2
+
+    @pytest.mark.parametrize("kind", BUILTINS)
+    def test_builtins_seed_invariant(self, kind):
+        # Deterministic built-ins must IGNORE the injected stream: the
+        # legacy equivalence pin depends on it.
+        l1, b1 = self._run(kind, 7)
+        l2, b2 = self._run(kind, 1234)
+        assert l1 == l2 and np.array_equal(b1, b2)
+
+
+class TestServingAndDataResolution:
+    def test_serving_aliases_resolve(self):
+        from repro.serving.engine import ServeConfig, ServingScheduler
+
+        for sched, kind in (("round_robin", "static_rr"),
+                            ("least_loaded", "none"),
+                            ("p2c", "p2c")):
+            s = ServingScheduler(ServeConfig(num_replicas=4,
+                                             scheduler=sched))
+            assert s.policy.name == kind
+
+    def test_serving_unknown_scheduler_raises(self):
+        from repro.serving.engine import ServeConfig, ServingScheduler
+
+        with pytest.raises(ValueError, match="bogus"):
+            ServingScheduler(ServeConfig(num_replicas=4,
+                                         scheduler="bogus"))
+
+    def test_serving_p2c_places_on_live_replicas(self):
+        from repro.serving.engine import ServeConfig, ServingScheduler
+
+        s = ServingScheduler(ServeConfig(num_replicas=4, scheduler="p2c"))
+        load = np.array([5.0, 0.0, 3.0, 1.0])
+        for _ in range(16):
+            assert 0 <= s.place(None, load) < 4
+
+    def test_data_pipeline_registry_placement(self):
+        from repro.data.pipeline import DataConfig, DataPipeline
+
+        cfg = DataConfig(vocab_size=64, seq_len=128, global_batch=8,
+                         num_shards=4, placement="static_rr", seed=3)
+        batch = next(DataPipeline(cfg))
+        assert batch["tokens"].shape == (8, 128)
+
+    def test_data_pipeline_unknown_placement_raises(self):
+        from repro.data.pipeline import DataConfig, DataPipeline
+
+        cfg = DataConfig(vocab_size=64, seq_len=128, global_batch=8,
+                         num_shards=4, placement="bogus")
+        with pytest.raises(ValueError, match="bogus"):
+            DataPipeline(cfg)
