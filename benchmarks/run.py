@@ -116,6 +116,16 @@ def main() -> None:
 
         sys.exit(check_docs.main())
 
+    selected = [m for m in BENCHES if not args.only or args.only in m]
+    if args.only and not selected:
+        # A typo'd --only used to print the CSV header and exit 0,
+        # which reads as "ran fine, zero rows" in CI logs.
+        print(f"error: --only {args.only!r} matches no bench; "
+              f"choose a substring of: "
+              f"{', '.join(m.split('.')[-1] for m in BENCHES)}",
+              file=sys.stderr)
+        sys.exit(2)
+
     print("name,us_per_call,derived")
     failures = 0
     record = {
@@ -125,9 +135,7 @@ def main() -> None:
         "only": args.only,
         "benches": [],
     }
-    for mod_name in BENCHES:
-        if args.only and args.only not in mod_name:
-            continue
+    for mod_name in selected:
         t0 = time.time()
         try:
             mod = importlib.import_module(mod_name)

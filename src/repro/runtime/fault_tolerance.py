@@ -110,11 +110,7 @@ class FaultTolerantRuntime:
 
         # Straggler: Eq. (2) on cumulative step-time slopes with N-strikes.
         slopes = np.asarray(
-            skew_models.sync_slope(
-                __import__("jax.numpy", fromlist=["asarray"]).asarray(
-                    self.metrics["sync_window"]
-                )
-            )
+            skew_models.sync_slope(jnp.asarray(self.metrics["sync_window"]))
         )
         mask = np.array([h in active for h in range(n)])
         others_mean = np.where(
@@ -159,11 +155,26 @@ class FaultTolerantRuntime:
         hs.alive = True
         hs.last_beat = now
         self.metrics["idle_ticks"][host] = 0.0
+        # Clear the detection history, or the host flaps: leftover
+        # strikes plus the pre-exclusion accelerating sync window would
+        # re-flag it as a straggler on its first tick back.  Flattening
+        # the window to the current cumulative step time makes the slope
+        # zero AND keeps tick()'s `sync - window[:, -1]` delta correct
+        # for the next heartbeat.
+        self.strikes[host] = 0
+        self.metrics["sync_window"][host, :] = hs.cum_step_time
 
 
 def elastic_mesh_shape(num_hosts: int, chips_per_host: int = 4) -> Tuple[int, int]:
     """Largest (data, model) mesh from surviving hosts: model axis fixed at
     16 where possible, data axis from whatever host count survived."""
+    if num_hosts <= 0 or chips_per_host <= 0:
+        # 0 hosts used to reach `chips // model` with model == 0
+        # (ZeroDivisionError); an empty mesh is a caller error.
+        raise ValueError(
+            f"mesh needs at least one host and one chip per host, got "
+            f"num_hosts={num_hosts}, chips_per_host={chips_per_host}"
+        )
     chips = num_hosts * chips_per_host
     model = 16 if chips >= 16 else chips
     data = max(chips // model, 1)

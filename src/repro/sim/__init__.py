@@ -13,9 +13,13 @@ legacy       — the seed list-of-tuples engine, kept as the equivalence
 workload     — synthetic suites matching the paper's evaluation
                scenarios, plus open-loop arrival processes, interference
                traffic and the many-tenants scaling mix
+pipeline     — multi-stage UDF pipelines: chained engine stages with
+               inter-stage shuffles and per-row lineage, so skew
+               amplification/attenuation is measurable stage by stage
 replay       — strategy comparison + aggregate statistics (single-tenant,
                closed- and open-loop multi-tenant: per-class tails,
-               Jain's fairness), with optional process-pool fan-out
+               Jain's fairness; pipeline skew-propagation summaries),
+               with optional process-pool fan-out
 """
 
 from repro.sim.batched_link import BatchedLinkSim
@@ -29,6 +33,13 @@ from repro.sim.engine import (
     TenantQuery,
     closed_form_none_result,
 )
+from repro.sim.pipeline import (
+    PipelineInput,
+    PipelineResult,
+    PipelineSimulator,
+    StageSpec,
+    override_strategy,
+)
 from repro.sim.workload import QueryProfile, generate_query
 
 __all__ = [
@@ -36,11 +47,16 @@ __all__ = [
     "BatchedLinkSim",
     "ClusterConfig",
     "MultiQuerySimulator",
+    "PipelineInput",
+    "PipelineResult",
+    "PipelineSimulator",
     "QueryProfile",
     "QueryResult",
     "Simulator",
+    "StageSpec",
     "StrategyConfig",
     "TenantQuery",
     "closed_form_none_result",
     "generate_query",
+    "override_strategy",
 ]

@@ -248,10 +248,21 @@ class ClusterConfig:
 
 @dataclasses.dataclass
 class Batch:
-    """A rowset batch: costs are the TRUE (hidden) per-row UDF seconds."""
+    """A rowset batch: costs are the TRUE (hidden) per-row UDF seconds.
+
+    ``ids`` is an optional per-row lineage lane (tenant-local row
+    indices in ``[0, total rows of the tenant)``): when present AND the
+    engine runs with ``trace_placement=True``, the final worker of each
+    row is recorded in ``MultiQuerySimulator.last_placement`` — the hook
+    the pipeline layer (`repro.sim.pipeline`) uses to propagate skew
+    across chained stages.  The lane is never read on the hot path
+    otherwise, and tracing itself performs no float arithmetic, so it
+    cannot perturb the legacy-equivalence trajectory.
+    """
 
     costs: np.ndarray   # (rows,) float64
     sizes: np.ndarray   # (rows,) float64 bytes
+    ids: Optional[np.ndarray] = None   # (rows,) int64 lineage ids
 
     @property
     def num_rows(self) -> int:
@@ -495,6 +506,26 @@ def _group_by_dest(
     return sd, starts, ends, costs[order], sizes[order]
 
 
+def _producer_placement(tenant: "TenantQuery") -> Optional[np.ndarray]:
+    """Placement of a 'none'-strategy tenant in closed form: every
+    lineage-tagged row stays on its producing worker (the exact property
+    `closed_form_none_result` relies on).  None when no batch carries an
+    ids lane."""
+    hi = -1
+    for stream in tenant.streams:
+        for b in stream:
+            if b.ids is not None and len(b.ids):
+                hi = max(hi, int(b.ids.max()))
+    if hi < 0:
+        return None
+    place = np.full(hi + 1, -1, np.int64)
+    for p, stream in enumerate(tenant.streams):
+        for b in stream:
+            if b.ids is not None:
+                place[b.ids] = p
+    return place
+
+
 def closed_form_none_result(
     tenant: "TenantQuery", cluster: ClusterConfig
 ) -> QueryResult:
@@ -677,6 +708,7 @@ class MultiQuerySimulator:
         deadline_cfg: Optional[DeadlineConfig] = None,
         preemption: bool = False,
         autoscale: Optional[AutoscaleConfig] = None,
+        trace_placement: bool = False,
         seed: int = 0,
     ):
         # Fully deterministic given (tenants, seed): the streams/arrivals
@@ -713,6 +745,15 @@ class MultiQuerySimulator:
         self.deadline_cfg = deadline_cfg
         self.preemption = preemption
         self.autoscale = autoscale
+        #: Record the final worker of every lineage-tagged row (requires
+        #: ``Batch.ids``).  Purely observational: the tracing branch does
+        #: no float arithmetic and no RNG draws, so a traced run is
+        #: bit-identical to an untraced one (pinned by
+        #: tests/test_pipeline.py's differential test).
+        self.trace_placement = trace_placement
+        #: Per-tenant (rows,) int64 final-worker arrays of the most
+        #: recent traced `run` (None for tenants without an ids lane).
+        self.last_placement: List[Optional[np.ndarray]] = []
         #: Per-kind event counters of the most recent `run` (heap events
         #: popped by kind, coalescing stats, drain stats).  Telemetry
         #: only — reported by `benchmarks/bench_multi_tenant.py`.
@@ -762,6 +803,10 @@ class MultiQuerySimulator:
             # No redistribution, disjoint producers: per-worker completion
             # times are a prefix sum — skip the event loop entirely.
             self.last_event_counts = {"none_closed_form_tenants": nq}
+            if self.trace_placement:
+                self.last_placement = [
+                    _producer_placement(t) for t in tenants
+                ]
             return [closed_form_none_result(t, c) for t in tenants]
 
         # Hot-loop locals: node lookup table, flat network constants, and
@@ -890,6 +935,14 @@ class MultiQuerySimulator:
         rows_total = [
             sum(b.num_rows for s in t.streams for b in s) for t in tenants
         ]
+        # Lineage tracing (observational only — see __init__): per-tenant
+        # final-worker arrays, written where routing fixes a row's home.
+        # Preemption re-parks rows to their ORIGINAL worker, so a row's
+        # placement never changes after its batch is routed.
+        trace: Optional[List[Optional[np.ndarray]]] = None
+        if self.trace_placement:
+            trace = [None] * nq
+            self.last_placement = trace
         rows_completed = [0] * nq
         last_done = [t.arrival for t in tenants]
         # tenant_active(q), maintained incrementally: flips False exactly
@@ -1116,6 +1169,12 @@ class MultiQuerySimulator:
                     int(np.argmin(np.asarray(out_q)[active_ids]))
                 ])
                 dests = np.full(b.num_rows, d, np.int64)
+
+            if trace is not None and b.ids is not None:
+                tr = trace[q]
+                if tr is None:
+                    tr = trace[q] = np.full(rows_total[q], -1, np.int64)
+                tr[b.ids] = p if dests is None else dests
 
             if dests is None:
                 # All-local fast path (no redistribution this batch):

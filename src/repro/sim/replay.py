@@ -600,3 +600,81 @@ def run_open_loop(
     out["event_counts"] = dict(sim.last_event_counts)
     out["resizes"] = list(sim.last_resizes)
     return out
+
+
+# ------------------------------------------------------------------ #
+# Multi-stage pipelines (skew propagation)
+# ------------------------------------------------------------------ #
+
+
+def imbalance_coefficient(loads: Sequence[float]) -> float:
+    """Skew coefficient of a per-worker load vector: max/mean.  1.0 is
+    perfectly balanced; k means the hottest worker holds k times its
+    fair share (the quantity DySkew's waterfill drives toward 1).
+    Empty/all-zero loads have nothing to imbalance and return NaN."""
+    x = np.asarray(list(loads), dtype=np.float64)
+    if len(x) == 0 or not np.any(x):
+        return float("nan")
+    return float(x.max() / x.mean())
+
+
+def amplification_ratios(imbalances: Sequence[float]) -> List[float]:
+    """Stage-over-stage skew amplification: ratio of consecutive
+    imbalance coefficients.  >1 means the exchange AMPLIFIED skew
+    (e.g. a key-collision groupby), <1 means it attenuated."""
+    imb = list(imbalances)
+    return [
+        float(imb[k + 1] / imb[k]) if imb[k] and np.isfinite(imb[k])
+        else float("nan")
+        for k in range(len(imb) - 1)
+    ]
+
+
+def summarize_pipeline(pres) -> Dict[str, object]:
+    """Aggregate a `repro.sim.pipeline.PipelineResult` into the skew
+    propagation report: per-stage INPUT imbalance (rows offered per
+    worker — what the shuffle produced), per-stage WORK imbalance
+    (busy seconds per worker — what redistribution achieved against
+    that input), stage-over-stage amplification of the input skew, and
+    the end-to-end makespan vs the sum of per-stage makespans (equal
+    for one tenant; a gap measures cross-tenant stage overlap)."""
+    input_imb = [
+        imbalance_coefficient(s.input_rows_per_worker) for s in pres.stages
+    ]
+    work_imb = [
+        imbalance_coefficient(s.busy_per_worker) for s in pres.stages
+    ]
+    return {
+        "stages": [s.name for s in pres.stages],
+        "strategies": [s.strategy for s in pres.stages],
+        "input_imbalance": input_imb,
+        "work_imbalance": work_imb,
+        "amplification": amplification_ratios(input_imb),
+        "stage_makespans": [s.makespan for s in pres.stages],
+        "makespan": pres.makespan,
+        "stage_makespan_sum": pres.stage_makespan_sum,
+        "rows_out": list(pres.rows_out),
+    }
+
+
+def run_pipeline_ab(
+    stages,
+    inputs,
+    cluster: ClusterConfig,
+    kinds: Sequence[str] = ("dyskew", "static_rr", "p2c"),
+    seed: int = 0,
+) -> Dict[str, Dict[str, object]]:
+    """A/B a chained-stage pipeline across registry policies: the SAME
+    stages, inputs and seed (so keys/costs/fanout draws are identical
+    across arms), with every stage's redistribution strategy overridden
+    to each ``kinds`` entry in turn.  Returns
+    ``{kind: summarize_pipeline(result)}``."""
+    from repro.sim.pipeline import PipelineSimulator, override_strategy
+
+    out: Dict[str, Dict[str, object]] = {}
+    for kind in kinds:
+        sim = PipelineSimulator(
+            cluster, override_strategy(stages, kind), seed=seed,
+        )
+        out[kind] = summarize_pipeline(sim.run(inputs))
+    return out

@@ -547,3 +547,138 @@ def self_skip_case() -> QueryProfile:
         hot_fraction=0.04,
         row_bytes=64_000.0,   # sizeable rows: forced-remote NIC cost shows
     )
+
+
+# ------------------------------------------------------------------ #
+# Multi-stage pipeline suite (skew that propagates across stages)
+# ------------------------------------------------------------------ #
+#
+# Stage model functions are module-level (not lambdas) so scenario
+# definitions stay introspectable and the suite can be rebuilt
+# identically anywhere.  Each is a pure function of (keys, rng).
+
+
+def _explode_fanout(keys: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Nested-document explode: 0-4 child rows per parent."""
+    return rng.integers(0, 5, len(keys))
+
+
+def _rekey_wide(keys: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Re-key exploded children onto a wide key space (decorrelates from
+    the parent key — the shuffle after this attenuates inherited skew)."""
+    return keys * 37 + rng.integers(0, 64, len(keys))
+
+
+def _collapse_groups(keys: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Groupby onto FEW groups: most keys spread over 61 buckets, but a
+    hot slice of the key space collapses onto one bucket — the hash
+    exchange after this concentrates that bucket on a single worker no
+    matter how balanced the previous stage left its output."""
+    out = keys % 61
+    out[keys % 3 == 0] = 3          # ~1/3 of the key space piles up
+    return out
+
+
+def _agg_row_sizes(keys: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Aggregation-stage row widths: the hot collapsed group carries
+    compact pre-aggregated partials, the long tail carries wide
+    payloads.  This is the byte asymmetry where blanket round-robin
+    spreading pays heavy NIC for rows that were never skewed, while
+    adaptive redistribution moves only the (cheap) hot-group overflow."""
+    return np.where(keys == 3, 1024.0, 524288.0)
+
+
+def _hot_key_cost(keys: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Per-row UDF cost with a 4x-hot key slice (value skew on top of
+    partition skew, §II's compound case)."""
+    cost = rng.lognormal(np.log(3e-4), 0.4, len(keys))
+    cost[keys % 5 == 0] *= 4.0
+    return cost
+
+
+def pipeline_suite(quick: bool = False):
+    """Chained-stage pipeline scenarios for the skew-propagation study:
+    ``(name, stages, inputs)`` triples consumed by
+    `repro.sim.pipeline.PipelineSimulator` (strategies per stage are
+    defaults — the bench overrides them per A/B arm).
+
+      fanout_explode    — parse→explode with rekeying: inherited skew
+                          ATTENUATES through the wide rehash.
+      groupby_attenuate — skewed scan whose 'worker' exchange hands the
+                          next stage whatever balance (or skew) the
+                          stage-0 redistribution policy achieved.
+      collision_chain   — balanced map feeding a collapsing groupby:
+                          the hash exchange AMPLIFIES skew mid-pipeline,
+                          then a 'worker' exchange propagates whatever
+                          the reduce stage did about it.
+      etl_chain         — 4-stage mix of all three mechanisms.
+
+    ``quick`` shrinks row counts ~4x for CI smoke runs."""
+    from repro.sim.pipeline import PipelineInput, StageSpec
+
+    r = 4 if quick else 1
+
+    def rows(n: int) -> int:
+        return max(n // r, 256)
+
+    fanout_explode = (
+        "fanout_explode",
+        [
+            StageSpec(name="parse", shuffle="hash", mean_row_cost=3e-4,
+                      fanout_fn=_explode_fanout, key_fn=_rekey_wide,
+                      row_bytes=2048.0),
+            StageSpec(name="transform", mean_row_cost=2e-4),
+        ],
+        [
+            PipelineInput(name="docs", n_rows=rows(3000), num_keys=256,
+                          zipf_alpha=1.3),
+        ],
+    )
+    groupby_attenuate = (
+        "groupby_attenuate",
+        [
+            StageSpec(name="scan_udf", shuffle="worker", mean_row_cost=4e-4,
+                      cost_fn=_hot_key_cost, row_bytes=8192.0),
+            StageSpec(name="reduce", mean_row_cost=3e-4),
+        ],
+        [
+            PipelineInput(name="events", n_rows=rows(4000), num_keys=128,
+                          zipf_alpha=1.5),
+            PipelineInput(name="dims", n_rows=rows(1200), num_keys=512,
+                          zipf_alpha=0.0, partition="rr"),
+        ],
+    )
+    collision_chain = (
+        "collision_chain",
+        [
+            StageSpec(name="map", shuffle="hash", mean_row_cost=2.5e-4,
+                      key_fn=_collapse_groups, row_bytes=2048.0),
+            StageSpec(name="groupby", shuffle="worker", mean_row_cost=6e-4,
+                      cost_sigma=0.3, size_fn=_agg_row_sizes),
+            StageSpec(name="score", mean_row_cost=2e-4),
+        ],
+        [
+            PipelineInput(name="facts", n_rows=rows(5000), num_keys=4096,
+                          zipf_alpha=0.0, partition="rr"),
+        ],
+    )
+    etl_chain = (
+        "etl_chain",
+        [
+            StageSpec(name="ingest", shuffle="hash", mean_row_cost=2e-4,
+                      fanout_fn=_explode_fanout, key_fn=_rekey_wide,
+                      row_bytes=4096.0),
+            StageSpec(name="enrich", shuffle="hash", mean_row_cost=3e-4,
+                      key_fn=_collapse_groups, row_bytes=8192.0),
+            StageSpec(name="aggregate", shuffle="worker", mean_row_cost=5e-4,
+                      cost_fn=_hot_key_cost, row_bytes=2048.0),
+            StageSpec(name="export", mean_row_cost=1.5e-4),
+        ],
+        [
+            PipelineInput(name="stream_a", n_rows=rows(2500), num_keys=512,
+                          zipf_alpha=1.2),
+            PipelineInput(name="stream_b", n_rows=rows(1500), num_keys=1024,
+                          zipf_alpha=0.0, partition="rr"),
+        ],
+    )
+    return [fanout_explode, groupby_attenuate, collision_chain, etl_chain]

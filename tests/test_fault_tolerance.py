@@ -1,0 +1,193 @@
+"""Pinned baseline for `repro.runtime.fault_tolerance`: heartbeat-driven
+failure detection, sync-slope straggler detection with N-strikes
+hysteresis, elastic membership (exclude / rejoin without flapping), and
+mesh reshaping — the substrate the spot-worker work builds on."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault_tolerance import (
+    FaultConfig,
+    FaultTolerantRuntime,
+    elastic_mesh_shape,
+)
+
+CFG = FaultConfig()  # heartbeat 10s, 3 missed beats dead, 3 strikes
+
+
+def beat_all(rt, now, step_times):
+    for h, st in enumerate(step_times):
+        if rt.hosts[h].alive:
+            rt.heartbeat(h, now, st)
+
+
+def run_ticks(rt, n_hosts, ticks, step_fn, start=0.0):
+    """Drive `ticks` heartbeat+tick rounds; step_fn(host, k) gives each
+    host's per-round step time.  Returns the last tick report."""
+    out = {"failed": [], "stragglers": []}
+    for k in range(ticks):
+        now = start + (k + 1) * CFG.heartbeat_interval
+        beat_all(rt, now, [step_fn(h, k) for h in range(n_hosts)])
+        out = rt.tick(now)
+    return out
+
+
+class TestFailureDetection:
+    def test_healthy_fleet_no_detections(self):
+        rt = FaultTolerantRuntime(4)
+        for k in range(10):
+            now = (k + 1) * 10.0
+            beat_all(rt, now, [1.0] * 4)
+            rep = rt.tick(now)
+            assert rep["failed"] == []
+            assert rep["stragglers"] == []
+        assert rt.events == []
+
+    def test_silent_host_flagged_dead_after_grace(self):
+        rt = FaultTolerantRuntime(4)
+        # Host 3 stops beating from t=0; others stay healthy.
+        flagged_at = None
+        for k in range(6):
+            now = (k + 1) * 10.0
+            for h in range(3):
+                rt.heartbeat(h, now, 1.0)
+            rep = rt.tick(now)
+            if rep["failed"]:
+                flagged_at = k
+                assert rep["failed"] == [3]
+                break
+        # idle-time grace: the tick at one interval is still inside the
+        # 1.5x freshness window, then missed_beats_dead silent ticks.
+        assert flagged_at == CFG.missed_beats_dead
+        assert (rt.tick(70.0)["failed"] == [3])  # stays flagged
+
+    def test_one_missed_beat_is_not_death(self):
+        rt = FaultTolerantRuntime(3)
+        beat_all(rt, 10.0, [1.0] * 3)
+        rt.tick(10.0)
+        # host 2 misses exactly one beat, then recovers
+        rt.heartbeat(0, 20.0, 1.0)
+        rt.heartbeat(1, 20.0, 1.0)
+        assert rt.tick(20.0)["failed"] == []
+        beat_all(rt, 30.0, [1.0] * 3)
+        assert rt.tick(30.0)["failed"] == []
+
+
+class TestStragglerDetection:
+    def test_accelerating_host_flagged_before_failure(self):
+        rt = FaultTolerantRuntime(4)
+        # Host 0's step time grows 3x siblings': cumulative sync slope
+        # pulls away while it still beats on schedule.
+        rep = run_ticks(rt, 4, 12, lambda h, k: 3.0 if h == 0 else 1.0)
+        assert rep["stragglers"] == [0]
+        assert rep["failed"] == []
+        kinds = {e[1] for e in rt.events}
+        assert kinds == {"straggler"}
+
+    def test_transient_skew_suppressed_by_strikes(self):
+        rt = FaultTolerantRuntime(4)
+        # One slow ROUND (not a slow host): strikes must not accumulate
+        # to n_strikes, so nobody is flagged.
+        rep = run_ticks(
+            rt, 4, 10,
+            lambda h, k: 5.0 if (h == 0 and k == 4) else 1.0,
+        )
+        assert rep["stragglers"] == []
+        assert all(e[1] != "straggler" for e in rt.events)
+
+    def test_uniform_slowdown_is_not_skew(self):
+        rt = FaultTolerantRuntime(4)
+        # Everyone slows down together — no one is a straggler.
+        rep = run_ticks(rt, 4, 10, lambda h, k: 1.0 + 0.5 * k)
+        assert rep["stragglers"] == []
+
+
+class TestElasticMembership:
+    def test_exclude_and_survivors(self):
+        rt = FaultTolerantRuntime(5)
+        assert rt.exclude([1, 3]) == [0, 2, 4]
+        assert not rt.hosts[1].alive
+        assert rt.survivors() == [0, 2, 4]
+
+    def test_exclude_respects_min_hosts(self):
+        rt = FaultTolerantRuntime(3, FaultConfig(min_hosts=2))
+        assert rt.exclude([0, 1, 2]) == [1, 2]
+        assert len(rt.survivors()) == 2
+
+    def test_excluded_host_not_reported(self):
+        rt = FaultTolerantRuntime(4)
+        rt.exclude([0])
+        # Host 0 stays silent (it's gone) — it must not appear in
+        # failure reports anymore.
+        rep = run_ticks(rt, 4, 5, lambda h, k: 1.0)
+        assert rep["failed"] == []
+
+    def test_rejoin_restores_membership(self):
+        rt = FaultTolerantRuntime(4)
+        rt.exclude([2])
+        rt.rejoin(2, now=100.0)
+        assert rt.survivors() == [0, 1, 2, 3]
+        assert rt.hosts[2].alive
+
+    def test_rejoined_straggler_does_not_flap(self):
+        """The latent-bug pin: a host excluded as a straggler must come
+        back CLEAN — leftover strikes + its old accelerating sync window
+        used to re-flag it on the first tick after rejoin."""
+        rt = FaultTolerantRuntime(4)
+        rep = run_ticks(rt, 4, 12, lambda h, k: 3.0 if h == 0 else 1.0)
+        assert rep["stragglers"] == [0]
+        rt.exclude([0])
+        rejoin_t = 130.0
+        rt.rejoin(0, now=rejoin_t)
+        assert rt.strikes[0] == 0
+        # Healthy behaviour after rejoin: never flagged again.
+        for k in range(6):
+            now = rejoin_t + (k + 1) * CFG.heartbeat_interval
+            beat_all(rt, now, [1.0] * 4)
+            rep = rt.tick(now)
+            assert 0 not in rep["stragglers"]
+            assert 0 not in rep["failed"]
+
+    def test_failed_host_replacement_cycle(self):
+        """End-to-end recovery path: detect death → exclude → remesh →
+        rejoin → healthy fleet again."""
+        rt = FaultTolerantRuntime(4)
+        for k in range(4):
+            now = (k + 1) * 10.0
+            for h in range(3):
+                rt.heartbeat(h, now, 1.0)
+            rep = rt.tick(now)
+        assert 3 in rep["failed"]
+        survivors = rt.exclude(rep["failed"])
+        assert survivors == [0, 1, 2]
+        assert elastic_mesh_shape(len(survivors)) == (1, 12)
+        rt.rejoin(3, now=50.0)
+        rep = run_ticks(rt, 4, 4, lambda h, k: 1.0, start=50.0)
+        assert rep["failed"] == [] and rep["stragglers"] == []
+        assert elastic_mesh_shape(len(rt.survivors())) == (1, 16)
+
+
+class TestElasticMeshShape:
+    @pytest.mark.parametrize("hosts,chips,expect", [
+        (4, 4, (1, 16)),
+        (8, 4, (2, 16)),
+        (2, 2, (1, 4)),
+        (1, 1, (1, 1)),
+        (3, 4, (1, 12)),
+    ])
+    def test_shapes(self, hosts, chips, expect):
+        assert elastic_mesh_shape(hosts, chips) == expect
+
+    def test_total_chips_preserved_or_truncated(self):
+        for hosts in range(1, 12):
+            d, m = elastic_mesh_shape(hosts)
+            assert d * m <= hosts * 4
+            assert d >= 1 and m >= 1
+
+    @pytest.mark.parametrize("hosts,chips", [(0, 4), (-1, 4), (4, 0)])
+    def test_empty_mesh_rejected(self, hosts, chips):
+        """The latent-bug pin: 0 hosts used to raise ZeroDivisionError
+        deep in the shape arithmetic instead of a caller-actionable
+        error."""
+        with pytest.raises(ValueError, match="at least one host"):
+            elastic_mesh_shape(hosts, chips)

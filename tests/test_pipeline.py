@@ -1,0 +1,434 @@
+"""Pipeline invariant suite: the multi-stage layer must conserve rows
+and bytes through arbitrary shuffles, replay bit-identically under the
+same seed, and — with one stage — collapse EXACTLY to a bare
+`MultiQuerySimulator` run, so the legacy rtol-1e-9 equivalence chain
+extends through the new layer.
+
+The invariants are pinned twice: a deterministic parametrized grid that
+ALWAYS runs in tier-1, and a hypothesis fuzz layer over the same
+checkers that widens the input space when the optional dev dependency
+is installed (see requirements-dev.txt)."""
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency
+    hypothesis = None
+
+from repro.core.types import DySkewConfig, Policy, SkewModelKind
+from repro.sim.engine import (
+    Batch,
+    ClusterConfig,
+    MultiQuerySimulator,
+    StrategyConfig,
+    TenantQuery,
+)
+from repro.sim.pipeline import (
+    PipelineInput,
+    PipelineSimulator,
+    StageSpec,
+    hash_partition,
+    override_strategy,
+    zipf_keys,
+)
+from repro.sim.replay import (
+    amplification_ratios,
+    imbalance_coefficient,
+    summarize_pipeline,
+)
+from repro.sim.workload import pipeline_suite
+
+CLUSTER = ClusterConfig(num_nodes=2, interpreters_per_node=4)
+
+KINDS = ["none", "static_rr", "dyskew", "p2c"]
+
+
+def _fanout_mod(keys, rng):
+    return keys % 3
+
+
+def _fanout_rand(keys, rng):
+    return rng.integers(0, 4, len(keys))
+
+
+FANOUTS = [None, _fanout_mod, _fanout_rand]
+
+
+def _stages(shuffles, fanout=None, kind=None):
+    specs = []
+    for i, sh in enumerate(shuffles):
+        specs.append(StageSpec(
+            name=f"s{i}", shuffle=sh, mean_row_cost=2e-4,
+            fanout_fn=fanout, batch_rows=64,
+        ))
+    return override_strategy(specs, kind) if kind else specs
+
+
+def _inputs(n_rows, alpha=1.2):
+    return [
+        PipelineInput(name="a", n_rows=n_rows, num_keys=64, zipf_alpha=alpha),
+        PipelineInput(name="b", n_rows=max(n_rows // 2, 8), num_keys=32,
+                      zipf_alpha=0.0, partition="rr"),
+    ]
+
+
+# ------------------------------------------------------------------ #
+# Invariant checkers — shared by the parametrized grid and the fuzz
+# layer so both exercise identical logic.
+# ------------------------------------------------------------------ #
+
+
+def check_row_conservation(shuffles, fanout, kind, seed):
+    """Every stage must process EXACTLY the rows the previous stage's
+    fanout emitted — none lost in a shuffle, none duplicated."""
+    sim = PipelineSimulator(
+        CLUSTER, _stages(shuffles, fanout=fanout, kind=kind), seed=seed
+    )
+    inputs = _inputs(120)
+    res = sim.run(inputs)
+    assert res.stages[0].rows_in == [i.n_rows for i in inputs]
+    # Replay the fanout draws independently: stage k+1's row count must
+    # equal the sum of stage k's per-row fanout.
+    rows = sim.initial_rows(inputs)
+    for k, stage in enumerate(sim.stages):
+        assert res.stages[k].rows_in == [len(rs.keys) for rs in rows]
+        for ti, rs in enumerate(rows):
+            rng = sim._rng(k, ti, lane=2)
+            fan = stage.fanout(rs.keys, rng)
+            rs.keys = stage.transform_keys(np.repeat(rs.keys, fan), rng)
+            rs.producers = np.zeros(len(rs.keys), np.int64)
+    assert res.rows_out == [len(rs.keys) for rs in rows]
+
+
+def check_byte_conservation(kind, seed):
+    """The bytes a stage offers the engine are exactly the sizes its
+    size model assigned — batching/stream-splitting loses nothing."""
+    sim = PipelineSimulator(
+        CLUSTER, _stages(["hash", "worker"], kind=kind), seed=seed
+    )
+    inputs = _inputs(100)
+    res = sim.run(inputs)
+    rows = sim.initial_rows(inputs)
+    for k, stage in enumerate(sim.stages):
+        tenants = sim.stage_tenants(k, rows, inputs)
+        for ti, t in enumerate(tenants):
+            rng = sim._rng(k, ti, lane=1)
+            stage.costs(rows[ti].keys, rng)  # advance the cost draw
+            expect = float(stage.sizes(rows[ti].keys, rng).sum())
+            got = sum(float(b.sizes.sum()) for s in t.streams for b in s)
+            assert got == pytest.approx(expect, rel=1e-12)
+            assert res.stages[k].bytes_in[ti] == pytest.approx(
+                expect, rel=1e-12
+            )
+        for ti, rs in enumerate(rows):
+            rng = sim._rng(k, ti, lane=2)
+            fan = stage.fanout(rs.keys, rng)
+            rs.keys = stage.transform_keys(np.repeat(rs.keys, fan), rng)
+            rs.producers = np.zeros(len(rs.keys), np.int64)
+
+
+def check_same_seed_bit_identity(kind, seed):
+    stages = _stages(["hash", "worker"], fanout=_fanout_rand, kind=kind)
+    inputs = _inputs(100)
+    r1 = PipelineSimulator(CLUSTER, stages, seed=seed).run(inputs)
+    r2 = PipelineSimulator(CLUSTER, stages, seed=seed).run(inputs)
+    assert r1.makespan == r2.makespan
+    assert r1.rows_out == r2.rows_out
+    for s1, s2 in zip(r1.stages, r2.stages):
+        assert s1.completions == s2.completions
+        assert np.array_equal(
+            s1.input_rows_per_worker, s2.input_rows_per_worker
+        )
+        assert np.array_equal(s1.busy_per_worker, s2.busy_per_worker)
+        for q1, q2 in zip(s1.results, s2.results):
+            assert q1.latency == q2.latency
+            assert q1.bytes_moved_remote == q2.bytes_moved_remote
+
+
+def check_one_stage_equals_bare_engine(kind, seed, alpha):
+    """A 1-stage pipeline IS a bare engine run: same tenants, same seed
+    → bit-identical results, traced or not.  This is the joint that
+    welds the pipeline layer onto the legacy rtol-1e-9 chain."""
+    stages = _stages(["hash"], kind=kind)
+    inputs = _inputs(150, alpha=alpha)
+    sim = PipelineSimulator(CLUSTER, stages, seed=seed)
+    res = sim.run(inputs)
+    # Rebuild the exact stage-0 tenants and run them on a bare, UNTRACED
+    # engine (ids lanes stripped): every float must match bit for bit.
+    tenants = sim.stage_tenants(0, sim.initial_rows(inputs), inputs)
+    for t in tenants:
+        for s in t.streams:
+            for i, b in enumerate(s):
+                s[i] = Batch(costs=b.costs, sizes=b.sizes)
+    bare = MultiQuerySimulator(CLUSTER, seed=sim.stage_seed(0)).run(tenants)
+    assert len(bare) == len(res.stages[0].results)
+    for qb, qp in zip(bare, res.stages[0].results):
+        assert qb.latency == qp.latency
+        assert qb.utilization == qp.utilization
+        assert qb.bytes_moved_remote == qp.bytes_moved_remote
+        assert qb.rows_redistributed == qp.rows_redistributed
+        assert np.array_equal(qb.per_worker_busy, qp.per_worker_busy)
+
+
+# ------------------------------------------------------------------ #
+# Always-on parametrized grid (tier-1)
+# ------------------------------------------------------------------ #
+
+
+class TestPartitioning:
+    @pytest.mark.parametrize("n", [1, 7, 64])
+    def test_hash_partition_in_range_and_deterministic(self, n):
+        keys = np.random.default_rng(3).integers(0, 10_000, 500)
+        d1 = hash_partition(keys, n)
+        assert np.array_equal(d1, hash_partition(keys, n))
+        assert d1.min() >= 0 and d1.max() < n
+
+    @pytest.mark.parametrize("alpha", [0.0, 1.1, 2.0])
+    def test_zipf_keys_in_range(self, alpha):
+        keys = zipf_keys(200, 16, alpha, np.random.default_rng(5))
+        assert len(keys) == 200
+        assert keys.min() >= 0 and keys.max() < 16
+
+    def test_zipf_skews_with_alpha(self):
+        rng = np.random.default_rng(0)
+        flat = np.bincount(zipf_keys(5000, 16, 0.0, rng), minlength=16)
+        rng = np.random.default_rng(0)
+        skew = np.bincount(zipf_keys(5000, 16, 1.5, rng), minlength=16)
+        assert skew.max() > 2 * flat.max()
+
+
+class TestConservation:
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("fanout", FANOUTS)
+    def test_row_conservation(self, kind, fanout):
+        check_row_conservation(["hash", "worker"], fanout, kind, seed=7)
+
+    @pytest.mark.parametrize("shuffles", [["hash"], ["worker", "hash", "worker"]])
+    def test_row_conservation_depths(self, shuffles):
+        check_row_conservation(shuffles, _fanout_rand, "dyskew", seed=11)
+
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_byte_conservation(self, kind):
+        check_byte_conservation(kind, seed=13)
+
+    def test_empty_tenant_flows_through(self):
+        """A tenant whose fanout kills every row mid-pipeline must still
+        produce stage reports (zero rows) instead of crashing."""
+        stages = [
+            StageSpec(name="kill", shuffle="hash", batch_rows=32,
+                      fanout_fn=lambda k, rng: np.zeros(len(k), np.int64)),
+            StageSpec(name="after", batch_rows=32),
+        ]
+        res = PipelineSimulator(CLUSTER, stages, seed=3).run(
+            [PipelineInput(name="t", n_rows=64, num_keys=8)]
+        )
+        assert res.stages[1].rows_in == [0]
+        assert res.rows_out == [0]
+
+
+class TestDeterminism:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_same_seed_bit_identity(self, kind):
+        check_same_seed_bit_identity(kind, seed=17)
+
+    def test_cross_seed_divergence(self):
+        stages = _stages(["hash"], fanout=_fanout_rand)
+        inputs = _inputs(200)
+        r1 = PipelineSimulator(CLUSTER, stages, seed=1).run(inputs)
+        r2 = PipelineSimulator(CLUSTER, stages, seed=2).run(inputs)
+        assert r1.makespan != r2.makespan
+
+
+class TestDifferentialPin:
+    @pytest.mark.parametrize("kind", KINDS)
+    def test_one_stage_equals_bare_engine(self, kind):
+        check_one_stage_equals_bare_engine(kind, seed=23, alpha=1.2)
+
+    def test_trace_does_not_perturb_run(self):
+        """trace_placement=True vs False on identical tenants: results
+        bit-identical (tracing is purely observational)."""
+        n = CLUSTER.num_workers
+
+        def tenants():
+            rng = np.random.default_rng(4)
+            out = []
+            for q in range(2):
+                streams, base = [], 0
+                for p in range(n):
+                    m = 20 + 10 * (p == 0)
+                    costs = rng.lognormal(np.log(3e-4), 0.4, m)
+                    streams.append([Batch(
+                        costs=costs.copy(),
+                        sizes=np.full(m, 1024.0),
+                        ids=np.arange(base, base + m, dtype=np.int64),
+                    )])
+                    base += m
+                out.append(TenantQuery(
+                    name=f"q{q}", streams=streams,
+                    strategy=StrategyConfig(kind="dyskew"),
+                ))
+            return out
+
+        traced_sim = MultiQuerySimulator(CLUSTER, trace_placement=True, seed=9)
+        traced = traced_sim.run(tenants())
+        plain = MultiQuerySimulator(CLUSTER, seed=9).run(tenants())
+        for a, b in zip(traced, plain):
+            assert a.latency == b.latency
+            assert np.array_equal(a.per_worker_busy, b.per_worker_busy)
+        # And the trace itself is complete: every row placed.
+        for tr in traced_sim.last_placement:
+            assert tr is not None and (tr >= 0).all()
+
+    @pytest.mark.parametrize("force_loop", [False, True])
+    def test_none_strategy_placement_is_producer(self, force_loop):
+        """'none' never moves rows, so the traced placement must equal
+        each row's producer — through the closed-form fast path AND the
+        event loop."""
+        n = CLUSTER.num_workers
+        streams, base = [], 0
+        for p in range(n):
+            m = 8 + p
+            streams.append([Batch(
+                costs=np.full(m, 2e-4), sizes=np.full(m, 64.0),
+                ids=np.arange(base, base + m, dtype=np.int64),
+            )])
+            base += m
+        t = TenantQuery(name="t", streams=streams,
+                        strategy=StrategyConfig(kind="none"))
+        sim = MultiQuerySimulator(
+            CLUSTER, trace_placement=True,
+            none_closed_form=False if force_loop else None,
+        )
+        sim.run([t])
+        place = sim.last_placement[0]
+        expect = np.concatenate([
+            np.full(8 + p, p, np.int64) for p in range(n)
+        ])
+        assert np.array_equal(place, expect)
+
+
+class TestSuiteAndMetrics:
+    def test_pipeline_suite_shapes(self):
+        suite = pipeline_suite(quick=True)
+        names = [name for name, _, _ in suite]
+        assert names == ["fanout_explode", "groupby_attenuate",
+                         "collision_chain", "etl_chain"]
+        for _, stages, inputs in suite:
+            assert 2 <= len(stages) <= 5
+            assert inputs
+            # quick mode shrinks but keeps every scenario runnable
+            assert all(i.n_rows >= 256 for i in inputs)
+
+    def test_imbalance_coefficient(self):
+        assert imbalance_coefficient([4, 4, 4, 4]) == 1.0
+        assert imbalance_coefficient([8, 0, 0, 0]) == 4.0
+        assert np.isnan(imbalance_coefficient([]))
+        assert np.isnan(imbalance_coefficient([0.0, 0.0]))
+
+    def test_amplification_ratios(self):
+        assert amplification_ratios([1.0, 2.0, 1.0]) == [2.0, 0.5]
+        assert np.isnan(amplification_ratios([float("nan"), 2.0])[0])
+
+    def test_summarize_pipeline(self):
+        name, stages, inputs = pipeline_suite(quick=True)[2]
+        assert name == "collision_chain"
+        res = PipelineSimulator(
+            ClusterConfig(num_nodes=2), stages, seed=5
+        ).run(inputs)
+        s = summarize_pipeline(res)
+        assert s["stages"] == [sp.name for sp in stages]
+        assert len(s["input_imbalance"]) == len(stages)
+        assert len(s["amplification"]) == len(stages) - 1
+        assert s["makespan"] > 0
+        # one tenant: end-to-end makespan == sum of stage makespans
+        assert s["makespan"] == pytest.approx(s["stage_makespan_sum"])
+        # the collision chain must actually amplify skew mid-pipeline
+        assert max(s["amplification"]) > 1.5
+
+    def test_makespan_vs_stage_sum_with_overlapping_tenants(self):
+        """With tenants at different completion times, later stages
+        start at per-tenant barriers — end-to-end makespan is at most
+        the per-stage sum (stages of DIFFERENT tenants overlap)."""
+        stages = _stages(["hash", "worker", "hash"])
+        inputs = _inputs(150) + [
+            PipelineInput(name="late", n_rows=64, num_keys=8, arrival=0.05),
+        ]
+        res = PipelineSimulator(CLUSTER, stages, seed=11).run(inputs)
+        assert res.makespan <= res.stage_makespan_sum + 1e-12
+
+
+class TestValidation:
+    def test_bad_shuffle_rejected(self):
+        with pytest.raises(ValueError, match="shuffle"):
+            StageSpec(name="x", shuffle="broadcast")
+
+    def test_bad_partition_rejected(self):
+        with pytest.raises(ValueError, match="partition"):
+            PipelineInput(name="x", partition="range")
+
+    def test_empty_pipeline_rejected(self):
+        with pytest.raises(ValueError, match="at least one stage"):
+            PipelineSimulator(CLUSTER, [])
+
+    def test_empty_inputs_rejected(self):
+        with pytest.raises(ValueError, match="at least one input"):
+            PipelineSimulator(CLUSTER, _stages(["hash"])).run([])
+
+    def test_negative_fanout_rejected(self):
+        stages = [StageSpec(
+            name="bad", shuffle="hash",
+            fanout_fn=lambda k, rng: np.full(len(k), -1),
+        ), StageSpec(name="sink")]
+        with pytest.raises(ValueError, match="fanout_fn"):
+            PipelineSimulator(CLUSTER, stages, seed=0).run(
+                [PipelineInput(name="t", n_rows=32, num_keys=4)]
+            )
+
+    def test_override_strategy_preserves_knobs(self):
+        spec = StageSpec(name="s")
+        out = override_strategy([spec], "static_rr")
+        assert out[0].strategy.kind == "static_rr"
+        assert out[0].strategy.tick_interval == spec.strategy.tick_interval
+        # and the dyskew detection config rides along untouched
+        assert out[0].strategy.dyskew == spec.strategy.dyskew
+
+
+# ------------------------------------------------------------------ #
+# Hypothesis fuzz layer (optional dev dependency, same checkers)
+# ------------------------------------------------------------------ #
+
+if hypothesis is not None:
+    # Keep runs fast on 1 CPU.
+    FUZZ = settings(max_examples=10, deadline=None)
+    KIND_ST = st.sampled_from(KINDS)
+
+    class TestFuzzInvariants:
+        @FUZZ
+        @given(
+            shuffles=st.lists(st.sampled_from(["hash", "worker"]),
+                              min_size=1, max_size=3),
+            fanout=st.sampled_from(FANOUTS),
+            kind=KIND_ST,
+            seed=st.integers(0, 50),
+        )
+        def test_row_conservation(self, shuffles, fanout, kind, seed):
+            check_row_conservation(shuffles, fanout, kind, seed)
+
+        @FUZZ
+        @given(kind=KIND_ST, seed=st.integers(0, 50))
+        def test_byte_conservation(self, kind, seed):
+            check_byte_conservation(kind, seed)
+
+        @FUZZ
+        @given(kind=KIND_ST, seed=st.integers(0, 50))
+        def test_same_seed_bit_identity(self, kind, seed):
+            check_same_seed_bit_identity(kind, seed)
+
+        @FUZZ
+        @given(kind=KIND_ST, seed=st.integers(0, 50),
+               alpha=st.floats(0.0, 1.6))
+        def test_one_stage_equals_bare_engine(self, kind, seed, alpha):
+            check_one_stage_equals_bare_engine(kind, seed, alpha)
