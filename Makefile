@@ -3,13 +3,21 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test check-docs bench bench-quick
+.PHONY: verify test lint check-bench check-docs bench bench-quick
 
-# Tier-1 verification: the full test suite plus the doc-link check.
-verify: test check-docs
+# Tier-1 verification: the full test suite plus the static checks.
+verify: test lint check-bench check-docs
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# dyslint: the AST-based invariant linter (tools/lint/).  Needs only a
+# bare Python — no numpy/jax import happens during linting.
+lint:
+	$(PYTHON) tools/lint/runner.py
+
+check-bench:
+	$(PYTHON) tools/check_bench.py
 
 check-docs:
 	$(PYTHON) tools/check_docs.py

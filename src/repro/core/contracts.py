@@ -1,0 +1,154 @@
+"""The invariant contracts the repo's fast paths depend on, as data.
+
+Every closed form this reproduction has landed (closed-form drain,
+batched GTICK, batched waterfill) is *licensed* by contracts that used
+to live only in docstrings and runtime pins:
+
+  * policies draw randomness exclusively from the injected
+    ``PolicyContext.rng`` stream (never global numpy/stdlib RNG state);
+  * a ``drain_safe=True`` policy mutates observable state only inside
+    ``route``/``propose`` (what lets the engine exit the heap once every
+    arrival is routed);
+  * sim-path code never consults wall clocks or environment ordering —
+    one violation silently corrupts the rtol-1e-9 legacy equivalence
+    pin;
+  * jit-reachable tick code performs no host syncs or Python branches
+    on traced values (what keeps the batched GTICK one dispatch).
+
+This module states those contracts as plain data so they have ONE home
+shared by the runtime (``from repro.core import contracts``) and the
+static analyzer (``tools/lint`` loads this file directly, without
+importing the ``repro.core`` package, so linting needs no numpy/jax).
+Keep it stdlib-only and side-effect-free.
+
+``tests/test_dyslint.py`` cross-checks :data:`CAPABILITY_FLAGS` against
+the live ``RedistributionPolicy`` class attributes, so the two cannot
+drift apart silently.
+"""
+
+from __future__ import annotations
+
+# --------------------------------------------------------------------- #
+# Capability-flag contract (repro.core.policy.RedistributionPolicy)
+# --------------------------------------------------------------------- #
+
+#: Every capability flag a registered policy may declare, with its
+#: default value on the ``RedistributionPolicy`` base class.  The
+#: capability lint pass starts each ``@register_policy`` class from
+#: these defaults and applies the class-body overrides it can see.
+CAPABILITY_FLAGS = {
+    "uses_link": False,
+    "never_redistributes": False,
+    "drain_safe": True,
+    "batched_waterfill": False,
+    "pays_decision_overhead": True,
+    "stochastic": False,
+}
+
+#: The decorator that marks a class as a registered policy (and thus
+#: subject to the capability-contract pass).
+POLICY_DECORATOR = "register_policy"
+
+#: Methods in which a ``drain_safe=True`` policy may mutate ``self``:
+#: construction, plus the two engine entry points that only run while
+#: arrivals are still being routed.  Private helpers (``_name``) called
+#: exclusively from these methods inherit the permission.  Anything
+#: else — ``place_one``, ``wants_spread``, ``paces_spread``, mask
+#: pushes — can fire after routing is complete, where a mutation would
+#: invalidate the closed-form drain.
+MUTATION_SAFE_METHODS = ("__init__", "route", "propose")
+
+#: The injected-randomness attribute: any read of ``ctx.rng`` /
+#: ``self.ctx.rng`` requires ``stochastic=True``.
+RNG_ATTRIBUTE = "rng"
+
+#: The adaptive-link mask attribute: reads (or a ``set_link_mask``
+#: override) require ``uses_link=True`` — the engine only creates and
+#: ticks link instances for policies that declare the flag.
+LINK_MASK_ATTRIBUTE = "link_mask"
+
+
+# --------------------------------------------------------------------- #
+# Determinism contract (the sim/serving/data bit-identity surface)
+# --------------------------------------------------------------------- #
+
+#: Repo-relative directory prefixes in which global-state RNG, wall
+#: clocks and environment-order iteration are forbidden.  Virtual time
+#: comes from the event heap; randomness comes from seeds threaded
+#: through configs (``np.random.default_rng(seed)`` is fine, the module
+#: singleton and argless generators are not).
+DETERMINISM_SCOPE = (
+    "src/repro/sim/",
+    "src/repro/core/",
+    "src/repro/serving/",
+    "src/repro/data/",
+)
+
+#: Modules covered by bit-identity pins (the rtol-1e-9 legacy
+#: equivalence pin of ``tests/test_sim_equivalence.py``, the PR 6
+#: digest pins of ``tests/test_policy_interface.py``, and the pipeline
+#: pins of ``tests/test_pipeline.py``).  The float-order pass flags
+#: order-sensitive reductions over unordered containers here: a sum
+#: whose operand order depends on set hashing is a different float
+#: result on a different run.
+PINNED_MODULES = (
+    "src/repro/sim/engine.py",
+    "src/repro/sim/legacy.py",
+    "src/repro/sim/batched_link.py",
+    "src/repro/sim/pipeline.py",
+    "src/repro/core/state_machine.py",
+    "src/repro/core/skew_models.py",
+    "src/repro/core/admission.py",
+    "src/repro/core/policy.py",
+    "src/repro/core/adaptive_link.py",
+)
+
+
+# --------------------------------------------------------------------- #
+# Jit-reachability contract (the tick hot path)
+# --------------------------------------------------------------------- #
+
+#: Functions that are jit-reachable through CROSS-module dispatch the
+#: per-module AST analysis cannot see (e.g. ``sim/engine.py`` jits
+#: ``partial(_tick_impl, cfg=cfg)`` which calls
+#: ``state_machine.tick``).  Maps repo-relative path -> {function name
+#: -> tuple of parameter names that are static at every jit call site
+#: (hashable config objects bound via ``partial`` or
+#: ``static_argnames``)}.  The jax-hazard pass seeds its reachability
+#: closure from these in addition to what it derives per module.
+JIT_REACHABLE = {
+    "src/repro/core/state_machine.py": {
+        "tick": ("config",),
+        "tick_many": ("config",),
+        "advance": ("config",),
+    },
+    "src/repro/core/skew_models.py": {
+        "detect_skew": ("config",),
+        "update_metrics": (),
+        "apply_n_strikes": ("n_strikes",),
+        "heavy_row_disable": ("config",),
+        "batch_density_heavy_rows": ("config",),
+    },
+    # train/loop.py jits the closure returned by make_train_step.
+    "src/repro/train/step.py": {
+        "train_step": (),
+    },
+}
+
+
+#: Calls whose results are static (trace-time Python values) even
+#: though the per-module analysis cannot prove it: host-side config
+#: reads that are constant for the lifetime of a trace.
+STATIC_CALLS = (
+    "repro.models.perf_flags.get_flags",
+)
+
+
+# --------------------------------------------------------------------- #
+# Lint surface
+# --------------------------------------------------------------------- #
+
+#: Default root-relative paths ``make lint`` sweeps.  Tests are
+#: deliberately excluded: lint fixtures (including a deliberately
+#: misdeclared policy) live under ``tests/lint_fixtures/``.
+DEFAULT_LINT_PATHS = ("src", "tools", "benchmarks")

@@ -1449,6 +1449,7 @@ class MultiQuerySimulator:
 
             for i, (_, q, p, k, b) in enumerate(admitted):
                 handle_arrival(_ADMITTED, q, p, k, now, plans[i], emit)
+            # dyslint: disable=DY402 -- insertion order IS heap pop order (pinned by the coalesced-run contract); the accumulator is an integer event counter
             for (t, d), segs in pending_enq.items():
                 if len(segs) == 1:
                     q, seg = segs[0]

@@ -1,0 +1,37 @@
+"""Deliberately misdeclared policy — dyslint's capability pass MUST
+flag this file (DY202), and ``tests/test_dyslint.py`` pins that running
+the linter over it exits non-zero.
+
+The class declares ``drain_safe=True`` (it inherits the base-class
+default and even restates it) while mutating ``self`` inside
+``place_one`` — an entry point the engine may call after routing is
+complete, where a mutation invalidates the closed-form drain.  This is
+exactly the drift the pass exists to catch, so keep this file OUT of
+the default lint scope (``tests/`` is excluded by design) and never
+"fix" it.
+"""
+
+import numpy as np
+
+from repro.core.policy import RedistributionPolicy, register_policy
+
+
+@register_policy
+class SneakyStatefulPolicy(RedistributionPolicy):
+    """Claims to be drain-safe but keeps a placement counter."""
+
+    name = "sneaky_stateful_fixture"
+    drain_safe = True
+
+    def __init__(self):
+        self._placed = 0
+
+    def propose(self, producer, k, backlog, unit):
+        counts = np.zeros(len(backlog), np.int64)
+        counts[producer] = k
+        return counts
+
+    def place_one(self, backlog):
+        worker = int(np.argmin(backlog))
+        self._placed += 1          # <-- mutation outside route/propose
+        return worker

@@ -1,0 +1,150 @@
+"""Tests for tools/check_bench.py, the BENCH_<n>.json schema validator.
+
+Each test builds a tiny record tree under tmp_path so the validator's
+judgements are exercised without touching the repo's real trajectory
+(which ``test_real_records_validate`` pins green separately).
+"""
+
+import copy
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)
+
+from tools import check_bench  # noqa: E402
+
+
+def _record(created=100.0, wall=1.5):
+    return {
+        "schema": 1,
+        "created_unix": created,
+        "quick": True,
+        "only": "",
+        "total_wall_s": wall,
+        "benches": [
+            {
+                "suite": "benchmarks.bench_sim",
+                "status": "ok",
+                "wall_s": wall,
+                "rows": [
+                    {"name": "drain_128", "us_per_call": 12.5,
+                     "derived": {"speedup": 3.0}},
+                ],
+            },
+        ],
+    }
+
+
+def _write(tmp_path, name, data):
+    (tmp_path / name).write_text(json.dumps(data))
+
+
+class TestValidateRecord:
+    def test_well_formed_record_passes(self):
+        assert check_bench.validate_record(_record(), "BENCH_1.json") == []
+
+    def test_missing_top_level_keys(self):
+        rec = _record()
+        del rec["total_wall_s"]
+        del rec["quick"]
+        errs = check_bench.validate_record(rec, "x")
+        assert any("total_wall_s" in e for e in errs)
+        assert any("quick" in e for e in errs)
+
+    def test_wrong_schema_version(self):
+        rec = _record()
+        rec["schema"] = 2
+        errs = check_bench.validate_record(rec, "x")
+        assert any("schema" in e for e in errs)
+
+    def test_ran_bench_must_bill_wall_time(self):
+        rec = _record()
+        del rec["benches"][0]["wall_s"]
+        rec["total_wall_s"] = 0.0
+        errs = check_bench.validate_record(rec, "x")
+        assert any("wall_s" in e for e in errs)
+
+    def test_skipped_bench_needs_no_wall_or_rows(self):
+        rec = _record()
+        rec["benches"].append({"suite": "benchmarks.bench_gpu",
+                               "status": "skipped"})
+        assert check_bench.validate_record(rec, "x") == []
+
+    def test_failed_bench_still_bills_wall_time(self):
+        rec = _record()
+        rec["benches"].append({"suite": "benchmarks.bench_bad",
+                               "status": "failed"})
+        errs = check_bench.validate_record(rec, "x")
+        assert any("status=failed" in e and "wall_s" in e for e in errs)
+
+    def test_bad_row_shapes(self):
+        rec = _record()
+        rec["benches"][0]["rows"].append({"name": "", "us_per_call": -1.0,
+                                          "derived": []})
+        errs = check_bench.validate_record(rec, "x")
+        assert any("non-empty string" in e for e in errs)
+        assert any("us_per_call" in e for e in errs)
+        assert any("derived" in e for e in errs)
+
+    def test_null_us_per_call_is_legal(self):
+        # The writer nulls NaN (allow_nan=False) — e.g. Jain's index of
+        # a class with zero completions.
+        rec = _record()
+        rec["benches"][0]["rows"][0]["us_per_call"] = None
+        assert check_bench.validate_record(rec, "x") == []
+
+    def test_total_wall_must_match_bench_sum(self):
+        rec = _record(wall=2.0)
+        rec["total_wall_s"] = 99.0
+        errs = check_bench.validate_record(rec, "x")
+        assert any("sum of bench" in e for e in errs)
+
+
+class TestCheckFiles:
+    def test_contiguous_sequence_passes(self, tmp_path):
+        _write(tmp_path, "BENCH_3.json", _record(created=10.0))
+        _write(tmp_path, "BENCH_4.json", _record(created=20.0))
+        checked, errs = check_bench.check_files(str(tmp_path))
+        assert checked == ["BENCH_3.json", "BENCH_4.json"]
+        assert errs == []
+
+    def test_hole_in_numbering_is_flagged(self, tmp_path):
+        _write(tmp_path, "BENCH_3.json", _record(created=10.0))
+        _write(tmp_path, "BENCH_5.json", _record(created=20.0))
+        _, errs = check_bench.check_files(str(tmp_path))
+        assert any("BENCH_4.json" in e and "holes" in e for e in errs)
+
+    def test_backwards_created_unix_is_flagged(self, tmp_path):
+        _write(tmp_path, "BENCH_3.json", _record(created=20.0))
+        _write(tmp_path, "BENCH_4.json", _record(created=10.0))
+        _, errs = check_bench.check_files(str(tmp_path))
+        assert any("out of order" in e for e in errs)
+
+    def test_unparseable_json_is_flagged(self, tmp_path):
+        (tmp_path / "BENCH_3.json").write_text("{not json")
+        _, errs = check_bench.check_files(str(tmp_path))
+        assert any("unreadable" in e for e in errs)
+
+    def test_misnamed_record_is_flagged(self, tmp_path):
+        _write(tmp_path, "BENCH_03x.json", _record())
+        _, errs = check_bench.check_files(str(tmp_path))
+        assert any("does not match" in e for e in errs)
+
+    def test_main_exit_codes(self, tmp_path, capsys):
+        _write(tmp_path, "BENCH_1.json", _record())
+        assert check_bench.main(["--root", str(tmp_path)]) == 0
+        assert "OK" in capsys.readouterr().out
+        bad = _record()
+        bad["schema"] = 99
+        _write(tmp_path, "BENCH_2.json", bad)
+        assert check_bench.main(["--root", str(tmp_path)]) == 1
+        assert "FAILED" in capsys.readouterr().out
+
+
+def test_real_records_validate():
+    """The repo's actual trajectory must satisfy its own schema."""
+    checked, errs = check_bench.check_files(ROOT)
+    assert errs == []
+    assert checked, "no BENCH_*.json records found at repo root"

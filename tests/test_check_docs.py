@@ -1,0 +1,182 @@
+"""Tests for tools/check_docs.py, the doc-link and snippet checker.
+
+The checker resolves everything against its module-level ``ROOT``;
+these tests monkeypatch ROOT to a synthetic tree under tmp_path so each
+judgement — reference hit, reference miss, fenced-shell parsing, make
+target resolution — is pinned without depending on the real docs
+(which ``make check-docs`` keeps green separately).
+"""
+
+import os
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)
+
+from tools import check_docs  # noqa: E402
+
+
+@pytest.fixture
+def tree(tmp_path, monkeypatch):
+    """A minimal repo skeleton the checker can resolve against."""
+    (tmp_path / "src" / "repro" / "sim").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "__init__.py").write_text("")
+    (tmp_path / "src" / "repro" / "sim" / "__init__.py").write_text("")
+    (tmp_path / "src" / "repro" / "sim" / "engine.py").write_text("")
+    (tmp_path / "tools").mkdir()
+    (tmp_path / "tools" / "runner.py").write_text("")
+    (tmp_path / "Makefile").write_text(
+        ".PHONY: test lint\n"
+        "test:\n\tpytest\n"
+        "lint:\n\techo lint\n"
+        "VAR := 1\n"
+    )
+    monkeypatch.setattr(check_docs, "ROOT", str(tmp_path))
+    return tmp_path
+
+
+def _doc(tree, text):
+    (tree / "README.md").write_text(textwrap.dedent(text))
+    return ["README.md"]
+
+
+class TestReferenceCheck:
+    def test_existing_path_and_module_resolve(self, tree):
+        docs = _doc(tree, """\
+            See `src/repro/sim/engine.py` and the `repro.sim` package,
+            or run `python tools/runner.py`.
+        """)
+        checked, failures = check_docs.check(docs)
+        assert failures == []
+        assert checked == 3
+
+    def test_missing_path_and_module_are_reported_with_line(self, tree):
+        docs = _doc(tree, """\
+            intro line
+            Broken: `src/repro/gone.py` and `repro.gone.module`.
+        """)
+        _, failures = check_docs.check(docs)
+        assert len(failures) == 2
+        assert all("README.md:2" in f for f in failures)
+        assert any("`src/repro/gone.py`" in f for f in failures)
+        assert any("`repro.gone.module`" in f for f in failures)
+
+    def test_non_pathish_tokens_are_ignored(self, tree):
+        docs = _doc(tree, """\
+            Flags like `--quick`, versions like `1.2.3`, and code like
+            `foo(bar)` or `make` are not checkable references.
+        """)
+        checked, failures = check_docs.check(docs)
+        assert (checked, failures) == (0, [])
+
+    def test_missing_document_is_a_failure(self, tree):
+        _, failures = check_docs.check(["NOPE.md"])
+        assert failures == ["NOPE.md: document missing"]
+
+
+class TestSnippetCheck:
+    def test_good_shell_block_passes(self, tree):
+        docs = _doc(tree, """\
+            ```bash
+            PYTHONPATH=src python tools/runner.py --quick
+            make test lint
+            ```
+        """)
+        checked, failures = check_docs.check_snippets(docs)
+        assert failures == []
+        assert checked == 2
+
+    def test_unknown_make_target_is_reported(self, tree):
+        docs = _doc(tree, """\
+            ```sh
+            make bogus
+            ```
+        """)
+        _, failures = check_docs.check_snippets(docs)
+        assert len(failures) == 1
+        assert "make target `bogus`" in failures[0]
+
+    def test_missing_script_is_reported(self, tree):
+        docs = _doc(tree, """\
+            ```bash
+            python tools/gone.py
+            ```
+        """)
+        _, failures = check_docs.check_snippets(docs)
+        assert len(failures) == 1
+        assert "`tools/gone.py` does not exist" in failures[0]
+
+    def test_unparseable_line_is_reported(self, tree):
+        docs = _doc(tree, """\
+            ```bash
+            echo "unterminated
+            ```
+        """)
+        _, failures = check_docs.check_snippets(docs)
+        assert len(failures) == 1
+        assert "does not parse" in failures[0]
+
+    def test_non_shell_fences_are_skipped(self, tree):
+        docs = _doc(tree, """\
+            ```python
+            make bogus  # not a shell block
+            ```
+            ```
+            make bogus
+            ```
+        """)
+        checked, failures = check_docs.check_snippets(docs)
+        assert (checked, failures) == (0, [])
+
+    def test_console_output_lines_are_not_commands(self, tree):
+        docs = _doc(tree, """\
+            ```console
+            $ make test
+            ...ran 409 tests...
+            ```
+        """)
+        checked, failures = check_docs.check_snippets(docs)
+        assert failures == []
+        assert checked == 1
+
+    def test_backslash_continuation_joins_lines(self, tree):
+        docs = _doc(tree, """\
+            ```bash
+            python tools/runner.py \\
+                --quick --only sim
+            ```
+        """)
+        checked, failures = check_docs.check_snippets(docs)
+        assert failures == []
+        assert checked == 1
+
+    def test_compound_command_segments_all_checked(self, tree):
+        docs = _doc(tree, """\
+            ```bash
+            make test && make bogus
+            ```
+        """)
+        _, failures = check_docs.check_snippets(docs)
+        assert len(failures) == 1
+        assert "make target `bogus`" in failures[0]
+
+
+class TestMakefileTargets:
+    def test_targets_parsed_variables_and_phony_excluded(self, tree):
+        targets = check_docs._makefile_targets()
+        assert targets == {"test", "lint"}
+
+    def test_missing_makefile_yields_empty_set(self, tree):
+        (tree / "Makefile").unlink()
+        assert check_docs._makefile_targets() == set()
+
+
+def test_real_docs_pass():
+    """The repo's actual docs must satisfy their own checker."""
+    checked, failures = check_docs.check()
+    snip_checked, snip_failures = check_docs.check_snippets()
+    assert failures + snip_failures == []
+    assert checked > 0 and snip_checked > 0

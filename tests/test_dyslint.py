@@ -1,0 +1,452 @@
+"""Tests for tools/lint — the dyslint framework and its four passes.
+
+Each pass gets at least one positive, one suppressed, and one clean
+fixture snippet, exercised in-process through the same Module/pass API
+the runner uses.  The suite also pins the two ends of the contract:
+the ``contracts.CAPABILITY_FLAGS`` table must match the live
+``RedistributionPolicy`` class attributes, and the deliberately
+misdeclared policy in ``tests/lint_fixtures/`` must make the runner
+exit non-zero while the real tree exits zero.
+"""
+
+import os
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)
+
+from tools.lint import (  # noqa: E402
+    Module,
+    dump_baseline,
+    load_baseline,
+    split_baselined,
+    split_suppressed,
+    suppressions,
+)
+from tools.lint.passes import (  # noqa: E402
+    ALL_PASSES,
+    all_codes,
+    capability,
+    determinism,
+    float_order,
+    jax_hazard,
+)
+from tools.lint import runner  # noqa: E402
+
+CONTRACTS = runner.load_contracts()
+
+SIM_PATH = "src/repro/sim/fixture.py"           # determinism scope
+PINNED_PATH = "src/repro/sim/engine.py"         # float-order scope
+
+
+def _lint(pass_mod, source, path="src/repro/core/fixture.py"):
+    """Run one pass over a snippet; returns (active, suppressed)."""
+    module = Module.from_source(path, textwrap.dedent(source))
+    assert pass_mod.applies(path, CONTRACTS)
+    findings = pass_mod.run(module, CONTRACTS)
+    return split_suppressed(findings, module.lines)
+
+
+def _codes(findings):
+    return sorted(f.code for f in findings)
+
+
+# --------------------------------------------------------------------- #
+# Framework
+# --------------------------------------------------------------------- #
+
+class TestFramework:
+    def test_trailing_suppression_hits_its_own_line(self):
+        supp = suppressions(["x = 1  # dyslint: disable=DY101 -- why"])
+        assert supp == {1: {"DY101"}}
+
+    def test_comment_only_suppression_hits_next_line(self):
+        supp = suppressions([
+            "    # dyslint: disable=DY202, DY402 -- reason",
+            "    self._rr += 1",
+        ])
+        assert supp == {2: {"DY202", "DY402"}}
+
+    def test_unrelated_comments_do_not_suppress(self):
+        assert suppressions(["# TODO dyslint someday", "x = 1"]) == {}
+
+    def test_pass_codes_are_disjoint_and_prefixed(self):
+        seen = {}
+        for p in ALL_PASSES:
+            for code in p.CODES:
+                assert code.startswith("DY"), code
+                assert code not in seen, f"{code} claimed twice"
+                seen[code] = p.NAME
+        assert set(all_codes()) == set(seen)
+
+    def test_baseline_roundtrip_and_staleness(self, tmp_path):
+        src = "import random\nr = random.random()\n"
+        active, _ = _lint(determinism, src, SIM_PATH)
+        assert _codes(active) == ["DY103"]
+        lines = {SIM_PATH: src.splitlines()}
+        bl_file = tmp_path / "baseline.json"
+        bl_file.write_text(dump_baseline(active, lines))
+        baseline = load_baseline(str(bl_file))
+        new, old, stale = split_baselined(active, baseline, lines)
+        assert (new, len(old), stale) == ([], 1, 0)
+        # Remove the offending line: the entry goes stale, not silent.
+        new, old, stale = split_baselined([], baseline, lines)
+        assert (new, old, stale) == ([], [], 1)
+
+
+# --------------------------------------------------------------------- #
+# DY1xx determinism
+# --------------------------------------------------------------------- #
+
+class TestDeterminismPass:
+    def test_scope_is_sim_path_only(self):
+        assert determinism.applies(SIM_PATH, CONTRACTS)
+        assert not determinism.applies("tools/check_bench.py", CONTRACTS)
+        assert not determinism.applies("src/repro/models/net.py", CONTRACTS)
+
+    def test_global_sampler_and_argless_rng(self):
+        active, _ = _lint(determinism, """\
+            import numpy as np
+            a = np.random.choice(4)
+            g = np.random.default_rng()
+        """, SIM_PATH)
+        assert _codes(active) == ["DY101", "DY102"]
+
+    def test_default_factory_pattern_is_caught(self):
+        # The exact bug dogfooding found in PolicyContext: the bare
+        # function object handed to default_factory is an argless
+        # generator at every dataclass construction.
+        active, _ = _lint(determinism, """\
+            import dataclasses
+            import numpy as np
+
+            @dataclasses.dataclass
+            class Ctx:
+                rng: np.random.Generator = dataclasses.field(
+                    default_factory=np.random.default_rng
+                )
+        """, SIM_PATH)
+        assert _codes(active) == ["DY102"]
+
+    def test_stdlib_random_wall_clock_environ(self):
+        active, _ = _lint(determinism, """\
+            import os
+            import random
+            import time
+            r = random.random()
+            t = time.time()
+            for k in os.environ:
+                print(k)
+        """, SIM_PATH)
+        assert _codes(active) == ["DY103", "DY104", "DY105"]
+
+    def test_seeded_rng_is_clean(self):
+        active, _ = _lint(determinism, """\
+            import numpy as np
+            g = np.random.default_rng(0)
+            h = np.random.default_rng(seed=123)
+            x = g.normal(size=4)
+        """, SIM_PATH)
+        assert active == []
+
+    def test_suppression_silences_the_finding(self):
+        active, silenced = _lint(determinism, """\
+            import time
+            t0 = time.perf_counter()  # dyslint: disable=DY104 -- log only
+        """, SIM_PATH)
+        assert active == []
+        assert _codes(silenced) == ["DY104"]
+
+
+# --------------------------------------------------------------------- #
+# DY2xx capability contract
+# --------------------------------------------------------------------- #
+
+_POLICY_HEADER = (
+    "import numpy as np\n"
+    "from repro.core.policy import RedistributionPolicy, "
+    "register_policy\n\n"
+)
+
+
+def _lint_policy(body):
+    """Capability-pass helper: dedent the class snippet FIRST, then
+    prepend the (already flush-left) import header."""
+    return _lint(capability, _POLICY_HEADER + textwrap.dedent(body))
+
+
+class TestCapabilityPass:
+    def test_flags_table_matches_live_base_class(self):
+        from repro.core.policy import RedistributionPolicy
+
+        live = {
+            k: getattr(RedistributionPolicy, k)
+            for k in CONTRACTS.CAPABILITY_FLAGS
+        }
+        assert live == CONTRACTS.CAPABILITY_FLAGS
+
+    def test_undeclared_rng_use(self):
+        active, _ = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                def propose(self, producer, k, backlog, unit):
+                    return self.ctx.rng.integers(0, k)
+        """)
+        assert _codes(active) == ["DY201"]
+
+    def test_declared_but_unused_stochastic(self):
+        active, _ = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                stochastic = True
+                def propose(self, producer, k, backlog, unit):
+                    return None
+        """)
+        assert _codes(active) == ["DY205"]
+
+    def test_mutation_outside_route_propose(self):
+        active, _ = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                def place_one(self, backlog):
+                    self.count += 1
+                    return 0
+        """)
+        assert _codes(active) == ["DY202"]
+
+    def test_private_helper_called_from_propose_is_allowed(self):
+        active, _ = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                def propose(self, producer, k, backlog, unit):
+                    self._observe(backlog)
+                    return None
+                def _observe(self, backlog):
+                    self.seen = backlog.copy()
+        """)
+        assert active == []
+
+    def test_link_mask_requires_uses_link(self):
+        active, _ = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                def propose(self, producer, k, backlog, unit):
+                    if self.link_mask is None:
+                        return None
+                    return None
+        """)
+        assert _codes(active) == ["DY203"]
+
+    def test_never_redistributes_must_stay_on_producer(self):
+        active, _ = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                never_redistributes = True
+                def propose(self, producer, k, backlog, unit):
+                    counts = np.zeros(len(backlog), np.int64)
+                    counts[int(np.argmin(backlog))] = k
+                    return counts
+        """)
+        assert _codes(active) == ["DY204"]
+
+    def test_honest_policy_is_clean(self):
+        active, _ = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                stochastic = True
+                def propose(self, producer, k, backlog, unit):
+                    counts = np.zeros(len(backlog), np.int64)
+                    j = int(self.ctx.rng.integers(0, len(backlog)))
+                    counts[j] = k
+                    return counts
+        """)
+        assert active == []
+
+    def test_unregistered_class_is_ignored(self):
+        active, _ = _lint(capability, """\
+            class NotAPolicy:
+                def place_one(self, backlog):
+                    self.count += 1
+        """)
+        assert active == []
+
+    def test_suppression_silences_the_finding(self):
+        active, silenced = _lint_policy("""\
+            @register_policy
+            class P(RedistributionPolicy):
+                name = "p"
+                def place_one(self, backlog):
+                    # dyslint: disable=DY202 -- serving seam, sim never calls it
+                    self.count += 1
+                    return 0
+        """)
+        assert active == []
+        assert _codes(silenced) == ["DY202"]
+
+    def test_misdeclared_fixture_fails_the_runner(self, capsys):
+        rc = runner.main([
+            "tests/lint_fixtures/misdeclared_policy.py", "--no-baseline",
+        ])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "DY202" in out and "SneakyStatefulPolicy" in out
+
+
+# --------------------------------------------------------------------- #
+# DY3xx jax hazards
+# --------------------------------------------------------------------- #
+
+class TestJaxHazardPass:
+    def test_branch_and_host_sync_in_jitted_fn(self):
+        active, _ = _lint(jax_hazard, """\
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def step(x):
+                if x > 0:
+                    x = x + 1
+                return float(x.sum())
+        """)
+        assert _codes(active) == ["DY301", "DY303"]
+
+    def test_jit_call_site_and_transform_args_are_reachable(self):
+        active, _ = _lint(jax_hazard, """\
+            import jax
+
+            def inner(x):
+                return x.item()
+
+            run = jax.vmap(inner)
+        """)
+        assert _codes(active) == ["DY301"]
+
+    def test_per_call_jit_is_a_retrace_hazard(self):
+        active, _ = _lint(jax_hazard, """\
+            import jax
+
+            def caller(f, x):
+                return jax.jit(f)(x)
+        """)
+        assert _codes(active) == ["DY304"]
+
+    def test_shape_branches_and_static_args_are_clean(self):
+        active, _ = _lint(jax_hazard, """\
+            import functools
+            import jax
+            import jax.numpy as jnp
+
+            @functools.partial(jax.jit, static_argnames=("cfg",))
+            def step(x, cfg):
+                if x.ndim > 1:
+                    x = x.sum(axis=0)
+                if cfg.use_bias:
+                    x = x + 1.0
+                return jnp.tanh(x)
+        """)
+        assert active == []
+
+    def test_unjitted_host_code_is_clean(self):
+        active, _ = _lint(jax_hazard, """\
+            import numpy as np
+
+            def summarize(x):
+                if x > 0:
+                    return float(x)
+                return np.asarray(x)
+        """)
+        assert active == []
+
+    def test_suppression_silences_the_finding(self):
+        active, silenced = _lint(jax_hazard, """\
+            import jax
+
+            @jax.jit
+            def step(x):
+                return x.item()  # dyslint: disable=DY301 -- debug-only path
+        """)
+        assert active == []
+        assert _codes(silenced) == ["DY301"]
+
+
+# --------------------------------------------------------------------- #
+# DY4xx float order
+# --------------------------------------------------------------------- #
+
+class TestFloatOrderPass:
+    def test_scope_is_pinned_modules_only(self):
+        assert float_order.applies(PINNED_PATH, CONTRACTS)
+        assert not float_order.applies(SIM_PATH, CONTRACTS)
+
+    def test_sum_over_set_and_dict_accumulation(self):
+        active, _ = _lint(float_order, """\
+            def tally(rates, by_class):
+                total = sum({r * 2 for r in rates})
+                acc = 0.0
+                for v in by_class.values():
+                    acc += v
+                return total + acc
+        """, PINNED_PATH)
+        assert _codes(active) == ["DY401", "DY402"]
+
+    def test_sorted_iteration_is_clean(self):
+        active, _ = _lint(float_order, """\
+            def tally(rates, by_class):
+                total = sum(sorted({r * 2 for r in rates}))
+                acc = 0.0
+                for k in sorted(by_class):
+                    acc += by_class[k]
+                return total + acc
+        """, PINNED_PATH)
+        assert active == []
+
+    def test_non_accumulating_dict_loop_is_clean(self):
+        active, _ = _lint(float_order, """\
+            def flags(by_class):
+                out = {}
+                for k, v in by_class.items():
+                    out[k] = v > 0
+                return out
+        """, PINNED_PATH)
+        assert active == []
+
+    def test_suppression_silences_the_finding(self):
+        active, silenced = _lint(float_order, """\
+            def count(pending):
+                n = 0
+                # dyslint: disable=DY402 -- integer counter, order-free
+                for v in pending.values():
+                    n += len(v)
+                return n
+        """, PINNED_PATH)
+        assert active == []
+        assert _codes(silenced) == ["DY402"]
+
+
+# --------------------------------------------------------------------- #
+# The real tree
+# --------------------------------------------------------------------- #
+
+class TestRealTree:
+    def test_default_scope_is_green(self, capsys):
+        """`make lint` semantics: the shipped tree has zero active
+        findings (inline suppressions and baseline included)."""
+        rc = runner.main([])
+        out = capsys.readouterr().out
+        assert rc == 0, out
+        assert "0 finding(s)" in out
+
+    def test_contracts_load_without_repro_import(self):
+        mod = runner.load_contracts()
+        assert "repro" not in sys.modules or mod.__name__ not in (
+            "repro.core.contracts",
+        )
+        assert mod.CAPABILITY_FLAGS["drain_safe"] is True

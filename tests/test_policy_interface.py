@@ -326,3 +326,32 @@ class TestManyRegimeBatchedDeterminism:
         l1, _ = self._run("hillclimb", 7)
         l2, _ = self._run("hillclimb", 8)
         assert np.array_equal(l1, l2)
+
+
+class TestPolicyContextDefaults:
+    """Regression for the dyslint DY102 finding: PolicyContext's rng
+    default used to be an argless ``default_rng()``, so every context
+    built without an explicit stream (serving placement, ad-hoc policy
+    probes) drew from fresh OS entropy and was irreproducible."""
+
+    def test_default_rng_stream_is_deterministic(self):
+        a = PolicyContext(num_workers=4)
+        b = PolicyContext(num_workers=4)
+        assert np.array_equal(a.rng.random(16), b.rng.random(16))
+
+    def test_default_rng_streams_are_independent_objects(self):
+        # Same seed, but distinct generators: advancing one context's
+        # stream must not perturb another's.
+        a = PolicyContext(num_workers=4)
+        b = PolicyContext(num_workers=4)
+        a.rng.random(8)
+        assert a.rng is not b.rng
+        assert np.array_equal(
+            b.rng.random(4), PolicyContext(num_workers=4).rng.random(4)
+        )
+
+    def test_explicit_stream_still_wins(self):
+        rng = np.random.default_rng(123)
+        want = np.random.default_rng(123).random(4)
+        ctx = PolicyContext(num_workers=4, rng=rng)
+        assert np.array_equal(ctx.rng.random(4), want)

@@ -1,0 +1,202 @@
+"""Schema validator for the numbered ``BENCH_<n>.json`` trajectory.
+
+``benchmarks/run.py`` appends one record per full bench run; downstream
+tooling (perf dashboards, regression triage) assumes every record obeys
+the schema that writer has produced since PR 3.  This checker makes the
+assumption enforceable: each file must carry the required top-level
+keys, every non-skipped bench must report its wall time, every ``ok``
+bench's rows must be well-formed, and the file numbers must be
+contiguous with non-decreasing creation times (a renamed or
+hand-deleted record shows up as a hole).  Wired into ``make
+check-bench`` and the CI lint job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import re
+import sys
+from typing import Any, Dict, List, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCHEMA_VERSION = 1
+TOP_KEYS = ("schema", "created_unix", "quick", "only", "benches",
+            "total_wall_s")
+BENCH_STATUSES = ("ok", "failed", "skipped")
+ROW_KEYS = ("name", "us_per_call", "derived")
+
+_NAME = re.compile(r"^BENCH_(\d+)\.json$")
+
+
+def _is_number(v: Any) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _check_row(row: Any, where: str, errs: List[str]) -> None:
+    if not isinstance(row, dict):
+        errs.append(f"{where}: row is {type(row).__name__}, not object")
+        return
+    for k in ROW_KEYS:
+        if k not in row:
+            errs.append(f"{where}: row missing key {k!r}")
+    if "name" in row and not (isinstance(row["name"], str) and row["name"]):
+        errs.append(f"{where}: row name must be a non-empty string")
+    # NaN is nulled by the writer, so None is legal alongside numbers.
+    if "us_per_call" in row:
+        v = row["us_per_call"]
+        if v is not None and not _is_number(v):
+            errs.append(f"{where}: us_per_call must be number or null, "
+                        f"got {type(v).__name__}")
+        elif _is_number(v) and (not math.isfinite(v) or v < 0):
+            errs.append(f"{where}: us_per_call must be finite and >= 0, "
+                        f"got {v!r}")
+    if "derived" in row and not isinstance(row["derived"], dict):
+        errs.append(f"{where}: derived must be an object, got "
+                    f"{type(row['derived']).__name__}")
+
+
+def _check_bench(bench: Any, where: str, errs: List[str]) -> float:
+    """Validate one bench entry; returns its wall_s contribution."""
+    if not isinstance(bench, dict):
+        errs.append(f"{where}: bench is {type(bench).__name__}, not object")
+        return 0.0
+    suite = bench.get("suite")
+    if not (isinstance(suite, str) and suite):
+        errs.append(f"{where}: suite must be a non-empty string")
+    status = bench.get("status")
+    if status not in BENCH_STATUSES:
+        errs.append(f"{where}: status {status!r} not in "
+                    f"{'/'.join(BENCH_STATUSES)}")
+        return 0.0
+    if status == "skipped":
+        return 0.0
+    # Every bench that actually ran — ok or failed — bills wall time.
+    wall = bench.get("wall_s")
+    if not _is_number(wall) or not math.isfinite(wall) or wall < 0:
+        errs.append(f"{where}: ran (status={status}) but wall_s is "
+                    f"{wall!r}, want finite number >= 0")
+        wall = 0.0
+    if status == "ok":
+        rows = bench.get("rows")
+        if not isinstance(rows, list):
+            errs.append(f"{where}: status=ok but rows is "
+                        f"{type(rows).__name__}, not list")
+        else:
+            for i, row in enumerate(rows):
+                _check_row(row, f"{where}.rows[{i}]", errs)
+    return float(wall)
+
+
+def validate_record(data: Any, name: str) -> List[str]:
+    """All schema problems in one loaded BENCH record."""
+    errs: List[str] = []
+    if not isinstance(data, dict):
+        return [f"{name}: top level is {type(data).__name__}, not object"]
+    for k in TOP_KEYS:
+        if k not in data:
+            errs.append(f"{name}: missing top-level key {k!r}")
+    if data.get("schema") != SCHEMA_VERSION:
+        errs.append(f"{name}: schema is {data.get('schema')!r}, "
+                    f"want {SCHEMA_VERSION}")
+    if "created_unix" in data and (
+        not _is_number(data["created_unix"]) or data["created_unix"] <= 0
+    ):
+        errs.append(f"{name}: created_unix must be a positive number")
+    if "quick" in data and not isinstance(data["quick"], bool):
+        errs.append(f"{name}: quick must be a bool")
+    if "only" in data and not isinstance(data["only"], str):
+        errs.append(f"{name}: only must be a string")
+    benches = data.get("benches")
+    wall_sum = 0.0
+    if benches is not None:
+        if not isinstance(benches, list) or not benches:
+            errs.append(f"{name}: benches must be a non-empty list")
+        else:
+            for i, b in enumerate(benches):
+                wall_sum += _check_bench(b, f"{name}.benches[{i}]", errs)
+    total = data.get("total_wall_s")
+    if total is not None:
+        if not _is_number(total) or not math.isfinite(total) or total < 0:
+            errs.append(f"{name}: total_wall_s must be finite and >= 0")
+        elif benches and not math.isclose(
+            total, wall_sum, rel_tol=1e-6, abs_tol=1e-6
+        ):
+            errs.append(f"{name}: total_wall_s {total!r} != sum of bench "
+                        f"wall_s {wall_sum!r}")
+    return errs
+
+
+def check_files(root: str = ROOT) -> Tuple[List[str], List[str]]:
+    """Validate every BENCH_*.json under ``root``.
+
+    Returns (checked file names, problems).  Numbering must be
+    contiguous from the smallest surviving number, and creation times
+    must not run backwards — either break means a record was renamed,
+    dropped, or back-filled by hand.
+    """
+    numbered: Dict[int, str] = {}
+    errs: List[str] = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        base = os.path.basename(path)
+        m = _NAME.match(base)
+        if not m:
+            errs.append(f"{base}: name does not match BENCH_<n>.json")
+            continue
+        numbered[int(m.group(1))] = path
+    created: Dict[int, float] = {}
+    for n in sorted(numbered):
+        base = os.path.basename(numbered[n])
+        try:
+            with open(numbered[n], encoding="utf-8") as fh:
+                data = json.load(fh)
+        except (OSError, ValueError) as e:
+            errs.append(f"{base}: unreadable ({e})")
+            continue
+        errs.extend(validate_record(data, base))
+        if _is_number(data.get("created_unix") if isinstance(data, dict)
+                      else None):
+            created[n] = float(data["created_unix"])
+    if numbered:
+        nums = sorted(numbered)
+        want = list(range(nums[0], nums[0] + len(nums)))
+        if nums != want:
+            missing = sorted(set(want) - set(nums))
+            errs.append(
+                f"BENCH numbering has holes: have {nums}, missing "
+                f"{['BENCH_%d.json' % n for n in missing]}"
+            )
+        ordered = sorted(created)
+        for a, b in zip(ordered, ordered[1:]):
+            if created[b] < created[a]:
+                errs.append(
+                    f"BENCH_{b}.json created_unix ({created[b]}) predates "
+                    f"BENCH_{a}.json ({created[a]}): records out of order"
+                )
+    checked = [os.path.basename(numbered[n]) for n in sorted(numbered)]
+    return checked, errs
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=ROOT,
+                    help="directory holding the BENCH_*.json records")
+    args = ap.parse_args(argv)
+    checked, errs = check_files(args.root)
+    if errs:
+        print(f"bench check FAILED ({len(errs)} problems across "
+              f"{len(checked)} record(s)):")
+        for e in errs:
+            print(f"  {e}")
+        return 1
+    print(f"bench check OK ({len(checked)} record(s): "
+          f"{', '.join(checked) or 'none'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

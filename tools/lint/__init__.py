@@ -1,0 +1,171 @@
+"""dyslint: the repo's AST-based invariant linter.
+
+Four passes statically enforce the contracts the bit-identity pins
+depend on (see ``src/repro/core/contracts.py`` for the contracts as
+data, and ``docs/ARCHITECTURE.md`` for the rationale):
+
+  * ``passes/determinism.py`` (DY1xx) — no global-state RNG, wall
+    clocks, or environment-order iteration in sim-path code;
+  * ``passes/capability.py``  (DY2xx) — a registered policy's declared
+    capability flags must match what its method bodies actually do;
+  * ``passes/jax_hazard.py``  (DY3xx) — no host syncs, traced-value
+    Python branches, or retrace hazards in jit-reachable functions;
+  * ``passes/float_order.py`` (DY4xx) — no order-sensitive reductions
+    over unordered containers in bit-identity-pinned modules.
+
+This package holds the framework: findings, per-line
+``# dyslint: disable=CODE`` suppressions, and the checked-in baseline
+of grandfathered findings (``tools/lint/baseline.json``).  The CLI
+lives in ``tools/lint/runner.py`` (``make lint``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation, anchored to a source line."""
+
+    code: str            # e.g. "DY202"
+    path: str            # repo-relative, posix separators
+    line: int            # 1-based
+    col: int             # 0-based
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+@dataclasses.dataclass
+class Module:
+    """A parsed source file handed to each pass."""
+
+    path: str            # repo-relative, posix separators
+    text: str
+    tree: ast.Module
+    lines: List[str] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def from_source(cls, path: str, text: str) -> "Module":
+        return cls(
+            path=path, text=text, tree=ast.parse(text),
+            lines=text.splitlines(),
+        )
+
+
+# --------------------------------------------------------------------- #
+# Inline suppressions
+# --------------------------------------------------------------------- #
+
+#: ``# dyslint: disable=DY101`` or ``disable=DY101,DY104 -- reason``.
+#: A trailing comment suppresses findings anchored on its own line; a
+#: comment-ONLY line suppresses the next line (for statements too long
+#: to carry the justification inline).
+_SUPPRESS = re.compile(
+    r"#\s*dyslint:\s*disable=([A-Za-z0-9_,\s]+?)\s*(?:--.*)?$"
+)
+
+
+def suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """Map 1-based line number -> set of codes suppressed there."""
+    out: Dict[int, Set[str]] = {}
+    for ln, line in enumerate(lines, 1):
+        m = _SUPPRESS.search(line)
+        if not m:
+            continue
+        codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+        if not codes:
+            continue
+        target = ln + 1 if line.lstrip().startswith("#") else ln
+        out.setdefault(target, set()).update(codes)
+    return out
+
+
+def split_suppressed(
+    findings: Iterable[Finding], lines: Sequence[str]
+) -> Tuple[List[Finding], List[Finding]]:
+    """Partition into (active, suppressed) using the file's inline
+    ``# dyslint: disable=`` comments."""
+    supp = suppressions(lines)
+    active: List[Finding] = []
+    silenced: List[Finding] = []
+    for f in findings:
+        if f.code in supp.get(f.line, ()):
+            silenced.append(f)
+        else:
+            active.append(f)
+    return active, silenced
+
+
+# --------------------------------------------------------------------- #
+# Baseline (grandfathered findings)
+# --------------------------------------------------------------------- #
+
+BASELINE_VERSION = 1
+
+
+def _baseline_key(f: Finding, lines: Sequence[str]) -> Tuple[str, str, str]:
+    """Baseline identity: (code, path, stripped source line).  Keying on
+    line CONTENT instead of line NUMBER keeps the baseline stable when
+    unrelated edits shift a file."""
+    text = ""
+    if 1 <= f.line <= len(lines):
+        text = lines[f.line - 1].strip()
+    return (f.code, f.path, text)
+
+
+def load_baseline(path: str) -> Dict[Tuple[str, str, str], int]:
+    """Baseline file -> multiset of grandfathered finding keys."""
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"{path}: unsupported baseline version {data.get('version')!r}"
+        )
+    out: Dict[Tuple[str, str, str], int] = {}
+    for e in data.get("findings", []):
+        key = (e["code"], e["path"], e.get("line_text", ""))
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
+def dump_baseline(
+    findings: Sequence[Finding], lines_by_path: Dict[str, Sequence[str]]
+) -> str:
+    """Serialize ``findings`` as a fresh baseline document."""
+    entries = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.code)):
+        code, path, text = _baseline_key(f, lines_by_path.get(f.path, []))
+        entries.append({"code": code, "path": path, "line_text": text})
+    return json.dumps(
+        {"version": BASELINE_VERSION, "findings": entries},
+        indent=2, sort_keys=True,
+    ) + "\n"
+
+
+def split_baselined(
+    findings: Iterable[Finding],
+    baseline: Dict[Tuple[str, str, str], int],
+    lines_by_path: Dict[str, Sequence[str]],
+) -> Tuple[List[Finding], List[Finding], int]:
+    """Partition into (new, grandfathered); also returns the number of
+    STALE baseline entries (grandfathered findings that no longer occur
+    — a prompt to re-run ``--update-baseline`` and shrink the file)."""
+    budget = dict(baseline)
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        key = _baseline_key(f, lines_by_path.get(f.path, []))
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    stale = sum(v for v in budget.values() if v > 0)
+    return new, old, stale

@@ -1,0 +1,119 @@
+"""Shared AST helpers for the dyslint passes.
+
+The central primitive is import-alias resolution: a pass never matches
+on the literal text ``np.random.choice`` — it resolves the root name
+through the module's imports, so ``import numpy as xp`` followed by
+``xp.random.choice(...)`` is caught and a local variable that happens
+to be called ``np`` is not.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional
+
+
+class ImportMap:
+    """Maps local names to the dotted import path they are bound to.
+
+    ``import numpy as np``          -> np: numpy
+    ``import numpy.random as npr``  -> npr: numpy.random
+    ``from numpy import random``    -> random: numpy.random
+    ``from time import perf_counter as pc`` -> pc: time.perf_counter
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.names: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.names[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom):
+                if node.level or not node.module:
+                    continue  # relative imports stay unresolved
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.names[a.asname or a.name] = (
+                        f"{node.module}.{a.name}"
+                    )
+
+    def is_module_alias(self, name: str) -> bool:
+        return name in self.names
+
+
+def dotted(node: ast.AST, imports: ImportMap) -> Optional[str]:
+    """Resolve a Name/Attribute chain to a dotted path rooted at an
+    import, e.g. ``np.random.choice`` -> ``numpy.random.choice``.
+    Returns None when the root is not an imported name (a local
+    variable, a call result, ...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = imports.names.get(node.id)
+    if root is None:
+        return None
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def call_name(node: ast.Call, imports: ImportMap) -> Optional[str]:
+    """``dotted`` of a call's callee (None for non-import callees)."""
+    return dotted(node.func, imports)
+
+
+def is_set_expr(node: ast.AST, imports: ImportMap) -> bool:
+    """Syntactically-recognizable unordered container: a set literal, a
+    set comprehension, or a ``set(...)``/``frozenset(...)`` call
+    (builtin, not shadowed by an import)."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return (
+            node.func.id in ("set", "frozenset")
+            and not imports.is_module_alias(node.func.id)
+        )
+    return False
+
+
+def walk_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    """Every (sync) function definition in the tree, nested included."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            yield node
+
+
+def self_attribute(node: ast.AST) -> Optional[str]:
+    """``self.x`` -> "x"; anything else -> None."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def assign_targets(stmt: ast.stmt) -> list:
+    """Flattened assignment target expressions of an Assign/AugAssign/
+    AnnAssign statement (tuple targets unpacked)."""
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    else:
+        return []
+    flat = []
+    stack = targets
+    while stack:
+        t = stack.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            stack.extend(t.elts)
+        else:
+            flat.append(t)
+    return flat

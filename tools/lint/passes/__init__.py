@@ -1,0 +1,25 @@
+"""The dyslint passes.  Each pass module exports:
+
+  * ``NAME``   — short pass name for ``--list-codes`` output;
+  * ``CODES``  — {code: one-line description};
+  * ``applies(relpath, contracts) -> bool`` — scope predicate;
+  * ``run(module, contracts) -> list[Finding]``.
+"""
+
+from __future__ import annotations
+
+from tools.lint.passes import (  # noqa: F401
+    capability,
+    determinism,
+    float_order,
+    jax_hazard,
+)
+
+ALL_PASSES = (determinism, capability, jax_hazard, float_order)
+
+
+def all_codes() -> dict:
+    out = {}
+    for p in ALL_PASSES:
+        out.update(p.CODES)
+    return out

@@ -1,0 +1,337 @@
+"""DY2xx — capability contract: a registered policy's declared flags
+must match what its method bodies actually do.
+
+The engine's fast paths (closed-form drain, closed-form 'none', batched
+planning) dispatch on ``RedistributionPolicy`` capability FLAGS, not on
+code — a plugin that declares ``drain_safe=True`` while mutating state
+outside ``route``/``propose`` silently corrupts the rtol-1e-9
+equivalence pin the first time the drain licenses an early heap exit.
+This pass cross-checks every ``@register_policy`` class AST against its
+declared flags (defaults from ``contracts.CAPABILITY_FLAGS``).
+
+  DY201  ``ctx.rng`` consulted without ``stochastic=True``
+  DY202  ``self.*`` mutated outside ``route``/``propose`` (or private
+         helpers reachable only from them) while ``drain_safe=True``
+  DY203  ``link_mask`` read (or ``set_link_mask`` overridden) without
+         ``uses_link=True``
+  DY204  ``never_redistributes=True`` but ``route``/``propose``/
+         ``assign`` is not provably producer-preserving
+  DY205  ``stochastic=True`` declared but ``ctx.rng`` never consulted
+
+Limits (by design — this is a single-file AST pass): flags inherited
+from intermediate base classes other than ``RedistributionPolicy`` are
+not followed, and mutation through aliasing (``s = self; s.x = 1``) is
+not tracked.  Suppress with a one-line reason where the analysis is
+too conservative.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from tools.lint import Finding, Module
+from tools.lint.astutil import (
+    ImportMap,
+    assign_targets,
+    self_attribute,
+)
+
+NAME = "capability"
+
+CODES = {
+    "DY201": "ctx.rng use requires stochastic=True",
+    "DY202": "self mutation outside route/propose with drain_safe=True",
+    "DY203": "link_mask read requires uses_link=True",
+    "DY204": "never_redistributes=True not provably producer-preserving",
+    "DY205": "stochastic=True declared but ctx.rng never consulted",
+}
+
+#: Method calls that mutate their receiver.
+_MUTATING_METHODS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "clear", "add",
+    "discard", "update", "setdefault", "popitem", "sort", "reverse",
+})
+
+
+def applies(relpath: str, contracts) -> bool:
+    return relpath.endswith(".py")
+
+
+def _is_policy_class(cls: ast.ClassDef, contracts) -> bool:
+    for dec in cls.decorator_list:
+        node = dec.func if isinstance(dec, ast.Call) else dec
+        name = node.attr if isinstance(node, ast.Attribute) else (
+            node.id if isinstance(node, ast.Name) else None
+        )
+        if name == contracts.POLICY_DECORATOR:
+            return True
+    return False
+
+
+def _declared_flags(cls: ast.ClassDef, contracts) -> Dict[str, bool]:
+    flags = dict(contracts.CAPABILITY_FLAGS)
+    for stmt in cls.body:
+        for t in assign_targets(stmt):
+            if isinstance(t, ast.Name) and t.id in flags:
+                value = getattr(stmt, "value", None)
+                if isinstance(value, ast.Constant) and isinstance(
+                    value.value, bool
+                ):
+                    flags[t.id] = value.value
+    return flags
+
+
+def _is_ctx_rng(node: ast.AST, contracts) -> bool:
+    """ctx.rng or self.ctx.rng."""
+    if not (
+        isinstance(node, ast.Attribute)
+        and node.attr == contracts.RNG_ATTRIBUTE
+    ):
+        return False
+    base = node.value
+    if isinstance(base, ast.Name) and base.id == "ctx":
+        return True
+    return self_attribute(base) == "ctx"
+
+
+def _mutations(fn: ast.FunctionDef) -> List[ast.AST]:
+    """Nodes in ``fn`` that mutate ``self`` state: assignments to
+    ``self.x`` / ``self.x[...]``, and mutating method calls on
+    ``self.x``."""
+    out: List[ast.AST] = []
+    for node in ast.walk(fn):
+        for t in assign_targets(node) if isinstance(
+            node, (ast.Assign, ast.AugAssign, ast.AnnAssign)
+        ) else ():
+            base = t
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if self_attribute(base) is not None:
+                out.append(t)
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr in _MUTATING_METHODS
+        ):
+            recv = node.func.value
+            while isinstance(recv, ast.Subscript):
+                recv = recv.value
+            if self_attribute(recv) is not None:
+                out.append(node)
+    return out
+
+
+def _self_calls(fn: ast.FunctionDef) -> Set[str]:
+    """Names of ``self.<method>()`` calls made inside ``fn``."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = self_attribute(node.func)
+            if name is not None:
+                out.add(name)
+    return out
+
+
+def _mutation_allowed_methods(
+    methods: Dict[str, ast.FunctionDef], contracts
+) -> Set[str]:
+    """The fixpoint of ``contracts.MUTATION_SAFE_METHODS`` plus private
+    helpers every in-class caller of which is already allowed (a helper
+    called only from ``propose`` mutates only while routing)."""
+    calls = {name: _self_calls(fn) for name, fn in methods.items()}
+    allowed = {m for m in contracts.MUTATION_SAFE_METHODS if m in methods}
+    changed = True
+    while changed:
+        changed = False
+        for name in methods:
+            if name in allowed or not name.startswith("_"):
+                continue
+            if name.startswith("__"):
+                continue
+            callers = {c for c, callees in calls.items() if name in callees}
+            if callers and callers <= allowed:
+                allowed.add(name)
+                changed = True
+    return allowed
+
+
+# ------------------------- never_redistributes ------------------------ #
+
+
+def _returns(fn: ast.FunctionDef) -> List[ast.Return]:
+    return [n for n in ast.walk(fn) if isinstance(n, ast.Return)]
+
+
+def _always_returns_none(fn: ast.FunctionDef) -> bool:
+    for r in _returns(fn):
+        if r.value is not None and not (
+            isinstance(r.value, ast.Constant) and r.value.value is None
+        ):
+            return False
+    return True
+
+
+def _propose_all_on_producer(fn: ast.FunctionDef) -> bool:
+    """True when every return is None or a counts vector whose only
+    written cell is ``counts[producer] = k`` — the one shape of propose
+    the closed-form 'none' path can accept."""
+    args = [a.arg for a in fn.args.args]
+    # propose(self, producer, k, backlog, unit)
+    if len(args) < 3:
+        return False
+    producer, k = args[1], args[2]
+    counts_names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in assign_targets(node):
+                if (
+                    isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Name)
+                ):
+                    idx, val = t.slice, node.value
+                    if (
+                        isinstance(idx, ast.Name) and idx.id == producer
+                        and isinstance(val, ast.Name) and val.id == k
+                    ):
+                        counts_names.add(t.value.id)
+                    else:
+                        return False  # writes some other cell
+        elif isinstance(node, ast.AugAssign):
+            t = node.target
+            base = t
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if isinstance(base, ast.Name) and base.id in counts_names:
+                return False
+    for r in _returns(fn):
+        if r.value is None or (
+            isinstance(r.value, ast.Constant) and r.value.value is None
+        ):
+            continue
+        if not (
+            isinstance(r.value, ast.Name) and r.value.id in counts_names
+        ):
+            return False
+    return True
+
+
+def _assign_producer_preserving(
+    fn: ast.FunctionDef, imports: ImportMap
+) -> bool:
+    """True when every return expression's name leaves are the
+    ``producers`` parameter (plus module aliases for dtype spellings) —
+    ``return producers.copy()`` / ``return np.asarray(producers,
+    np.int64).copy()``."""
+    args = [a.arg for a in fn.args.args]
+    # assign(self, costs, producers, n)
+    if len(args) < 3:
+        return False
+    producers = args[2]
+    for r in _returns(fn):
+        if r.value is None:
+            return False
+        names = {
+            n.id for n in ast.walk(r.value) if isinstance(n, ast.Name)
+        }
+        extra = {
+            n for n in names
+            if n != producers and not imports.is_module_alias(n)
+        }
+        if producers not in names or extra:
+            return False
+    return True
+
+
+def run(module: Module, contracts) -> List[Finding]:
+    imports = ImportMap(module.tree)
+    out: List[Finding] = []
+
+    def add(code: str, node: ast.AST, msg: str) -> None:
+        out.append(Finding(
+            code=code, path=module.path, line=node.lineno,
+            col=node.col_offset, message=msg,
+        ))
+
+    for cls in ast.walk(module.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        if not _is_policy_class(cls, contracts):
+            continue
+        flags = _declared_flags(cls, contracts)
+        methods = {
+            f.name: f for f in cls.body if isinstance(f, ast.FunctionDef)
+        }
+
+        # DY201 / DY205: injected-RNG use vs the stochastic flag.
+        rng_nodes = [
+            n for fn in methods.values() for n in ast.walk(fn)
+            if _is_ctx_rng(n, contracts)
+        ]
+        if rng_nodes and not flags["stochastic"]:
+            for n in rng_nodes:
+                add("DY201", n,
+                    f"{cls.name} consults ctx.rng but declares "
+                    "stochastic=False; the engine's same-seed "
+                    "reproducibility pins assume non-stochastic "
+                    "policies never draw")
+        if flags["stochastic"] and not rng_nodes:
+            add("DY205", cls,
+                f"{cls.name} declares stochastic=True but never "
+                "consults ctx.rng; drop the flag or draw from the "
+                "injected stream")
+
+        # DY203: link-mask reads vs uses_link.
+        if not flags["uses_link"]:
+            mask_nodes = [
+                n for fn in methods.values() for n in ast.walk(fn)
+                if self_attribute(n) == contracts.LINK_MASK_ATTRIBUTE
+            ]
+            if "set_link_mask" in methods:
+                mask_nodes.append(methods["set_link_mask"])
+            for n in mask_nodes:
+                add("DY203", n,
+                    f"{cls.name} touches link_mask but declares "
+                    "uses_link=False; the engine only creates and "
+                    "ticks link instances for uses_link policies, so "
+                    "the mask would be permanently all-False")
+
+        # DY202: self mutation outside the drain-safe methods.
+        if flags["drain_safe"]:
+            allowed = _mutation_allowed_methods(methods, contracts)
+            for name, fn in methods.items():
+                if name in allowed:
+                    continue
+                for node in _mutations(fn):
+                    add("DY202", node,
+                        f"{cls.name}.{name} mutates self state; "
+                        "drain_safe=True promises state changes only "
+                        "inside route/propose — clear drain_safe or "
+                        "move the mutation")
+
+        # DY204: never_redistributes must be provable.
+        if flags["never_redistributes"]:
+            route = methods.get("route")
+            if route is not None and not _always_returns_none(route):
+                add("DY204", route,
+                    f"{cls.name}.route can return a destination vector "
+                    "but never_redistributes=True licenses the "
+                    "closed-form 'none' fast path")
+            propose = methods.get("propose")
+            if propose is not None and not _propose_all_on_producer(
+                propose
+            ):
+                add("DY204", propose,
+                    f"{cls.name}.propose is not provably "
+                    "all-k-on-producer but never_redistributes=True "
+                    "licenses the closed-form 'none' fast path")
+            assign = methods.get("assign")
+            if assign is not None and not _assign_producer_preserving(
+                assign, imports
+            ):
+                add("DY204", assign,
+                    f"{cls.name}.assign does not provably return the "
+                    "producers vector unchanged but "
+                    "never_redistributes=True licenses the closed-form "
+                    "'none' fast path")
+    return out

@@ -1,0 +1,147 @@
+"""DY1xx — determinism: sim-path code must be a pure function of its
+seeds and configuration.
+
+Scope: ``contracts.DETERMINISM_SCOPE`` (src/repro/{sim,core,serving,
+data}).  Virtual time comes from the event heap and randomness from
+seeds threaded through configs; one wall-clock read or global-RNG draw
+silently corrupts the rtol-1e-9 legacy equivalence pin in a way no
+runtime assertion can localize.
+
+  DY101  global numpy RNG sampler (``np.random.choice`` on the module
+         singleton — unseeded process-global state)
+  DY102  argless generator (``default_rng()`` / ``RandomState()``, or
+         a bare ``default_rng`` reference passed as a factory) — a
+         fresh OS-entropy stream per call
+  DY103  stdlib ``random`` module use (global Mersenne Twister)
+  DY104  wall-clock read (``time.time``, ``perf_counter``,
+         ``datetime.now``, ...) — virtual time only
+  DY105  iteration over ``os.environ`` — environment-order-dependent
+         control flow
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint import Finding, Module
+from tools.lint.astutil import ImportMap, dotted
+
+NAME = "determinism"
+
+CODES = {
+    "DY101": "global numpy RNG sampler in sim-path code",
+    "DY102": "argless RNG generator (fresh OS-entropy stream)",
+    "DY103": "stdlib `random` module use in sim-path code",
+    "DY104": "wall-clock read in sim-path code",
+    "DY105": "iteration over os.environ in sim-path code",
+}
+
+#: Samplers/state mutators on the numpy.random module singleton.  The
+#: seeded-generator constructors (default_rng(seed), Generator,
+#: SeedSequence, PCG64, ...) are deliberately absent.
+_SAMPLERS = frozenset({
+    "seed", "get_state", "set_state", "random", "random_sample", "ranf",
+    "sample", "rand", "randn", "randint", "random_integers", "bytes",
+    "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "standard_cauchy", "standard_exponential",
+    "standard_gamma", "standard_t", "poisson", "exponential", "beta",
+    "binomial", "chisquare", "dirichlet", "f", "gamma", "geometric",
+    "gumbel", "hypergeometric", "laplace", "logistic", "lognormal",
+    "logseries", "multinomial", "multivariate_normal",
+    "negative_binomial", "noncentral_chisquare", "noncentral_f",
+    "pareto", "power", "rayleigh", "triangular", "vonmises", "wald",
+    "weibull", "zipf",
+})
+
+_GENERATORS = frozenset({
+    "numpy.random.default_rng",
+    "numpy.random.RandomState",
+})
+
+_WALL_CLOCKS = frozenset({
+    "time.time", "time.time_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+})
+
+
+def applies(relpath: str, contracts) -> bool:
+    return relpath.endswith(".py") and any(
+        relpath.startswith(p) for p in contracts.DETERMINISM_SCOPE
+    )
+
+
+def _is_environ(node: ast.AST, imports: ImportMap) -> bool:
+    """os.environ, or os.environ.keys()/values()/items()."""
+    if (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in ("keys", "values", "items")
+    ):
+        node = node.func.value
+    return dotted(node, imports) == "os.environ"
+
+
+def run(module: Module, contracts) -> List[Finding]:
+    imports = ImportMap(module.tree)
+    out: List[Finding] = []
+
+    def add(code: str, node: ast.AST, msg: str) -> None:
+        out.append(Finding(
+            code=code, path=module.path, line=node.lineno,
+            col=node.col_offset, message=msg,
+        ))
+
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func, imports)
+            if d is not None:
+                if (
+                    d.startswith("numpy.random.")
+                    and d.rsplit(".", 1)[1] in _SAMPLERS
+                ):
+                    add("DY101", node,
+                        f"`{d}` draws from the process-global numpy RNG; "
+                        "use the injected seeded generator "
+                        "(PolicyContext.rng / default_rng(seed))")
+                elif d in _GENERATORS and not node.args and not any(
+                    k.arg in ("seed",) and not _is_none(k.value)
+                    for k in node.keywords
+                ):
+                    add("DY102", node,
+                        f"argless `{d}()` creates a fresh OS-entropy "
+                        "stream; thread an explicit seed through")
+                elif d.startswith("random.") or d == "random":
+                    add("DY103", node,
+                        f"`{d}` uses the global Mersenne Twister; use a "
+                        "seeded np.random.default_rng instead")
+                elif d in _WALL_CLOCKS:
+                    add("DY104", node,
+                        f"`{d}()` reads the wall clock; sim-path code "
+                        "runs on virtual (heap) time only")
+            # Bare generator reference passed as a factory argument
+            # (e.g. `field(default_factory=np.random.default_rng)`):
+            # called later with no seed — same hazard as DY102.
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, (ast.Name, ast.Attribute)):
+                    ad = dotted(arg, imports)
+                    if ad in _GENERATORS:
+                        add("DY102", arg,
+                            f"bare `{ad}` passed as a factory is an "
+                            "argless-generator call in disguise; wrap "
+                            "it with an explicit seed")
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            it = node.iter
+            if _is_environ(it, imports):
+                add("DY105", it,
+                    "iterating os.environ makes control flow depend on "
+                    "environment contents/order")
+    return out
+
+
+def _is_none(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value is None

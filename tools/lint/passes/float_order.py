@@ -1,0 +1,115 @@
+"""DY4xx — float-op order: bit-identity-pinned modules must not reduce
+over containers whose iteration order is not fixed.
+
+Float addition is not associative: ``sum over a set`` yields a
+different bit pattern depending on hash-seed-dependent iteration
+order, which breaks the rtol-1e-9 legacy equivalence pin and the PR
+6/7 digest pins without any *logical* bug.  Scope:
+``contracts.PINNED_MODULES``.
+
+  DY401  reduction (``sum``/``min``/``max``/``np.sum``/...) directly
+         over a set expression (literal, ``set()``/``frozenset()``
+         call, or a generator iterating one)
+  DY402  for-loop over a set expression or ``dict.values()/.items()/
+         .keys()`` whose body accumulates with an augmented assignment
+
+``min``/``max`` over a set are order-sensitive through tie-breaking
+(and NaN propagation); dict iteration is insertion-ordered in CPython
+but the VALUES being accumulated then depend on insertion history —
+sort the keys when the sum feeds pinned state, or suppress with a
+reason stating why the insertion order is itself pinned.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.lint import Finding, Module
+from tools.lint.astutil import ImportMap, dotted, is_set_expr
+
+NAME = "float-order"
+
+CODES = {
+    "DY401": "reduction over a set in a bit-identity-pinned module",
+    "DY402": "unordered iteration feeding accumulation in a pinned module",
+}
+
+_REDUCERS = frozenset({"sum", "min", "max", "prod"})
+_NUMPY_REDUCERS = frozenset({
+    "numpy.sum", "numpy.prod", "numpy.cumsum", "numpy.mean",
+    "numpy.min", "numpy.max", "numpy.median", "numpy.std", "numpy.var",
+})
+
+
+def applies(relpath: str, contracts) -> bool:
+    return relpath in contracts.PINNED_MODULES
+
+
+def _reduces_set(call: ast.Call, imports: ImportMap) -> bool:
+    for arg in call.args:
+        if is_set_expr(arg, imports):
+            return True
+        if isinstance(arg, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            for gen in arg.generators:
+                if is_set_expr(gen.iter, imports):
+                    return True
+    return False
+
+
+def _dict_view(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in ("values", "items", "keys")
+        and not node.args
+    )
+
+
+def _accumulates(body: List[ast.stmt]) -> bool:
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.AugAssign) and isinstance(
+                node.op, (ast.Add, ast.Sub, ast.Mult, ast.Div)
+            ):
+                return True
+    return False
+
+
+def run(module: Module, contracts) -> List[Finding]:
+    imports = ImportMap(module.tree)
+    out: List[Finding] = []
+
+    def add(code: str, node: ast.AST, msg: str) -> None:
+        out.append(Finding(
+            code=code, path=module.path, line=node.lineno,
+            col=node.col_offset, message=msg,
+        ))
+
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            is_reducer = (
+                isinstance(node.func, ast.Name)
+                and node.func.id in _REDUCERS
+                and not imports.is_module_alias(node.func.id)
+            ) or dotted(node.func, imports) in _NUMPY_REDUCERS
+            if is_reducer and _reduces_set(node, imports):
+                add("DY401", node,
+                    "reduction over a set: float-op order follows hash "
+                    "iteration order, which is not pinned — sort first")
+        elif isinstance(node, ast.For):
+            if is_set_expr(node.iter, imports) and _accumulates(
+                node.body
+            ):
+                add("DY402", node,
+                    "accumulating over set iteration: float-op order "
+                    "follows hash iteration order — iterate a sorted "
+                    "sequence instead")
+            elif _dict_view(node.iter) and _accumulates(node.body):
+                add("DY402", node,
+                    "accumulating over dict iteration: the float-op "
+                    "order is the dict's insertion history — iterate "
+                    "sorted(d) if this feeds pinned state, or suppress "
+                    "with a reason the insertion order is itself "
+                    "pinned")
+    return out

@@ -1,0 +1,474 @@
+"""DY3xx — jax hazards in jit-reachable functions.
+
+The tick hot path stays one fused dispatch only while nothing inside it
+forces a host sync or a trace-time Python decision on traced values.
+This pass derives the module's jit-reachable function set (decorators,
+``jax.jit(...)`` call sites, functions handed to ``jax.*`` transforms,
+cross-module entries from ``contracts.JIT_REACHABLE``), closes it over
+intra-module calls, and checks each reachable body.
+
+Staticness is tracked conservatively per function: parameters are
+traced unless named static (``static_argnames``, ``partial``-bound
+config kwargs, contract hints); ``.shape``/``.ndim``/``.dtype``/
+``.size``/``len()`` of anything is static; names assigned from
+all-static expressions are static; unknown globals (module constants,
+imported modules, enums) are static.  Hazards are only reported for
+expressions involving a traced value, so shape math never trips the
+pass.
+
+  DY301  host sync: ``.item()``, or ``float()``/``int()``/``bool()``
+         on a traced value
+  DY302  host-numpy call (``np.asarray``/``np.array``/...) on a traced
+         value (device transfer + trace break)
+  DY303  Python branch (``if``/``while``/``assert``/ternary) on a
+         traced value — decided at trace time, not per element; use
+         ``jnp.where``/``lax.cond``
+  DY304  retrace hazard: immediately-invoked ``jax.jit(...)(...)``
+         (fresh cache entry per call), or a mutable default argument
+         on a jit function (unhashable as a static)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.lint import Finding, Module
+from tools.lint.astutil import ImportMap, dotted
+
+NAME = "jax-hazard"
+
+CODES = {
+    "DY301": "host sync (.item()/float()/int()) in jit-reachable code",
+    "DY302": "host-numpy call on a traced value in jit-reachable code",
+    "DY303": "Python branch on a traced value in jit-reachable code",
+    "DY304": "retrace hazard (per-call jit / unhashable static)",
+}
+
+_NUMPY_HOST_CALLS = frozenset({
+    "asarray", "array", "asanyarray", "copy", "copyto", "save", "savez",
+})
+
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+
+#: Builtins that map static inputs to static outputs.
+_STATIC_BUILTINS = frozenset({
+    "len", "min", "max", "int", "float", "bool", "abs", "range",
+    "tuple", "list", "sorted", "isinstance", "round",
+})
+
+
+def applies(relpath: str, contracts) -> bool:
+    return relpath.endswith(".py")
+
+
+def _jit_callee(node: ast.AST, imports: ImportMap) -> bool:
+    d = dotted(node, imports)
+    return d in ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit")
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    """static_argnames=("a", "b") / "a" keyword of a jit/partial call."""
+    out: Set[str] = set()
+    for k in call.keywords:
+        if k.arg == "static_argnames":
+            v = k.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(
+                        e.value, str
+                    ):
+                        out.add(e.value)
+    return out
+
+
+class _Reach:
+    """Worklist entry: function name -> static parameter names."""
+
+    def __init__(self):
+        self.static_params: Dict[str, Set[str]] = {}
+
+    def add(self, name: str, statics: Set[str]) -> bool:
+        cur = self.static_params.get(name)
+        if cur is None:
+            self.static_params[name] = set(statics)
+            return True
+        # Re-reaching with FEWER statics must widen the traced set.
+        narrowed = cur & statics
+        if narrowed != cur:
+            self.static_params[name] = narrowed
+            return True
+        return False
+
+
+def _collect_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    """All function defs (nested included), by name — last def wins,
+    which matches runtime rebinding for the module-level case."""
+    out: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            out[node.name] = node
+    return out
+
+
+def _seed_reachable(
+    module: Module, imports: ImportMap, contracts,
+    functions: Dict[str, ast.FunctionDef],
+) -> Tuple[_Reach, List[Finding]]:
+    reach = _Reach()
+    findings: List[Finding] = []
+
+    def fn_ref(node: ast.AST) -> Tuple[Optional[str], Set[str]]:
+        """Resolve a callable expression to (local function name,
+        partial-bound static names)."""
+        if isinstance(node, ast.Name) and node.id in functions:
+            return node.id, set()
+        if isinstance(node, ast.Call) and dotted(
+            node.func, imports
+        ) == "functools.partial":
+            statics = {k.arg for k in node.keywords if k.arg}
+            statics |= _static_argnames(node)
+            if node.args and isinstance(node.args[0], ast.Name):
+                name = node.args[0].id
+                if name in functions:
+                    return name, statics
+        return None, set()
+
+    # Decorated definitions.
+    for fn in functions.values():
+        for dec in fn.decorator_list:
+            statics: Set[str] = set()
+            target = dec
+            if isinstance(dec, ast.Call):
+                d = dotted(dec.func, imports)
+                if d == "functools.partial" and dec.args and _jit_callee(
+                    dec.args[0], imports
+                ):
+                    statics = _static_argnames(dec)
+                    reach.add(fn.name, statics)
+                    continue
+                target = dec.func
+                statics = _static_argnames(dec)
+            if _jit_callee(target, imports):
+                reach.add(fn.name, statics)
+
+    # jax.jit(...) call sites and functions handed to jax transforms.
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, imports)
+        if _jit_callee(node.func, imports):
+            statics = _static_argnames(node)
+            if node.args:
+                name, bound = fn_ref(node.args[0])
+                if name is not None:
+                    reach.add(name, statics | bound)
+            # Immediately-invoked jit: jax.jit(f)(x) builds a fresh
+            # cache entry every execution.
+        elif d is not None and d.startswith("jax.") and not d.startswith(
+            ("jax.tree", "jax.tree_util")
+        ):
+            # Tracing transforms (vmap, grad, scan, pallas_call, ...)
+            # make their function arguments jit-reachable.  jax.tree.*
+            # is excluded: tree mapping is eager structural plumbing.
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                name, bound = fn_ref(arg)
+                if name is not None:
+                    reach.add(name, bound)
+
+    # Immediately-invoked jit detection (DY304).
+    for node in ast.walk(module.tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Call)
+            and _jit_callee(node.func.func, imports)
+        ):
+            findings.append(Finding(
+                code="DY304", path=module.path, line=node.lineno,
+                col=node.col_offset,
+                message="jax.jit(...)(...) jits and invokes in one "
+                        "expression — every execution builds a fresh "
+                        "traced callable; cache the jitted function",
+            ))
+
+    # Cross-module contract hints.
+    for name, statics in contracts.JIT_REACHABLE.get(
+        module.path, {}
+    ).items():
+        if name in functions:
+            reach.add(name, set(statics))
+    return reach, findings
+
+
+# ------------------------- per-function analysis ---------------------- #
+
+
+class _StaticNames:
+    """Forward-pass approximation of which local names hold static
+    (trace-time Python) values inside one function."""
+
+    def __init__(
+        self, fn: ast.FunctionDef, static_params: Set[str],
+        imports: ImportMap,
+        functions: Dict[str, ast.FunctionDef] = None,
+        static_calls: frozenset = frozenset(),
+    ):
+        self.imports = imports
+        self.functions = functions or {}
+        self.static_calls = static_calls
+        params = {
+            a.arg for a in (
+                fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
+            )
+        }
+        if fn.args.vararg:
+            params.add(fn.args.vararg.arg)
+        if fn.args.kwarg:
+            params.add(fn.args.kwarg.arg)
+        self.traced: Set[str] = {
+            p for p in params if p not in static_params and p != "self"
+        }
+        self.static: Set[str] = set(static_params)
+        # Two fixpoint sweeps over straight-line assignments cover the
+        # chains that occur in practice (N = x.shape[0]; b = min(b, N)).
+        for _ in range(2):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                    t = node.targets[0]
+                    if isinstance(t, ast.Name):
+                        if self.is_static(node.value):
+                            self.static.add(t.id)
+                            self.traced.discard(t.id)
+                        else:
+                            self.traced.add(t.id)
+                            self.static.discard(t.id)
+
+    def is_static(self, node: ast.AST) -> bool:
+        """Conservatively: does this expression provably hold a static
+        (non-traced) value?"""
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            if node.id in self.traced:
+                return False
+            # static locals, module aliases, module-level constants,
+            # builtins: all trace-time Python values.
+            return True
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return True  # shapes/dtypes of traced arrays are static
+            return self.is_static(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_static(node.value) and self.is_static(
+                node.slice
+            )
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return all(self.is_static(e) for e in node.elts)
+        if isinstance(node, ast.BinOp):
+            return self.is_static(node.left) and self.is_static(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_static(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_static(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` are sentinel checks on the
+            # Python structure, static regardless of x.
+            if all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+            ):
+                return True
+            # `"key" in pytree_dict` tests the (static) tree STRUCTURE,
+            # not the traced leaves.
+            if any(
+                isinstance(op, (ast.In, ast.NotIn)) for op in node.ops
+            ) and any(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in [node.left] + node.comparators
+            ):
+                return True
+            return self.is_static(node.left) and all(
+                self.is_static(c) for c in node.comparators
+            )
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name):
+                if node.func.id == "len":
+                    return True  # len of a traced array is its static dim
+                if node.func.id == "isinstance":
+                    return True
+                if node.func.id in _STATIC_BUILTINS:
+                    return all(
+                        self.is_static(a) for a in node.args
+                    ) and all(
+                        self.is_static(k.value) for k in node.keywords
+                    )
+                # A module-local helper fed only static values (shape
+                # math like `_factored(p.shape, threshold)`) returns a
+                # static value.
+                if node.func.id in self.functions:
+                    return all(
+                        self.is_static(a) for a in node.args
+                    ) and all(
+                        self.is_static(k.value) for k in node.keywords
+                    )
+            # Contract-listed host-config reads (perf flags etc.).
+            d = dotted(node.func, self.imports)
+            if d is not None and d in self.static_calls:
+                return True
+            return False  # unknown call results are assumed traced
+        if isinstance(node, ast.IfExp):
+            return (
+                self.is_static(node.test)
+                and self.is_static(node.body)
+                and self.is_static(node.orelse)
+            )
+        if isinstance(node, ast.Slice):
+            return all(
+                p is None or self.is_static(p)
+                for p in (node.lower, node.upper, node.step)
+            )
+        if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+            return True  # message formatting, not numeric state
+        return False
+
+
+def _check_function(
+    module: Module, fn: ast.FunctionDef, statics: Set[str],
+    imports: ImportMap, functions: Dict[str, ast.FunctionDef],
+    reach: _Reach, static_calls: frozenset,
+) -> Tuple[List[Finding], List[Tuple[str, Set[str]]]]:
+    names = _StaticNames(fn, statics, imports, functions, static_calls)
+    out: List[Finding] = []
+    newly: List[Tuple[str, Set[str]]] = []
+    nested = {
+        n.name for n in ast.walk(fn)
+        if isinstance(n, ast.FunctionDef) and n is not fn
+    }
+
+    def add(code: str, node: ast.AST, msg: str) -> None:
+        out.append(Finding(
+            code=code, path=module.path, line=node.lineno,
+            col=node.col_offset, message=msg,
+        ))
+
+    # DY304: mutable defaults on the jit function itself.
+    for default in list(fn.args.defaults) + [
+        d for d in fn.args.kw_defaults if d is not None
+    ]:
+        if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+            add("DY304", default,
+                f"{fn.name} has a mutable default argument; as a jit "
+                "static it is unhashable and forces a retrace")
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            # .item() host sync.
+            if isinstance(f, ast.Attribute) and f.attr == "item":
+                if not names.is_static(f.value):
+                    add("DY301", node,
+                        ".item() blocks on device transfer inside a "
+                        "jit-reachable function")
+            # float()/int()/bool() on traced values.
+            elif isinstance(f, ast.Name) and f.id in (
+                "float", "int", "bool"
+            ):
+                if node.args and not names.is_static(node.args[0]):
+                    add("DY301", node,
+                        f"{f.id}() on a traced value forces a host "
+                        "sync inside a jit-reachable function")
+            else:
+                d = dotted(f, imports)
+                if (
+                    d is not None
+                    and d.startswith("numpy.")
+                    and d.rsplit(".", 1)[1] in _NUMPY_HOST_CALLS
+                ):
+                    if any(
+                        not names.is_static(a) for a in node.args
+                    ):
+                        add("DY302", node,
+                            f"`{d}` on a traced value transfers to "
+                            "host inside a jit-reachable function; "
+                            "use jnp")
+                # Intra-module call propagation.
+                if isinstance(f, ast.Name) and (
+                    f.id in functions or f.id in nested
+                ):
+                    callee = functions.get(f.id)
+                    if callee is not None:
+                        cal_params = [
+                            a.arg for a in callee.args.args
+                            if a.arg != "self"
+                        ]
+                        stat: Set[str] = set()
+                        for i, a in enumerate(node.args):
+                            if i < len(cal_params) and names.is_static(a):
+                                stat.add(cal_params[i])
+                        for k in node.keywords:
+                            if k.arg and names.is_static(k.value):
+                                stat.add(k.arg)
+                        newly.append((f.id, stat))
+            # A function passed by name to ANY call inside a
+            # jit-reachable body (tree_map of a local closure, a
+            # higher-order helper) is itself jit-reachable, with every
+            # parameter traced.
+            for a in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(a, ast.Name) and a.id in functions:
+                    newly.append((a.id, set()))
+        elif isinstance(node, (ast.If, ast.While)):
+            if not names.is_static(node.test):
+                add("DY303", node,
+                    "Python branch on a traced value is decided once "
+                    "at trace time; use jnp.where / lax.cond")
+        elif isinstance(node, ast.Assert):
+            if not names.is_static(node.test):
+                add("DY303", node,
+                    "assert on a traced value forces a host sync (or "
+                    "silently checks a tracer); assert static shapes "
+                    "only")
+        elif isinstance(node, ast.IfExp):
+            if not names.is_static(node.test):
+                add("DY303", node,
+                    "ternary on a traced value is decided once at "
+                    "trace time; use jnp.where")
+    return out, newly
+
+
+def run(module: Module, contracts) -> List[Finding]:
+    imports = ImportMap(module.tree)
+    functions = _collect_functions(module.tree)
+    reach, findings = _seed_reachable(module, imports, contracts, functions)
+    static_calls = frozenset(getattr(contracts, "STATIC_CALLS", ()))
+
+    checked: Dict[str, Set[str]] = {}
+    work = list(reach.static_params.items())
+    while work:
+        name, statics = work.pop()
+        fn = functions.get(name)
+        if fn is None:
+            continue
+        prev = checked.get(name)
+        if prev is not None and prev <= set(statics):
+            continue  # already checked with an equal-or-wider traced set
+        checked[name] = set(statics)
+        fn_findings, calls = _check_function(
+            module, fn, set(statics), imports, functions, reach,
+            static_calls,
+        )
+        findings.extend(fn_findings)
+        for callee, stat in calls:
+            if reach.add(callee, stat):
+                work.append((callee, reach.static_params[callee]))
+
+    # Deduplicate (a function re-checked with a narrower static set can
+    # re-emit the same findings).
+    seen = set()
+    unique: List[Finding] = []
+    for f in findings:
+        k = (f.code, f.path, f.line, f.col, f.message)
+        if k not in seen:
+            seen.add(k)
+            unique.append(f)
+    return unique

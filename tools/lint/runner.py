@@ -1,0 +1,181 @@
+"""dyslint CLI — run the invariant passes over the tree.
+
+Usage (see ``make lint``)::
+
+    python tools/lint/runner.py                  # src/ tools/ benchmarks/
+    python tools/lint/runner.py path [path ...]  # explicit scope
+    python tools/lint/runner.py --list-codes
+    python tools/lint/runner.py --update-baseline
+
+Exit status: 0 when every finding is inline-suppressed
+(``# dyslint: disable=CODE -- reason``) or grandfathered in
+``tools/lint/baseline.json``; 1 when new findings exist; 2 on usage
+errors.  The contract layer is loaded straight from
+``src/repro/core/contracts.py`` (no ``repro`` import, no numpy/jax),
+so linting runs on a bare Python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)
+)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tools.lint import (  # noqa: E402
+    Finding,
+    Module,
+    dump_baseline,
+    load_baseline,
+    split_baselined,
+    split_suppressed,
+)
+from tools.lint.passes import ALL_PASSES, all_codes  # noqa: E402
+
+_CONTRACTS_PATH = os.path.join(_ROOT, "src", "repro", "core", "contracts.py")
+_BASELINE_PATH = os.path.join(_ROOT, "tools", "lint", "baseline.json")
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "node_modules"}
+
+
+def load_contracts(path: str = _CONTRACTS_PATH):
+    """Load the contract layer standalone (without importing the
+    ``repro.core`` package, which would pull in numpy/jax)."""
+    spec = importlib.util.spec_from_file_location("_dyslint_contracts", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def discover(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: List[str] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(_ROOT, p)
+        if os.path.isfile(full):
+            out.append(full)
+        elif os.path.isdir(full):
+            for dirpath, dirnames, filenames in os.walk(full):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in _SKIP_DIRS and not d.startswith(".")
+                )
+                for name in sorted(filenames):
+                    if name.endswith(".py"):
+                        out.append(os.path.join(dirpath, name))
+        else:
+            raise FileNotFoundError(p)
+    return out
+
+
+def lint_file(
+    full_path: str, contracts
+) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Lint one file.  Returns (active, suppressed, source_lines)."""
+    rel = os.path.relpath(full_path, _ROOT).replace(os.sep, "/")
+    with open(full_path, encoding="utf-8") as fh:
+        text = fh.read()
+    try:
+        module = Module.from_source(rel, text)
+    except SyntaxError as e:
+        f = Finding(
+            code="DY001", path=rel, line=e.lineno or 1, col=e.offset or 0,
+            message=f"file does not parse: {e.msg}",
+        )
+        return [f], [], text.splitlines()
+    findings: List[Finding] = []
+    for p in ALL_PASSES:
+        if p.applies(rel, contracts):
+            findings.extend(p.run(module, contracts))
+    findings.sort(key=lambda f: (f.line, f.col, f.code))
+    return (*split_suppressed(findings, module.lines), module.lines)
+
+
+def lint_paths(
+    paths: Sequence[str], contracts
+) -> Tuple[List[Finding], List[Finding], Dict[str, List[str]]]:
+    """Lint many paths.  Returns (active, suppressed, lines_by_path)."""
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    lines_by_path: Dict[str, List[str]] = {}
+    for full in discover(paths):
+        a, s, lines = lint_file(full, contracts)
+        rel = os.path.relpath(full, _ROOT).replace(os.sep, "/")
+        lines_by_path[rel] = lines
+        active.extend(a)
+        suppressed.extend(s)
+    return active, suppressed, lines_by_path
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="dyslint", description=__doc__)
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: the "
+                         "contract layer's DEFAULT_LINT_PATHS)")
+    ap.add_argument("--baseline", default=_BASELINE_PATH,
+                    help="grandfathered-findings file")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report grandfathered findings too")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current "
+                         "UN-suppressed findings and exit 0")
+    ap.add_argument("--list-codes", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_codes:
+        for p in ALL_PASSES:
+            print(f"[{p.NAME}]")
+            for code, desc in sorted(p.CODES.items()):
+                print(f"  {code}  {desc}")
+        return 0
+
+    contracts = load_contracts()
+    paths = args.paths or list(contracts.DEFAULT_LINT_PATHS)
+    try:
+        active, suppressed, lines_by_path = lint_paths(paths, contracts)
+    except FileNotFoundError as e:
+        print(f"dyslint: no such path: {e}", file=sys.stderr)
+        return 2
+
+    if args.update_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            fh.write(dump_baseline(active, lines_by_path))
+        print(f"dyslint: baseline rewritten with {len(active)} "
+              f"finding(s) -> {args.baseline}")
+        return 0
+
+    baselined: List[Finding] = []
+    stale = 0
+    if not args.no_baseline and os.path.isfile(args.baseline):
+        baseline = load_baseline(args.baseline)
+        active, baselined, stale = split_baselined(
+            active, baseline, lines_by_path
+        )
+
+    for f in active:
+        print(f.render())
+    known = all_codes()
+    n_files = len(lines_by_path)
+    summary = (
+        f"dyslint: {len(active)} finding(s) "
+        f"({len(suppressed)} suppressed, {len(baselined)} baselined) "
+        f"across {n_files} file(s), {len(known)} codes"
+    )
+    if stale:
+        summary += (
+            f"; {stale} stale baseline entr"
+            f"{'y' if stale == 1 else 'ies'} — run --update-baseline"
+        )
+    print(summary)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
