@@ -35,6 +35,12 @@ regimes:
       report-card row per policy — p99 latency, Jain fairness, SLO
       attainment, bytes moved, decision overhead — plus a same-seed
       reproducibility check for the stochastic entrants.
+  faults      — the fault-injection economics study (``--faults``;
+      `faults_suite` tenants crossed with seeded `hazard_schedule`
+      failure rates): static round-robin vs deadline-aware DySkew vs
+      deadline-aware + autoscale, each at every failure rate, reporting
+      SLO attainment, worker-seconds spent (wasted + re-executed
+      service billed honestly) and the resulting cost-per-SLO frontier.
 """
 
 from __future__ import annotations
@@ -67,8 +73,10 @@ from repro.sim.engine import (
     StrategyConfig,
     TenantQuery,
 )
+from repro.sim.faults import hazard_schedule
 from repro.sim.replay import (
     improvement,
+    legacy_strategy,
     open_loop_rate,
     open_loop_tenants,
     run_multi_tenant_ab,
@@ -77,6 +85,7 @@ from repro.sim.replay import (
 from repro.sim.workload import (
     ArrivalProcess,
     QueryProfile,
+    faults_suite,
     generate_query,
     many_tenants_suite,
     multi_tenant_suite,
@@ -451,10 +460,109 @@ def _tournament(quick: bool) -> List[Row]:
     return rows
 
 
+def _faults(quick: bool) -> List[Row]:
+    """Cost-per-SLO frontier under deterministic fault injection
+    (``--faults``): the `faults_suite` gold/silver/bulk tenants under
+    open-loop overload, crossed with seeded `hazard_schedule` failure
+    rates (crashes + spot preemptions + transient slowdowns) and three
+    arms — static round-robin under plain fair share, DySkew +
+    deadline-aware admission, and DySkew + deadline-aware + warehouse
+    autoscaling.  Each cell reports SLO attainment, worker-seconds SPENT
+    (busy service + wasted partial service on crashed workers — honest
+    spend, re-execution included) and their ratio `cost_per_slo`; the
+    closing row checks the frontier claim that a deadline-aware arm
+    dominates static round-robin (>= attainment at <= cost) at every
+    nonzero failure rate."""
+    num_queries = 10 if quick else 22
+    cluster = ClusterConfig(num_nodes=2 if quick else 4)
+    specs = faults_suite()
+    proc = ArrivalProcess(
+        kind="poisson",
+        rate=open_loop_rate([p for p, _, _ in specs], cluster, load=2.5),
+    )
+    fs = FairShareConfig(quantum_rows=128.0, heavy_row_bytes=1e6)
+    dc = DeadlineConfig(urgency_horizon=1.0, boost_quanta=4.0)
+    asc = AutoscaleConfig(
+        min_workers=cluster.num_workers // 2,
+        max_workers=cluster.num_workers,
+        backlog_high=48.0, backlog_low=4.0,
+        step=cluster.interpreters_per_node,
+        interval=0.1, cooldown=0.2,
+    )
+    # The hazard horizon must cover the whole run: arrivals span
+    # ~num_queries/rate and overload stretches the tail well past the
+    # last arrival, so give the hazard process 3x the arrival span.
+    # mttr=1.2 keeps crashed workers down long enough that the capacity
+    # loss actually shows up in admission order (short outages wash out).
+    horizon = 3.0 * num_queries / proc.rate
+    rates = [0.0, 1.5] if quick else [0.0, 1.5, 3.0]
+    arms = [
+        ("static_rr", dict(resolve=legacy_strategy)),
+        ("deadline", dict(deadline_aware=True, deadline_cfg=dc)),
+        ("deadline_autoscale", dict(deadline_aware=True, deadline_cfg=dc,
+                                    autoscale=asc)),
+    ]
+    rows: List[Row] = []
+    t0 = time.time()
+    frontier = {}
+    for rate in rates:
+        faults = None
+        if rate > 0.0:
+            faults = hazard_schedule(
+                seed=17, num_workers=cluster.num_workers,
+                num_nodes=cluster.num_nodes, horizon=horizon,
+                crash_rate=rate, preempt_rate=rate,
+                slowdown_rate=0.5 * rate, mttr=1.2,
+                min_live=max(2, cluster.num_workers // 4),
+            )
+        for name, kw in arms:
+            out = run_open_loop(
+                specs, cluster, proc, num_queries, seed=0,
+                fair_share=fs, faults=faults, **kw,
+            )
+            fstats = out["fault_stats"]
+            frontier[(name, rate)] = (
+                out["slo_attainment"], out["cost_per_slo"]
+            )
+            rec = fstats.get("recovered_rows") or []
+            rows.append((
+                f"faults_{name}_rate{rate:g}_cost_per_slo",
+                out["cost_per_slo"],
+                f"slo_attainment={out['slo_attainment']:.3f};"
+                f"worker_seconds_spent={out['worker_seconds_spent']:.3f};"
+                f"slo_met={out['slo_met_count']};"
+                f"injected={len(faults.events) if faults else 0};"
+                f"detections={fstats.get('detections', 0)};"
+                f"recovered_rows={int(sum(rec))};"
+                f"reexecuted_rows={int(sum(fstats.get('reexecuted_rows') or []))};"
+                f"wasted_service_s={fstats.get('wasted_service_s', 0.0):.3f};"
+                f"transfer_retries={fstats.get('transfer_retries', 0)};"
+                f"queries={num_queries};load=2.5",
+            ))
+    # Frontier claim: at every nonzero rate some deadline-aware arm
+    # weakly dominates static round-robin on (attainment up, cost down).
+    dominates = all(
+        any(
+            frontier[(a, r)][0] >= frontier[("static_rr", r)][0]
+            and frontier[(a, r)][1] <= frontier[("static_rr", r)][1]
+            and frontier[(a, r)] != frontier[("static_rr", r)]
+            for a in ("deadline", "deadline_autoscale")
+        )
+        for r in rates if r > 0.0
+    )
+    rows.append((
+        "faults_frontier_deadline_dominates_static",
+        float(dominates),
+        f"rates={'|'.join(f'{r:g}' for r in rates)};"
+        f"arms={len(arms)};wall_s={time.time() - t0:.1f}",
+    ))
+    return rows
+
+
 def run(quick: bool = False) -> List[Row]:
     return (
         _closed_loop(quick) + _open_loop(quick) + _many_tenants(quick)
-        + _slo(quick) + _tournament(quick)
+        + _slo(quick) + _tournament(quick) + _faults(quick)
     )
 
 
@@ -473,6 +581,10 @@ if __name__ == "__main__":
     ap.add_argument("--tournament", action="store_true",
                     help="run ONLY the registered-policy tournament "
                          "(one report card per policy)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run ONLY the fault-injection cost-per-SLO "
+                         "frontier (policies x failure rates x "
+                         "autoscale)")
     args = ap.parse_args()
     if args.many:
         rows = _many_tenants(args.quick)
@@ -480,6 +592,8 @@ if __name__ == "__main__":
         rows = _slo(args.quick)
     elif args.tournament:
         rows = _tournament(args.quick)
+    elif args.faults:
+        rows = _faults(args.quick)
     else:
         rows = run(quick=args.quick)
     for r in rows:

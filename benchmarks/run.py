@@ -19,6 +19,7 @@ import importlib
 import json
 import os
 import re
+import subprocess
 import sys
 import time
 import traceback
@@ -73,6 +74,21 @@ def _next_bench_json() -> str:
     return os.path.join(_ROOT, f"BENCH_{max(indices) + 1}.json")
 
 
+def _git_sha() -> str:
+    """HEAD commit of the repo the record was produced from, or
+    "unknown" outside a git checkout — provenance for diffing BENCH
+    records across PRs (which code produced which numbers)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_ROOT,
+            capture_output=True, text=True, timeout=10,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def _parse_derived(derived: str) -> dict:
     """Best-effort split of a row's derived string into key=value pairs
     (values parsed as float where they look numeric, trailing 'x'/'%'
@@ -108,7 +124,13 @@ def main() -> None:
     ap.add_argument("--check-docs", action="store_true",
                     help="run the README/ARCHITECTURE doc-link check "
                          "instead of the benches (see tools/check_docs.py)")
+    ap.add_argument("--seed", type=int,
+                    default=int(os.environ.get("REPRO_BENCH_SEED", "0")),
+                    help="base seed recorded in the BENCH_<n>.json header "
+                         "and exported as REPRO_BENCH_SEED for bench "
+                         "modules that consult it (default 0)")
     args = ap.parse_args()
+    os.environ["REPRO_BENCH_SEED"] = str(args.seed)
 
     if args.check_docs:
         sys.path.insert(0, os.path.join(_ROOT, "tools"))
@@ -133,6 +155,8 @@ def main() -> None:
         "created_unix": time.time(),
         "quick": bool(args.quick),
         "only": args.only,
+        "seed": int(args.seed),
+        "git_sha": _git_sha(),
         "benches": [],
     }
     for mod_name in selected:

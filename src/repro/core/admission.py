@@ -344,6 +344,8 @@ class FairShareAdmission:
         # Telemetry.
         self.admitted = [0] * self.nq
         self.deferred = [0] * self.nq
+        self.lost_rows = [0.0] * self.nq
+        self.readmitted_rows = [0] * self.nq
 
     # -- weighted shares ------------------------------------------------ #
 
@@ -496,6 +498,52 @@ class FairShareAdmission:
                 self.deficit_bytes[a] = min(
                     self.deficit_bytes[a] + qb * s, self._cap_bytes(a)
                 )
+
+    def on_lost(self, q: int, rows: int, refund: bool = False) -> None:
+        """Report ``rows`` of tenant ``q`` LOST from service (worker
+        crash/preemption) or withdrawn (straggler migration) before
+        completing.
+
+        The rows are retired from the in-service ledger — they will never
+        reach :meth:`on_complete`, and without retirement the ledger
+        never drains and work-conserving admission wedges.  With
+        ``refund=False`` (failure) the original charge STANDS: the spend
+        physically happened, and the re-admission of the recovered rows
+        is charged again — that second charge is the tenant's retry debt.
+        With ``refund=True`` (the SYSTEM chose to displace the rows, e.g.
+        a straggler drain) the row charge is credited back up to the cap,
+        mirroring :meth:`DeadlineAwareAdmission.preempt_transfer`.
+        """
+        take = min(float(rows), self.outstanding_rows[q])
+        self.outstanding_rows[q] -= take
+        self._total_outstanding = max(self._total_outstanding - take, 0.0)
+        self.lost_rows[q] += take
+        if refund:
+            self.deficit_rows[q] = min(
+                self.deficit_rows[q] + take, self._cap_rows(q)
+            )
+        elif self.live[q]:
+            # The recovered rows will be back asking for admission.
+            self.backlogged[q] = True
+
+    def try_readmit(
+        self,
+        q: int,
+        rows: int,
+        deadline: Optional[float] = None,
+        now: float = 0.0,
+    ) -> bool:
+        """Admit recovered rows re-entering after a loss.  Same gate and
+        same charge as fresh work — recovery is paid for, not free — but
+        no NIC charge: the re-fetch transfer is modeled (and paid) by the
+        engine's recovery routing, and the bytes were already billed at
+        original admission.  ``deadline``/``now`` are accepted for
+        signature compatibility with the deadline-aware subclass and
+        ignored here."""
+        ok = self.try_admit(q, rows, 0.0, 0.0)
+        if ok:
+            self.readmitted_rows[q] += rows
+        return ok
 
     def release_order(self) -> List[int]:
         """Round-robin order in which parked tenants should retry
@@ -697,6 +745,21 @@ class DeadlineAwareAdmission(FairShareAdmission):
             u * self.dcfg.boost_quanta * self.cfg.quantum_bytes * s,
             rows_advance,
         )
+
+    def try_readmit(
+        self,
+        q: int,
+        rows: int,
+        deadline: Optional[float] = None,
+        now: float = 0.0,
+    ) -> bool:
+        """Recovered-row re-admission with the EDF boost: rows lost near
+        a deadline re-enter with the same urgency relaxation a fresh
+        urgent batch would get (the full retry charge still lands)."""
+        ok = self.try_admit(q, rows, 0.0, 0.0, deadline=deadline, now=now)
+        if ok:
+            self.readmitted_rows[q] += rows
+        return ok
 
     def release_order(self) -> List[int]:
         """EDF first: parked tenants with earlier refused deadlines come

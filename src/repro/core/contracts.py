@@ -82,6 +82,11 @@ DETERMINISM_SCOPE = (
     "src/repro/core/",
     "src/repro/serving/",
     "src/repro/data/",
+    # The fault-injection detection path: `sim/faults.py` is already
+    # covered by the sim/ prefix; the runtime-side detector it drives
+    # (heartbeats, N-strikes straggler exclusion, elastic remesh) must
+    # hold the same bar — same-seed fault runs are pinned bit-for-bit.
+    "src/repro/runtime/fault_tolerance.py",
 )
 
 #: Modules covered by bit-identity pins (the rtol-1e-9 legacy
@@ -93,6 +98,7 @@ DETERMINISM_SCOPE = (
 #: result on a different run.
 PINNED_MODULES = (
     "src/repro/sim/engine.py",
+    "src/repro/sim/faults.py",
     "src/repro/sim/legacy.py",
     "src/repro/sim/batched_link.py",
     "src/repro/sim/pipeline.py",

@@ -255,11 +255,19 @@ class PolicyContext:
         _no_outstanding
     )
     idle_sibling_frac: Callable[[int], float] = staticmethod(_no_idle)
-    #: Autoscale: boolean (n,) mask of commissioned workers, or None when
-    #: the whole pool is eligible (no autoscaler).
+    #: Boolean (n,) mask of ROUTABLE workers (commissioned ∧ live ∧ not
+    #: draining/excluded), or None when the whole pool is eligible.
+    #: Under faults the engine composes worker liveness into this view,
+    #: so every mask-aware policy is fault-aware for free.
     active_mask: Callable[[], Optional[np.ndarray]] = staticmethod(_no_mask)
-    #: Autoscale: int ids of commissioned workers (None = no autoscaler).
+    #: Int ids of routable workers (None = whole pool eligible).
     active_ids: Callable[[], Optional[np.ndarray]] = staticmethod(_no_mask)
+    #: Fault layer: boolean (n,) liveness-only mask (True = the worker is
+    #: up and accepting rows, independent of autoscale commissioning), or
+    #: None when no fault schedule is active.  Most policies should use
+    #: ``active_mask``, which already folds this in; ``live_mask`` lets a
+    #: policy distinguish "decommissioned" from "dead/draining".
+    live_mask: Callable[[], Optional[np.ndarray]] = staticmethod(_no_mask)
 
 
 _REGISTRY: Dict[str, Type["RedistributionPolicy"]] = {}
@@ -477,6 +485,12 @@ class RedistributionPolicy:
         if act is not None:
             # Decommissioned workers are ineligible destinations.
             bl = np.where(act, bl, np.inf)
+        lv = self.ctx.live_mask()
+        if lv is not None:
+            # Dead/draining/excluded workers are ineligible too.  The
+            # simulator folds liveness into active_mask already; this
+            # guards hosts that supply the two views independently.
+            bl = np.where(lv, bl, np.inf)
         if self.strategy.dyskew.self_skip:
             # Forced-remote ablation (§III.B): the producer must bypass
             # its own node's interpreters entirely (Fig. 1 —

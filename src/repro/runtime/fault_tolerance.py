@@ -164,6 +164,16 @@ class FaultTolerantRuntime:
         self.strikes[host] = 0
         self.metrics["sync_window"][host, :] = hs.cum_step_time
 
+    def mesh_shape(self, chips_per_host: int = 4) -> Tuple[int, int]:
+        """The elastic mesh over the CURRENT survivor set — what the
+        remesh after an exclusion/rejoin produces.  The simulator logs
+        this at every membership change (``last_fault_stats['mesh_log']``)
+        so fault scenarios record the mesh trajectory alongside recovery
+        accounting."""
+        return elastic_mesh_shape(
+            len(self.survivors()), chips_per_host
+        )
+
 
 def elastic_mesh_shape(num_hosts: int, chips_per_host: int = 4) -> Tuple[int, int]:
     """Largest (data, model) mesh from surviving hosts: model axis fixed at

@@ -208,7 +208,15 @@ from repro.core.policy import (  # noqa: F401
     waterfill_counts_many,
 )
 from repro.core.types import DySkewConfig, Policy
+from repro.runtime.fault_tolerance import FaultConfig, FaultTolerantRuntime
 from repro.sim.batched_link import BatchedLinkSim
+from repro.sim.faults import (
+    NIC_DEGRADE,
+    PREEMPT,
+    SLOWDOWN,
+    FaultSchedule,
+    default_sim_fault_config,
+)
 
 
 # --------------------------------------------------------------------- #
@@ -591,9 +599,16 @@ def closed_form_none_result(
 _TICK, _ARRIVAL, _ENQUEUE, _DONE, _ADMITTED, _GTICK, _RESIZE = (
     0, 1, 2, 3, 4, 5, 6
 )
+# Fault layer: FAIL pulls a worker (crash / end of spot drain) or opens a
+# slowdown/NIC window; PREEMPT_NOTICE starts a spot drain (routing stops,
+# service continues); RECOVER closes a transient window or rejoins a
+# replaced worker; HBEAT drives virtual-time heartbeats + detection.
+# None of these is ever pushed when the fault schedule is empty.
+_FAIL, _PREEMPT_NOTICE, _RECOVER, _HBEAT = 7, 8, 9, 10
 
 _KIND_NAMES = (
-    "tick", "arrival", "enqueue", "done", "admitted", "gtick", "resize"
+    "tick", "arrival", "enqueue", "done", "admitted", "gtick", "resize",
+    "fail", "preempt_notice", "recover", "hbeat",
 )
 
 #: Rows per service burst (completion-ack granularity).
@@ -708,6 +723,8 @@ class MultiQuerySimulator:
         deadline_cfg: Optional[DeadlineConfig] = None,
         preemption: bool = False,
         autoscale: Optional[AutoscaleConfig] = None,
+        faults: Optional[FaultSchedule] = None,
+        fault_cfg: Optional[FaultConfig] = None,
         trace_placement: bool = False,
         seed: int = 0,
     ):
@@ -745,6 +762,17 @@ class MultiQuerySimulator:
         self.deadline_cfg = deadline_cfg
         self.preemption = preemption
         self.autoscale = autoscale
+        # Fault layer (default OFF like the SLO layer above: with
+        # ``faults=None`` or an empty schedule no fault event is pushed
+        # and no fault branch is taken).  ``fault_cfg`` tunes detection
+        # (`FaultConfig`); None means `default_sim_fault_config()`.
+        if faults is not None:
+            faults.validate(cluster.num_workers, cluster.num_nodes)
+        self.faults = faults
+        self.fault_cfg = fault_cfg
+        #: Fault/recovery telemetry of the most recent `run` (always set;
+        #: ``{'enabled': False}``-shaped when no schedule was active).
+        self.last_fault_stats: Dict[str, object] = {}
         #: Record the final worker of every lineage-tagged row (requires
         #: ``Batch.ids``).  Purely observational: the tracing branch does
         #: no float arithmetic and no RNG draws, so a traced run is
@@ -766,6 +794,8 @@ class MultiQuerySimulator:
         if self.none_closed_form is False or self.fair_share is not None:
             return False
         if self.autoscale is not None:
+            return False
+        if self.faults is not None and len(self.faults.events) > 0:
             return False
         if not tenants:
             return False
@@ -803,6 +833,7 @@ class MultiQuerySimulator:
             # No redistribution, disjoint producers: per-worker completion
             # times are a prefix sum — skip the event loop entirely.
             self.last_event_counts = {"none_closed_form_tenants": nq}
+            self.last_fault_stats = {"enabled": False}
             if self.trace_placement:
                 self.last_placement = [
                     _producer_placement(t) for t in tenants
@@ -964,9 +995,23 @@ class MultiQuerySimulator:
         # every policy CLASS declaring itself drain-safe (state changes
         # only inside `route`) — a policy that mutates observable state
         # on another trigger forces the heap to run to exhaustion.
-        drain_on = self.closed_form_drain is not False and all(
-            cls.drain_safe for cls in pol_cls
-        )
+        # ---- Fault layer gate (inert with no schedule) ---------------- #
+        # With ``faults=None`` or an empty schedule, ``faults_on`` is
+        # False: no FAIL/HBEAT event is ever pushed and every fault
+        # branch below is dead, so the trajectory is bit-identical to a
+        # pre-fault-layer run (the legacy rtol-1e-9 pin and the policy
+        # digest pins stay green).
+        faults_on = self.faults is not None and len(self.faults.events) > 0
+        fcfg: Optional[FaultConfig] = None
+        if faults_on:
+            fcfg = (
+                self.fault_cfg if self.fault_cfg is not None
+                else default_sim_fault_config()
+            )
+        # Faults disable the closed-form drain: a crash after the last
+        # arrival invalidates the prefix-sum finish.
+        drain_on = self.closed_form_drain is not False and not faults_on \
+            and all(cls.drain_safe for cls in pol_cls)
         drained = False
         # Event telemetry (self.last_event_counts).
         tick_n = gtick_n = arrival_n = admitted_n = enq_n = done_n = 0
@@ -1017,9 +1062,17 @@ class MultiQuerySimulator:
         worker_active = [True] * n
         active_count = n
         if autoscale_on:
+            floor_w = max(self.autoscale.min_workers, 1)
+            if faults_on:
+                # Autoscale × failure guard: the commissioned pool may
+                # never be targeted below the fault layer's min_hosts
+                # (the _RESIZE handler additionally refuses to shrink
+                # the LIVE pool below it, and to decommission a worker
+                # that recovery traffic is in flight to).
+                floor_w = max(floor_w, fcfg.min_hosts)
             as_cfg = dataclasses.replace(
                 self.autoscale,
-                min_workers=min(max(self.autoscale.min_workers, 1), n),
+                min_workers=min(floor_w, n),
                 max_workers=min(self.autoscale.max_workers, n),
             )
             as_policy = AutoscalePolicy(as_cfg)
@@ -1033,6 +1086,72 @@ class MultiQuerySimulator:
         # the same flip points as the global census, never scanned.
         active_idle_count = active_count
         self.last_resizes = []
+
+        # ---- Fault-layer state (all inert when ``faults_on`` False) --- #
+        # Ground truth vs detection: ``worker_alive`` is physics (a dead
+        # interpreter serves nothing and its in-flight chunk is void);
+        # ``routable`` is what routing SEES — it flips at detection (the
+        # heartbeat/idle-time path), at a spot notice, or at straggler
+        # exclusion, never at the failure instant itself (no oracle).
+        worker_alive = [True] * n
+        routable = [True] * n
+        detected = [False] * n      # dead AND noticed (recovery ran)
+        excluded_str = [False] * n  # excluded as straggler (still alive)
+        speed_factor = [1.0] * n
+        nic_factor = [1.0] * c.num_nodes
+        # Generation counter: bumped when a worker dies so the _DONE its
+        # in-flight chunk already scheduled is recognized as a ghost.
+        worker_gen = [0] * n
+        # (service_start, costs, qids) of each worker's in-flight chunk —
+        # the rows a crash voids (recovered via re-execution, charged).
+        inflight: List[Optional[Tuple[float, np.ndarray,
+                                      Optional[np.ndarray]]]] = [None] * n
+        # Rows that died with a not-yet-detected worker, per worker:
+        # (tenant, costs) stashes awaiting detection or early rejoin.
+        dead_rows: List[List[Tuple[int, np.ndarray]]] = [
+            [] for _ in range(n)
+        ]
+        # Recovery lane: per-tenant queues of cost arrays pulled off dead
+        # /draining workers, re-admitted through fair share (charged).
+        fault_parked: List[Deque[np.ndarray]] = [deque() for _ in range(nq)]
+        fault_pending = 0
+        recovered_rows = [0] * nq    # ring-resident rows re-routed
+        reexecuted_rows = [0] * nq   # in-flight rows lost + re-executed
+        migrated_rows = [0] * nq     # straggler-drain migrations
+        wasted_service = 0.0         # partial service voided by deaths
+        transfer_retries = 0
+        retry_backoff_total = 0.0
+        retry_attempts = [0] * n     # per failed DESTINATION (backoff)
+        recovery_until = [0.0] * n   # recovery traffic in flight until t
+        shrink_blocked = 0           # satellite-1 guard trips (telemetry)
+        hb_busy = [0.0] * n          # service seconds since last HBEAT
+        hb_rows = [0] * n            # rows completed since last HBEAT
+        detections = straggler_excl = ghost_dones = 0
+        fail_n = notice_n = recover_n = hbeat_n = 0
+        mesh_log: List[Tuple[float, Tuple[int, int]]] = []
+        rt: Optional[FaultTolerantRuntime] = None
+        if faults_on:
+            rt = FaultTolerantRuntime(n, fcfg)
+        fs_retry_base = self.faults.retry_base if faults_on else 1e-3
+        fs_retry_cap = self.faults.retry_cap if faults_on else 1e-3
+        # Composed routing view: routable ∧ commissioned.  Only consulted
+        # when faults_on (policy closures hand it out late-bound).
+        routable_np = np.asarray(routable)
+        eligible_np = worker_active_np
+        eligible_ids = active_ids
+
+        def refresh_eligible() -> None:
+            nonlocal routable_np, eligible_np, eligible_ids
+            routable_np = np.asarray(routable)
+            eligible_np = routable_np & worker_active_np
+            ids = np.flatnonzero(eligible_np)
+            if not len(ids):
+                # Degenerate case (every commissioned worker is dead or
+                # draining): fall back to the commissioned pool — the
+                # transfers bounce with backoff until someone recovers.
+                eligible_np = worker_active_np
+                ids = np.flatnonzero(eligible_np)
+            eligible_ids = ids
 
         events: List[Tuple[float, int, int, int, int, object]] = []
         seq = 0
@@ -1064,9 +1183,27 @@ class MultiQuerySimulator:
             # First decision at the earliest arrival; the chain then
             # recurs every `interval` while any tenant is active.
             push(min(t.arrival for t in tenants), _RESIZE, 0, 0, None)
+        if faults_on and tenants:
+            # The whole schedule is data, pushed up front: the loop never
+            # draws a fault, so same schedule ⇒ same trajectory.
+            for fe in self.faults.events:
+                if fe.kind == PREEMPT:
+                    push(fe.time, _PREEMPT_NOTICE, 0, fe.worker, fe)
+                else:
+                    push(fe.time, _FAIL, 0, fe.worker, fe)
+            # Heartbeat chain (detection cadence); recurs while any
+            # tenant is active or recovery rows are pending.
+            push(
+                min(t.arrival for t in tenants) + fcfg.heartbeat_interval,
+                _HBEAT, 0, 0, None,
+            )
 
         def start_worker(w: int, now: float):
             if worker_running[w]:
+                return
+            if faults_on and not worker_alive[w]:
+                # A dead worker's ring freezes where it stands; recovery
+                # (detection or early rejoin) decides what happens to it.
                 return
             ring = rings[w]
             if ring.tail == ring.head:
@@ -1078,12 +1215,29 @@ class MultiQuerySimulator:
             # chaotically through routing decisions).
             total = sum(chunk.tolist())
             if qids is None:
-                payload = (total, len(chunk), None, None)
+                counts = totals = None
             else:
                 counts = np.bincount(qids, minlength=nq)
                 # bincount accumulates weights in index order — the same
                 # sequential float additions as the single-tenant sum.
                 totals = np.bincount(qids, weights=chunk, minlength=nq)
+            if faults_on:
+                fac = speed_factor[w]
+                if fac != 1.0:
+                    # Transient slowdown: the chunk serves fac× slower;
+                    # the stretch is billed as real busy time (it is
+                    # spend) and is what the sync-slope detector sees.
+                    total = total * fac
+                    if totals is not None:
+                        totals = totals * fac
+                # pop() hands out views into the ring buffer; the stash
+                # must survive later pushes (compaction), so copy.
+                inflight[w] = (
+                    now, chunk.copy(),
+                    None if qids is None else qids.copy(),
+                )
+                payload = (total, len(chunk), counts, totals, worker_gen[w])
+            else:
                 payload = (total, len(chunk), counts, totals)
             worker_running[w] = True
             push(now + total, _DONE, 0, w, payload)
@@ -1124,12 +1278,21 @@ class MultiQuerySimulator:
                 est_row_cost=lambda: est_row_cost[q],
                 outstanding=lambda: outstanding[q],
                 idle_sibling_frac=siblings_idle_frac,
+                # Under faults the composed view (commissioned ∧ routable)
+                # replaces the plain autoscale mask, so every mask-aware
+                # policy routes around dead/draining workers for free.
                 active_mask=(
-                    (lambda: worker_active_np) if autoscale_on
+                    (lambda: eligible_np) if faults_on
+                    else (lambda: worker_active_np) if autoscale_on
                     else (lambda: None)
                 ),
                 active_ids=(
-                    (lambda: active_ids) if autoscale_on
+                    (lambda: eligible_ids) if faults_on
+                    else (lambda: active_ids) if autoscale_on
+                    else (lambda: None)
+                ),
+                live_mask=(
+                    (lambda: routable_np) if faults_on
                     else (lambda: None)
                 ),
             )
@@ -1161,7 +1324,19 @@ class MultiQuerySimulator:
                 # guard → proposal over the masked backlog → cost gate).
                 dests = policies[q].route(p, b, now)
 
-            if dests is None and autoscale_on and not worker_active[p]:
+            if dests is None and faults_on and not (
+                routable[p] and worker_active[p]
+            ):
+                # Dead/draining/excluded (or decommissioned) producer:
+                # its scan re-targets the least-backlogged ELIGIBLE
+                # worker — one grouped transfer, priced like any
+                # redistribution.  Subsumes the autoscale redirect below
+                # when the fault layer is active.
+                d = int(eligible_ids[
+                    int(np.argmin(np.asarray(out_q)[eligible_ids]))
+                ])
+                dests = np.full(b.num_rows, d, np.int64)
+            elif dests is None and autoscale_on and not worker_active[p]:
                 # Decommissioned producer worker: its scan re-targets the
                 # least-backlogged active worker (one grouped transfer, so
                 # the IPC/NIC cost below is priced like any redistribution).
@@ -1205,10 +1380,16 @@ class MultiQuerySimulator:
                         nf = nic_free_at[src_node]
                         start = now if now > nf else nf
                         occupy = nbytes / net_bw
+                        if faults_on and nic_factor[src_node] != 1.0:
+                            # Degraded uplink: occupancy stretches.
+                            occupy = occupy * nic_factor[src_node]
                         nic_free_at[src_node] = start + occupy
                         arrive = start + occupy + net_lat + nrows * ser
                     else:
-                        arrive = now + net_lat + nbytes / net_bw + nrows * ser
+                        bw_t = nbytes / net_bw
+                        if faults_on and nic_factor[src_node] != 1.0:
+                            bw_t = bw_t * nic_factor[src_node]
+                        arrive = now + net_lat + bw_t + nrows * ser
                 elif d == p:
                     arrive = now + nrows * ser
                 else:
@@ -1334,7 +1515,11 @@ class MultiQuerySimulator:
                 # Flow control: pace against the least-backlogged valid
                 # destination (own consumer when routing locally).
                 if policies[q].paces_spread(p):
-                    if autoscale_on:
+                    if faults_on:
+                        # Dead/draining workers' frozen backlogs must not
+                        # release the window (pace on eligible only).
+                        bl = min(outstanding[q][w] for w in eligible_ids)
+                    elif autoscale_on:
                         bl = min(outstanding[q][w] for w in active_ids)
                     else:
                         bl = min(outstanding[q])
@@ -1510,6 +1695,128 @@ class MultiQuerySimulator:
                     if last_done[q] <= deadlines[q]:
                         slo_met += 1
 
+        # ---- Fault-layer recovery helpers (faults_on only) ------------ #
+
+        def park_recovery(q: int, costs: np.ndarray,
+                          bucket: List[int]) -> None:
+            nonlocal fault_pending
+            k = len(costs)
+            if not k:
+                return
+            fault_parked[q].append(costs)
+            fault_pending += k
+            bucket[q] += k
+
+        def drain_ring(w: int, bucket: List[int], refund: bool) -> None:
+            """Pull every queued row off worker ``w``'s ring into the
+            recovery lane.  The ring IS the row-level lineage here: its
+            FIFO segments are exactly the rows the lineage lane last
+            placed on ``w`` (per-row tenant ids in the qid lane), so
+            recovery re-reads them instead of re-running the query.  The
+            producer-visible backlog rolls back and the planner retires
+            the rows from its in-service ledger (``on_lost``; refunded
+            only when the SYSTEM displaced them — straggler migration)."""
+            ring = rings[w]
+            if ring.tail == ring.head:
+                return
+            costs = ring.buf[ring.head:ring.tail].copy()
+            qarr = (
+                ring.qbuf[ring.head:ring.tail].copy()
+                if ring.qbuf is not None else None
+            )
+            ring.head = ring.tail
+            if qarr is None:
+                groups_r = ((0, costs),)
+            else:
+                groups_r = tuple(
+                    (int(q2), costs[qarr == q2]) for q2 in np.unique(qarr)
+                )
+            for q2, cq in groups_r:
+                kk = len(cq)
+                left = outstanding[q2][w] - kk
+                outstanding[q2][w] = left if left > 0.0 else 0.0
+                if planner is not None:
+                    planner.on_lost(q2, kk, refund=refund)
+                park_recovery(q2, cq, bucket)
+
+        def void_dead_rows(w: int) -> None:
+            """Recover the stashes that died with worker ``w`` (its lost
+            in-flight chunk): retire from the ledger WITHOUT refund — the
+            spend happened — and park for charged re-execution."""
+            for q2, cq in dead_rows[w]:
+                kk = len(cq)
+                left = outstanding[q2][w] - kk
+                outstanding[q2][w] = left if left > 0.0 else 0.0
+                if planner is not None:
+                    planner.on_lost(q2, kk, refund=False)
+                park_recovery(q2, cq, reexecuted_rows)
+            dead_rows[w].clear()
+
+        def inject_recovered(now: float) -> None:
+            """Re-admit fault-parked rows through fair share — charged,
+            not free (the retry debt) — and route each granted segment to
+            the least-backlogged eligible worker, paying the lineage
+            re-fetch as a normal transfer."""
+            nonlocal fault_pending
+            progress = True
+            while progress and fault_pending:
+                progress = False
+                order = (
+                    planner.release_order() if planner is not None
+                    else range(nq)
+                )
+                for q in order:
+                    fq = fault_parked[q]
+                    while fq:
+                        costs = fq[0]
+                        kk = len(costs)
+                        if planner is not None and not planner.try_readmit(
+                            q, kk, deadline=deadlines[q], now=now
+                        ):
+                            break
+                        fq.popleft()
+                        fault_pending -= kk
+                        d = int(eligible_ids[int(np.argmin(
+                            np.asarray(outstanding[q])[eligible_ids]
+                        ))])
+                        outstanding[q][d] += kk
+                        arrive = now + net_lat + kk * ser
+                        if arrive > recovery_until[d]:
+                            # Satellite-1 guard input: autoscale must not
+                            # decommission ``d`` while this is in flight.
+                            recovery_until[d] = arrive
+                        push(arrive, _ENQUEUE, q, d, costs)
+                        progress = True
+
+        def census_idle_if_empty(w: int) -> None:
+            """Restore the idle-census invariant for ``w`` after a
+            recovery/migration emptied its ring (a dead worker is never
+            counted idle; see the _FAIL handler)."""
+            nonlocal idle_count, active_idle_count
+            if (
+                not worker_running[w] and not worker_idle[w]
+                and rings[w].tail == rings[w].head
+            ):
+                worker_idle[w] = True
+                idle_count += 1
+                if autoscale_on and worker_active[w]:
+                    active_idle_count += 1
+
+        def detect_dead(w: int, now: float) -> None:
+            """The detection moment for a dead worker: exclude it from
+            routing, drain its frozen ring and its voided in-flight rows
+            through the recovery lane, remesh the survivors."""
+            nonlocal detections
+            detected[w] = True
+            routable[w] = False
+            detections += 1
+            rt.exclude([w])
+            mesh_log.append((now, rt.mesh_shape()))
+            refresh_eligible()
+            drain_ring(w, recovered_rows, refund=False)
+            void_dead_rows(w)
+            inject_recovered(now)
+
         now = 0.0
         while events:
             now, _, kind, qid, who, payload = heappop(events)
@@ -1521,6 +1828,31 @@ class MultiQuerySimulator:
                 # heap event — identical trajectory, one pop; a classic
                 # event is the one-segment case of the same body.
                 segs = payload if type(payload) is list else ((qid, payload),)
+                if faults_on and not routable[w]:
+                    # Transfer landed on a dead/draining/excluded
+                    # destination: the sender retries against the
+                    # least-backlogged eligible worker after a capped
+                    # exponential backoff (attempts per failed dest).
+                    att = retry_attempts[w]
+                    retry_attempts[w] = att + 1
+                    delay = min(
+                        fs_retry_base * (2.0 ** min(att, 20)),
+                        fs_retry_cap,
+                    )
+                    for q, seg in segs:
+                        kk = len(seg)
+                        if not kk:
+                            continue
+                        d = int(eligible_ids[int(np.argmin(
+                            np.asarray(outstanding[q])[eligible_ids]
+                        ))])
+                        left = outstanding[q][w] - kk
+                        outstanding[q][w] = left if left > 0.0 else 0.0
+                        outstanding[q][d] += kk
+                        transfer_retries += 1
+                        retry_backoff_total += delay
+                        push(now + delay, _ENQUEUE, q, d, seg)
+                    continue
                 for q, seg in segs:
                     # A zero-row segment leaves (ring, running) — and
                     # hence idleness — unchanged.
@@ -1534,9 +1866,22 @@ class MultiQuerySimulator:
                     if not worker_running[w]:
                         start_worker(w, now)
             elif kind == _DONE:
-                done_n += 1
                 w = who
-                total, nrows, counts, totals = payload
+                if faults_on:
+                    total, nrows, counts, totals, gen = payload
+                    if gen != worker_gen[w]:
+                        # Ghost completion: the chunk died with its
+                        # worker before this _DONE fired.  Nothing is
+                        # billed — the rows recover via the dead-row
+                        # stash, never here.
+                        ghost_dones += 1
+                        continue
+                    inflight[w] = None
+                    hb_busy[w] += total
+                    hb_rows[w] += nrows
+                else:
+                    total, nrows, counts, totals = payload
+                done_n += 1
                 if counts is None:
                     # N=1 specialization: no per-tenant split needed.
                     busy[0][w] += total
@@ -1582,14 +1927,22 @@ class MultiQuerySimulator:
                         planner.on_complete(q, cnt)
                         if not active_flag[q]:
                             planner.deactivate(q)
+                    if faults_on and fault_pending:
+                        # Fresh credit: recovery rows re-enter ahead of
+                        # parked batches (they were already in service).
+                        inject_recovered(now)
                     release_parked(now)
+                elif faults_on and fault_pending:
+                    inject_recovered(now)
             elif kind == _ARRIVAL or kind == _ADMITTED:
-                # Under autoscale, arrivals route strictly one at a time:
-                # the coalesced run's phase-1 shadow cannot see the
-                # decommissioned-producer redirect (it credits kept-local
-                # rows to the inactive worker), so the batched plan would
-                # diverge from pop-order routing.
-                if not autoscale_on and events and events[0][0] == now and (
+                # Under autoscale (and under faults, same reason with the
+                # dead-producer redirect), arrivals route strictly one at
+                # a time: the coalesced run's phase-1 shadow cannot see
+                # the decommissioned-producer redirect (it credits
+                # kept-local rows to the inactive worker), so the batched
+                # plan would diverge from pop-order routing.
+                if not autoscale_on and not faults_on and events and \
+                        events[0][0] == now and (
                     events[0][2] in (_ARRIVAL, _ADMITTED)
                 ):
                     # A maximal run of same-instant arrivals: route them
@@ -1655,17 +2008,192 @@ class MultiQuerySimulator:
                                     if worker_idle[w]:
                                         active_idle_count += 1
                         else:
+                            if faults_on:
+                                live_active = sum(
+                                    1 for w2 in range(n)
+                                    if worker_active[w2]
+                                    and worker_alive[w2] and routable[w2]
+                                )
                             for w in range(n - 1, -1, -1):
                                 if active_count <= target:
                                     break
                                 if worker_active[w]:
+                                    if faults_on:
+                                        live_w = (
+                                            worker_alive[w] and routable[w]
+                                        )
+                                        if now < recovery_until[w] or (
+                                            live_w and
+                                            live_active <= fcfg.min_hosts
+                                        ):
+                                            # Scale-down × failure guard:
+                                            # never decommission a worker
+                                            # mid-recovery (rows in
+                                            # flight to it) and never
+                                            # shrink the LIVE pool below
+                                            # min_hosts — crashes may
+                                            # have already eaten into it.
+                                            shrink_blocked += 1
+                                            continue
+                                        if live_w:
+                                            live_active -= 1
                                     worker_active[w] = False
                                     active_count -= 1
                                     if worker_idle[w]:
                                         active_idle_count -= 1
                         worker_active_np = np.asarray(worker_active)
                         active_ids = np.flatnonzero(worker_active_np)
+                        if faults_on:
+                            refresh_eligible()
                     push(now + as_policy.cfg.interval, _RESIZE, 0, 0, None)
+            elif kind == _FAIL:
+                fail_n += 1
+                fe = payload
+                w = who
+                if fe.kind == NIC_DEGRADE:
+                    # ``worker`` names a NODE for NIC events.
+                    nic_factor[w] = fe.factor
+                    if fe.duration < float("inf"):
+                        push(now + fe.duration, _RECOVER, 0, w, fe)
+                elif fe.kind == SLOWDOWN:
+                    if worker_alive[w]:
+                        speed_factor[w] = fe.factor
+                        if fe.duration < float("inf"):
+                            push(now + fe.duration, _RECOVER, 0, w, fe)
+                elif worker_alive[w]:
+                    # Crash, or the announced end of a spot drain: the
+                    # worker is gone.  Its in-flight chunk is void (the
+                    # already-scheduled _DONE becomes a ghost via the
+                    # generation bump, the partial service is wasted
+                    # spend) and its queue freezes until detection.
+                    worker_alive[w] = False
+                    if worker_running[w]:
+                        t_start, chunk, qarr = inflight[w]
+                        wasted_service += now - t_start
+                        worker_gen[w] += 1
+                        worker_running[w] = False
+                        inflight[w] = None
+                        if qarr is None:
+                            dead_rows[w].append((0, chunk))
+                        else:
+                            for q2 in np.unique(qarr):
+                                q2 = int(q2)
+                                dead_rows[w].append((q2, chunk[qarr == q2]))
+                    if worker_idle[w]:
+                        # Dead ⇒ not idle: it must not count as an idle
+                        # sibling nor as spare capacity.
+                        worker_idle[w] = False
+                        idle_count -= 1
+                        if autoscale_on and worker_active[w]:
+                            active_idle_count -= 1
+                    if fe.kind == PREEMPT:
+                        # The drain was ANNOUNCED — no heartbeat wait:
+                        # whatever the instance could not finish inside
+                        # the notice window recovers right now.
+                        detect_dead(w, now)
+                    if fe.duration < float("inf"):
+                        push(now + fe.duration, _RECOVER, 0, w, fe)
+            elif kind == _PREEMPT_NOTICE:
+                notice_n += 1
+                fe = payload
+                w = who
+                if worker_alive[w] and routable[w]:
+                    # Spot notice: no new rows from this instant; the
+                    # instance keeps draining its queue until the pull.
+                    routable[w] = False
+                    refresh_eligible()
+                push(now + fe.notice, _FAIL, 0, w, fe)
+            elif kind == _RECOVER:
+                recover_n += 1
+                fe = payload
+                w = who
+                if fe.kind == NIC_DEGRADE:
+                    nic_factor[w] = 1.0
+                elif fe.kind == SLOWDOWN:
+                    speed_factor[w] = 1.0
+                    if excluded_str[w]:
+                        # The slowdown that got this worker excluded as a
+                        # straggler is over: rejoin mesh and routing.
+                        excluded_str[w] = False
+                        routable[w] = True
+                        rt.rejoin(w, now)
+                        mesh_log.append((now, rt.mesh_shape()))
+                        refresh_eligible()
+                elif not worker_alive[w]:
+                    # Replacement instance (spot rebalance / restart)
+                    # takes the dead worker's slot.
+                    worker_alive[w] = True
+                    if not detected[w]:
+                        # Back BEFORE detection: the frozen queue simply
+                        # resumes, but the chunk that died still
+                        # re-executes (charged — the spend happened).
+                        void_dead_rows(w)
+                    else:
+                        detected[w] = False
+                        routable[w] = True
+                        rt.rejoin(w, now)
+                        mesh_log.append((now, rt.mesh_shape()))
+                        refresh_eligible()
+                    start_worker(w, now)
+                    census_idle_if_empty(w)
+                    if fault_pending:
+                        inject_recovered(now)
+            elif kind == _HBEAT:
+                hbeat_n += 1
+                # Virtual-time heartbeats: live workers report their mean
+                # per-row service time over the window (idle workers echo
+                # the fleet mean — no signal, no skew); dead workers stay
+                # silent, so the runtime's idle-time model flags them
+                # after ``missed_beats_dead`` quiet windows.  Straggler
+                # flags come from the N-strikes sync-slope model — THE
+                # detection path; the engine never short-circuits either
+                # with ground truth.
+                served = [
+                    w2 for w2 in range(n)
+                    if worker_alive[w2] and hb_rows[w2] > 0
+                ]
+                fleet = (
+                    sum(hb_busy[w2] / hb_rows[w2] for w2 in served)
+                    / len(served) if served else 0.0
+                )
+                for w2 in range(n):
+                    if worker_alive[w2]:
+                        step = (
+                            hb_busy[w2] / hb_rows[w2] if hb_rows[w2] > 0
+                            else fleet
+                        )
+                        rt.heartbeat(w2, now, step)
+                    hb_busy[w2] = 0.0
+                    hb_rows[w2] = 0
+                det = rt.tick(now)
+                for h in det["failed"]:
+                    if not worker_alive[h] and not detected[h]:
+                        detect_dead(h, now)
+                for h in det["stragglers"]:
+                    if (
+                        worker_alive[h] and routable[h]
+                        and int(eligible_np.sum()) - 1 >= fcfg.min_hosts
+                    ):
+                        # N-strikes straggler: exclude from routing,
+                        # migrate its queued (unstarted) rows.  Its
+                        # in-flight chunk finishes — nothing is lost —
+                        # so the planner REFUNDS the migrated rows'
+                        # charge (the system chose this displacement;
+                        # contrast the crash path's retry debt).
+                        excluded_str[h] = True
+                        routable[h] = False
+                        straggler_excl += 1
+                        rt.exclude([h])
+                        mesh_log.append((now, rt.mesh_shape()))
+                        refresh_eligible()
+                        drain_ring(h, migrated_rows, refund=True)
+                        census_idle_if_empty(h)
+                if fault_pending:
+                    inject_recovered(now)
+                if any(active_flag) or fault_pending:
+                    push(
+                        now + fcfg.heartbeat_interval, _HBEAT, 0, 0, None
+                    )
             elif kind == _TICK:
                 tick_n += 1
                 q = qid
@@ -1992,8 +2520,17 @@ class MultiQuerySimulator:
             "preempted_rows": int(sum(preempted_rows)),
             "heap_events": (
                 tick_n + gtick_n + arrival_n + admitted_n + enq_n + done_n
-                + resize_n
+                + resize_n + fail_n + notice_n + recover_n + hbeat_n
             ),
+            "fail": fail_n,
+            "preempt_notice": notice_n,
+            "recover": recover_n,
+            "hbeat": hbeat_n,
+            "ghost_dones": ghost_dones,
+            "recovered_rows": int(sum(recovered_rows)),
+            "reexecuted_rows": int(sum(reexecuted_rows)),
+            "migrated_rows": int(sum(migrated_rows)),
+            "transfer_retries": transfer_retries,
             "arrival_runs_coalesced": arrival_runs,
             "arrivals_in_runs": arrivals_in_runs,
             "enqueues_coalesced": enq_coalesced,
@@ -2003,6 +2540,25 @@ class MultiQuerySimulator:
             "drained_heap_events": drained_events,
             "drained_chunks": drained_chunks,
             "drained_ticks": drained_ticks,
+        }
+        self.last_fault_stats = {
+            "enabled": faults_on,
+            "injected": (
+                self.faults.injected_counts() if faults_on else {}
+            ),
+            "detections": detections,
+            "straggler_exclusions": straggler_excl,
+            "recovered_rows": list(recovered_rows),
+            "reexecuted_rows": list(reexecuted_rows),
+            "migrated_rows": list(migrated_rows),
+            "unrecovered_rows": int(fault_pending),
+            "wasted_service_s": float(wasted_service),
+            "transfer_retries": transfer_retries,
+            "retry_backoff_s": float(retry_backoff_total),
+            "ghost_dones": ghost_dones,
+            "shrink_blocked_mid_recovery": shrink_blocked,
+            "mesh_log": list(mesh_log),
+            "runtime_events": list(rt.events) if rt is not None else [],
         }
 
         results: List[QueryResult] = []

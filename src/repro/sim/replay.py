@@ -468,6 +468,7 @@ def summarize_open_loop(
     tenants: Sequence[TenantQuery],
     results: Sequence[QueryResult],
     cluster: ClusterConfig,
+    fault_stats: Optional[Dict[str, object]] = None,
 ) -> Dict[str, object]:
     """Aggregate an open-loop run into the numbers the multi-tenant bench
     reports: per-class latency percentiles (p50/p99/p999) + mean
@@ -475,7 +476,15 @@ def summarize_open_loop(
     (latency / perfectly-balanced ideal; equal slowdowns = fair), and —
     for tenants that declare an `slo_target` — per-class SLO attainment
     (fraction of completed queries whose latency met the deadline) and
-    p99 tardiness (seconds past the deadline, 0 when met)."""
+    p99 tardiness (seconds past the deadline, 0 when met).
+
+    Honest economics: ``worker_seconds_spent`` is every second a worker
+    was busy — including service voided by a crash (from
+    ``fault_stats['wasted_service_s']`` when supplied) and the charged
+    re-execution after it — and ``cost_per_slo`` divides that spend by
+    the SLO-met count, so a policy that buys attainment by burning
+    workers is visible on the frontier next to one that meets the same
+    deadlines cheaply."""
     classes: Dict[str, List[Tuple[float, float]]] = {}
     # Per class: met flags (incl. never-completed = missed) and the
     # tardiness samples of COMPLETED queries only.
@@ -537,6 +546,16 @@ def summarize_open_loop(
                 float(np.percentile(np.array(sb["tard"]), 99))
                 if sb["tard"] else nan
             )
+    # Worker-seconds actually spent: useful service billed to every
+    # tenant, plus (with faults) the partial service crashes voided —
+    # re-executed rows bill their second pass through per_worker_busy,
+    # so wasted + billed is the true spend, never double-counted.
+    worker_seconds = float(sum(
+        float(np.asarray(r.per_worker_busy).sum())
+        for r in results if r is not None
+    ))
+    if fault_stats is not None:
+        worker_seconds += float(fault_stats.get("wasted_service_s", 0.0))
     return {
         "per_class": per_class,
         "jain": jain_fairness(slowdowns),
@@ -545,6 +564,12 @@ def summarize_open_loop(
             if any(r is not None for r in results) else nan
         ),
         "slo_attainment": (slo_met / slo_total) if slo_total else nan,
+        "slo_met_count": slo_met,
+        "worker_seconds_spent": worker_seconds,
+        # Spend per met SLO (inf when nothing met): the frontier metric.
+        "cost_per_slo": (
+            worker_seconds / slo_met if slo_met else float("inf")
+        ),
     }
 
 
@@ -565,6 +590,8 @@ def run_open_loop(
     deadline_cfg: Optional["DeadlineConfig"] = None,
     preemption: bool = False,
     autoscale: Optional["AutoscaleConfig"] = None,
+    faults: Optional["FaultSchedule"] = None,
+    fault_cfg: Optional["FaultConfig"] = None,
     sim_seed: int = 0,
 ) -> Dict[str, object]:
     """One open-loop scenario end to end: materialize the arrival stream,
@@ -591,14 +618,18 @@ def run_open_loop(
         none_closed_form=none_closed_form,
         closed_form_drain=closed_form_drain,
         deadline_aware=deadline_aware, deadline_cfg=deadline_cfg,
-        preemption=preemption, autoscale=autoscale, seed=sim_seed,
+        preemption=preemption, autoscale=autoscale,
+        faults=faults, fault_cfg=fault_cfg, seed=sim_seed,
     )
     results = sim.run(tenants)
-    out = summarize_open_loop(tenants, results, cluster)
+    out = summarize_open_loop(
+        tenants, results, cluster, fault_stats=sim.last_fault_stats
+    )
     out["tenants"] = tenants
     out["results"] = results
     out["event_counts"] = dict(sim.last_event_counts)
     out["resizes"] = list(sim.last_resizes)
+    out["fault_stats"] = dict(sim.last_fault_stats)
     return out
 
 

@@ -437,6 +437,46 @@ def slo_suite(
     return out
 
 
+def faults_suite(
+    seed: int = 73,
+) -> List[Tuple[QueryProfile, float, Optional[float]]]:
+    """SLO classes for the fault-injection economics study
+    (`bench_multi_tenant.py --faults`): the same gold/silver/bulk shape
+    as :func:`slo_suite` but drawn from its own seed, sized so that a
+    worker crash mid-run voids a visible slice of in-service rows.  The
+    study crosses these tenants with `sim.faults.hazard_schedule`
+    failure rates to trace cost-per-SLO — worker-seconds spent (wasted
+    + re-executed service included) per deadline met — across
+    policies × failure rates × autoscale on/off.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[Tuple[QueryProfile, float, Optional[float]]] = []
+    for i in range(3):
+        out.append((QueryProfile(
+            name="gold",
+            n_rows=int(rng.integers(900, 1_500)),
+            mean_row_cost=float(10 ** rng.uniform(-3.4, -3.1)),
+            cost_sigma=float(rng.uniform(0.3, 0.5)),
+        ), 4.0, 0.6))
+    for i in range(2):
+        out.append((QueryProfile(
+            name="silver",
+            n_rows=int(rng.integers(2_000, 3_200)),
+            mean_row_cost=float(10 ** rng.uniform(-3.2, -2.9)),
+            cost_sigma=float(rng.uniform(0.4, 0.7)),
+        ), 2.0, 2.5))
+    for i in range(2):
+        out.append((QueryProfile(
+            name="bulk",
+            n_rows=int(rng.integers(3_500, 6_000)),
+            mean_row_cost=float(10 ** rng.uniform(-3.0, -2.6)),
+            cost_sigma=float(rng.uniform(0.9, 1.5)),
+            partition_alpha=float(rng.uniform(0.6, 1.2)),
+            hot_fraction=float(rng.uniform(0.10, 0.25)),
+        ), 1.0, None))
+    return out
+
+
 def priority_class_suite(seed: int = 61) -> List[Tuple[QueryProfile, float]]:
     """Two priority classes for the open-loop fair-share scenario:
 

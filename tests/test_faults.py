@@ -1,0 +1,450 @@
+"""Fault-injection invariant suite: the deterministic fault layer must
+(1) take NOT ONE new branch when the schedule is empty — a faults-off
+run and a `faults=None` run are bit-identical, so the legacy rtol-1e-9
+equivalence chain and the PR 6/7 digest pins are untouched; (2) conserve
+every injected row under crashes/preemptions — a row completes exactly
+once, with voided partial service billed to `wasted_service_s`, never
+double-counted into busy; (3) replay bit-for-bit under the same seed,
+fault statistics included; and (4) never let autoscale shrink the live
+pool below `FaultConfig.min_hosts` or decommission a worker
+mid-recovery.
+
+Pinned twice, like the pipeline suite: a deterministic parametrized
+grid that ALWAYS runs in tier-1, and a hypothesis fuzz layer over the
+same checkers when the optional dev dependency is installed."""
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency
+    hypothesis = None
+
+from repro.core.admission import (
+    AutoscaleConfig,
+    DeadlineConfig,
+    FairShareConfig,
+)
+from repro.runtime.fault_tolerance import FaultConfig
+from repro.sim.engine import ClusterConfig, MultiQuerySimulator, TenantQuery
+from repro.sim.faults import (
+    CRASH,
+    FAULT_KINDS,
+    NIC_DEGRADE,
+    PREEMPT,
+    SLOWDOWN,
+    FaultEvent,
+    FaultSchedule,
+    hazard_schedule,
+)
+from repro.sim.replay import dyskew_strategy, scan_arrival_gap
+from repro.sim.workload import QueryProfile, generate_query
+
+FS = FairShareConfig(quantum_rows=64.0, heavy_row_bytes=1e6)
+# Tight virtual-time detection cadence so short test runs still detect.
+FCFG = FaultConfig(heartbeat_interval=0.02, missed_beats_dead=2,
+                   n_strikes=3, slope_window=8, min_hosts=2)
+
+
+def _tenants(cluster, n_tenants=3, n_rows=800, seed=3, weights=None,
+             slos=None):
+    prof = QueryProfile(
+        name="t", n_rows=n_rows, mean_row_cost=1.2e-3, cost_sigma=0.8,
+        partition_alpha=0.6, hot_fraction=0.1,
+    )
+    gap = scan_arrival_gap(prof, cluster)
+    weights = weights or [1.0] * n_tenants
+    slos = slos or [None] * n_tenants
+    return [
+        TenantQuery(
+            f"t{i}", generate_query(prof, cluster.num_workers, seed=seed + i),
+            dyskew_strategy(prof), 0.02 * i, gap, weight=w, slo_target=s,
+        )
+        for i, (w, s) in enumerate(zip(weights, slos))
+    ]
+
+
+def _total_cost(t: TenantQuery) -> float:
+    return sum(float(b.costs.sum()) for s in t.streams for b in s)
+
+
+def _run(tenants, cluster, faults=None, **kw):
+    sim = MultiQuerySimulator(cluster, fair_share=FS, faults=faults,
+                              fault_cfg=FCFG if faults else None, **kw)
+    return sim, sim.run(tenants)
+
+
+def _snapshot(results, stats):
+    """Everything a same-seed rerun must reproduce bit-for-bit."""
+    return (
+        tuple(r.latency for r in results),
+        tuple(tuple(np.asarray(r.per_worker_busy)) for r in results),
+        tuple(r.rows_redistributed for r in results),
+        repr(stats),
+    )
+
+
+# ------------------------------------------------------------------ #
+# Checkers (shared by the deterministic grid and the fuzz layer)
+# ------------------------------------------------------------------ #
+
+def check_empty_schedule_bit_neutral(seed):
+    """`faults=FaultSchedule()` takes the same trajectory as
+    `faults=None` — exact array equality, not a tolerance."""
+    cluster = ClusterConfig(num_nodes=2)
+    base_sim, base = _run(_tenants(cluster, seed=seed), cluster)
+    sim, out = _run(_tenants(cluster, seed=seed), cluster,
+                    faults=FaultSchedule())
+    assert sim.last_fault_stats["enabled"] is False
+    for a, b in zip(base, out):
+        assert a.latency == b.latency
+        assert np.array_equal(a.per_worker_busy, b.per_worker_busy)
+        assert a.rows_redistributed == b.rows_redistributed
+
+
+def check_crash_conservation(schedule, seed, cluster=None):
+    """Under crash/preempt faults every row's service lands in busy
+    EXACTLY once: per-tenant busy time equals the tenant's hidden total
+    row cost to float equality (voided partial service is billed to
+    wasted_service_s, re-execution replaces — not duplicates — it)."""
+    cluster = cluster or ClusterConfig(num_nodes=2)
+    tenants = _tenants(cluster, seed=seed)
+    sim, out = _run(tenants, cluster, faults=schedule)
+    stats = sim.last_fault_stats
+    assert stats["enabled"]
+    assert stats["unrecovered_rows"] == 0
+    for t, r in zip(tenants, out):
+        assert float(np.asarray(r.per_worker_busy).sum()) == pytest.approx(
+            _total_cost(t), rel=1e-9
+        )
+    return sim, out
+
+
+def check_same_seed_bit_identity(schedule, seed):
+    cluster = ClusterConfig(num_nodes=2)
+
+    def go():
+        sim, out = _run(_tenants(cluster, seed=seed), cluster,
+                        faults=schedule, deadline_aware=True,
+                        deadline_cfg=DeadlineConfig())
+        return _snapshot(out, sim.last_fault_stats)
+
+    assert go() == go()
+
+
+def check_hazard_run(seed, slowdown=False):
+    """Full-stack run under a seeded hazard draw: everything recovered,
+    same-seed bit identity, and (crash/preempt-only draws) exact busy
+    conservation."""
+    cluster = ClusterConfig(num_nodes=2)
+    n = cluster.num_workers
+    sched = hazard_schedule(
+        seed=seed, num_workers=n, num_nodes=cluster.num_nodes,
+        horizon=1.5, crash_rate=3.0, preempt_rate=3.0,
+        slowdown_rate=2.0 if slowdown else 0.0, mttr=0.3,
+        min_live=max(2, n // 2),
+    )
+    tenants = _tenants(cluster, seed=seed)
+    sim, out = _run(tenants, cluster, faults=sched)
+    stats = sim.last_fault_stats
+    assert stats["unrecovered_rows"] == 0
+    if not slowdown:
+        # Slowdown inflates billed busy (honest spend), so the exact
+        # busy==cost identity only holds for crash/preempt-only draws.
+        for t, r in zip(tenants, out):
+            assert float(np.asarray(r.per_worker_busy).sum()) == (
+                pytest.approx(_total_cost(t), rel=1e-9)
+            )
+    sim2, out2 = _run(_tenants(cluster, seed=seed), cluster, faults=sched)
+    assert _snapshot(out, stats) == _snapshot(out2, sim2.last_fault_stats)
+
+
+# ------------------------------------------------------------------ #
+# Deterministic grid (always runs in tier-1)
+# ------------------------------------------------------------------ #
+
+class TestEmptyScheduleNeutral:
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_empty_schedule_is_bit_neutral(self, seed):
+        check_empty_schedule_bit_neutral(seed)
+
+
+class TestRowConservation:
+    def test_single_crash_conserves_rows(self):
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.05, kind=CRASH, worker=1),
+        ))
+        sim, _ = check_crash_conservation(sched, seed=3)
+        assert sim.last_fault_stats["detections"] >= 1
+        assert sum(sim.last_fault_stats["recovered_rows"]) > 0
+
+    def test_crash_with_repair_conserves_rows(self):
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.05, kind=CRASH, worker=2, duration=0.2),
+            FaultEvent(time=0.08, kind=CRASH, worker=5, duration=0.3),
+        ))
+        check_crash_conservation(sched, seed=7)
+
+    def test_preemption_with_notice_conserves_rows(self):
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.04, kind=PREEMPT, worker=0, notice=0.02,
+                       duration=0.25),
+            FaultEvent(time=0.10, kind=PREEMPT, worker=3, notice=0.02,
+                       duration=0.25),
+        ))
+        check_crash_conservation(sched, seed=5)
+
+    def test_retry_backoff_path_conserves_rows(self):
+        """Slow network + simultaneous preemption notices: transfers
+        take ~60ms, so sends routed BEFORE a notice (which flips
+        routable instantly) land on a draining worker and must bounce —
+        the capped exponential backoff retries must still land every
+        row exactly once."""
+        cluster = ClusterConfig(num_nodes=2, interpreters_per_node=4,
+                                network_latency=0.06)
+        prof = QueryProfile(
+            name="t", n_rows=1200, mean_row_cost=1e-3, cost_sigma=0.8,
+            partition_alpha=0.8, hot_fraction=0.2,
+        )
+        tenants = [TenantQuery(
+            "t", generate_query(prof, cluster.num_workers, seed=11),
+            dyskew_strategy(prof), 0.0, 1e-4,
+        )]
+        sched = FaultSchedule(events=tuple(
+            FaultEvent(time=0.03, kind=PREEMPT, worker=w, notice=0.02,
+                       duration=0.5)
+            for w in (4, 5, 6)
+        ))
+        sim = MultiQuerySimulator(cluster, faults=sched, fault_cfg=FCFG)
+        out = sim.run(tenants)
+        stats = sim.last_fault_stats
+        assert stats["transfer_retries"] > 0
+        assert stats["retry_backoff_s"] > 0.0
+        assert stats["unrecovered_rows"] == 0
+        busy = float(np.asarray(out[0].per_worker_busy).sum())
+        assert busy == pytest.approx(_total_cost(tenants[0]), rel=1e-9)
+
+
+class TestSameSeedBitIdentity:
+    def test_mixed_kind_schedule_replays_bit_identically(self):
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.03, kind=CRASH, worker=3),
+            FaultEvent(time=0.05, kind=PREEMPT, worker=5, notice=0.03,
+                       duration=0.4),
+            FaultEvent(time=0.02, kind=SLOWDOWN, worker=1, factor=4.0,
+                       duration=0.3),
+            FaultEvent(time=0.04, kind=NIC_DEGRADE, worker=0, factor=3.0,
+                       duration=0.2),
+        ))
+        check_same_seed_bit_identity(sched, seed=3)
+
+    @pytest.mark.parametrize("seed", [0, 5])
+    def test_hazard_draw_full_stack(self, seed):
+        check_hazard_run(seed, slowdown=False)
+
+    def test_hazard_draw_with_slowdowns(self):
+        check_hazard_run(seed=2, slowdown=True)
+
+
+class TestAutoscaleFaultGuard:
+    """Satellite guard: scale-down concurrent with crashes must never
+    shrink the ACTIVE pool below `FaultConfig.min_hosts` nor
+    decommission a worker that is mid-recovery."""
+
+    @staticmethod
+    def _no_grow(cluster, min_workers=1):
+        # Thresholds no backlog can cross: the pool stays at its
+        # starting size for the whole run.
+        return AutoscaleConfig(
+            min_workers=min_workers, max_workers=cluster.num_workers,
+            backlog_high=1e9, backlog_low=0.0,
+            step=cluster.interpreters_per_node, interval=0.02,
+            cooldown=0.0,
+        )
+
+    def test_pool_floor_is_min_hosts_under_faults(self):
+        """With faults on, a min_workers=1 autoscaler is floored at
+        `min_hosts`: the commissioned pool starts (and stays) at 4
+        workers, so even with one of them crashed the recovery has
+        live capacity — and row conservation survives the combination."""
+        cluster = ClusterConfig(num_nodes=2)
+        fcfg = FaultConfig(heartbeat_interval=0.02, missed_beats_dead=2,
+                           min_hosts=4)
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.05, kind=CRASH, worker=1),
+        ))
+        sim = MultiQuerySimulator(
+            cluster, fair_share=FS, faults=sched, fault_cfg=fcfg,
+            autoscale=self._no_grow(cluster),
+        )
+        out = sim.run(_tenants(cluster, seed=3))
+        assert sim.last_fault_stats["unrecovered_rows"] == 0
+        busy = sum(np.asarray(r.per_worker_busy) for r in out)
+        served = set(np.flatnonzero(busy > 0).tolist())
+        assert served <= set(range(fcfg.min_hosts))
+        assert len(served) >= fcfg.min_hosts - 1  # worker 1 died early
+        for t, r in zip(_tenants(cluster, seed=3), out):
+            assert float(np.asarray(r.per_worker_busy).sum()) == (
+                pytest.approx(_total_cost(t), rel=1e-9)
+            )
+
+    def test_faults_off_keeps_configured_min_workers(self):
+        """The floor is a FAULTS-mode guard: without a schedule the
+        same min_workers=1 autoscaler really does run one worker."""
+        cluster = ClusterConfig(num_nodes=2)
+        sim = MultiQuerySimulator(
+            cluster, fair_share=FS, autoscale=self._no_grow(cluster),
+        )
+        out = sim.run(_tenants(cluster, seed=3))
+        busy = sum(np.asarray(r.per_worker_busy) for r in out)
+        assert set(np.flatnonzero(busy > 0).tolist()) == {0}
+
+    def test_shrink_concurrent_with_crash_respects_guards(self):
+        """Grow-then-shrink around a permanent crash: the shrink pass
+        must skip live workers whenever decommissioning them would take
+        the LIVE pool to (or below) `min_hosts` — observable as a
+        nonzero `shrink_blocked_mid_recovery` counter, resize targets
+        never below `min_hosts`, and exact conservation throughout."""
+        cluster = ClusterConfig(num_nodes=1)  # 8 workers
+        fcfg = FaultConfig(heartbeat_interval=0.02, missed_beats_dead=2,
+                           min_hosts=6)
+        asc = AutoscaleConfig(
+            min_workers=2, max_workers=cluster.num_workers,
+            backlog_high=8.0, backlog_low=4.0, step=2,
+            interval=0.02, cooldown=0.0,
+        )
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.1, kind=CRASH, worker=3),
+        ))
+        sim = MultiQuerySimulator(
+            cluster, fair_share=FS, faults=sched, fault_cfg=fcfg,
+            autoscale=asc,
+        )
+        out = sim.run(_tenants(cluster, seed=3))
+        stats = sim.last_fault_stats
+        assert stats["unrecovered_rows"] == 0
+        assert stats["shrink_blocked_mid_recovery"] > 0
+        assert sim.last_resizes, "the pool must actually resize"
+        for _now, _active, target in sim.last_resizes:
+            assert target >= fcfg.min_hosts
+        for t, r in zip(_tenants(cluster, seed=3), out):
+            assert float(np.asarray(r.per_worker_busy).sum()) == (
+                pytest.approx(_total_cost(t), rel=1e-9)
+            )
+
+
+# ------------------------------------------------------------------ #
+# Schedule construction and validation
+# ------------------------------------------------------------------ #
+
+class TestScheduleValidation:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent(time=0.1, kind="meteor", worker=0)
+
+    def test_negative_time_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent(time=-0.1, kind=CRASH, worker=0)
+
+    def test_slowdown_needs_factor_above_one(self):
+        with pytest.raises(ValueError):
+            FaultEvent(time=0.1, kind=SLOWDOWN, worker=0, factor=0.5)
+
+    def test_retry_knobs_validated(self):
+        with pytest.raises(ValueError):
+            FaultSchedule(retry_base=0.0)
+        with pytest.raises(ValueError):
+            FaultSchedule(retry_base=2e-3, retry_cap=1e-3)
+
+    def test_validate_rejects_out_of_range_targets(self):
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.1, kind=CRASH, worker=9),
+        ))
+        with pytest.raises(ValueError):
+            sched.validate(num_workers=4, num_nodes=1)
+        # nic_degrade targets NODES, not workers.
+        nic = FaultSchedule(events=(
+            FaultEvent(time=0.1, kind=NIC_DEGRADE, worker=2, factor=2.0),
+        ))
+        with pytest.raises(ValueError):
+            nic.validate(num_workers=8, num_nodes=2)
+
+    def test_engine_validates_at_construction(self):
+        cluster = ClusterConfig(num_nodes=1)
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.1, kind=CRASH, worker=cluster.num_workers),
+        ))
+        with pytest.raises(ValueError):
+            MultiQuerySimulator(cluster, faults=sched)
+
+    def test_events_sorted_and_counted(self):
+        sched = FaultSchedule(events=(
+            FaultEvent(time=0.3, kind=CRASH, worker=0),
+            FaultEvent(time=0.1, kind=SLOWDOWN, worker=1, factor=2.0),
+        ))
+        assert [e.time for e in sched.events] == [0.1, 0.3]
+        counts = sched.injected_counts()
+        assert counts[CRASH] == 1 and counts[SLOWDOWN] == 1
+        assert bool(sched) and not bool(FaultSchedule())
+
+
+class TestHazardSchedule:
+    def test_same_seed_same_draw(self):
+        kw = dict(num_workers=8, num_nodes=2, horizon=2.0,
+                  crash_rate=2.0, preempt_rate=1.0, slowdown_rate=1.0,
+                  nic_rate=0.5)
+        assert hazard_schedule(7, **kw) == hazard_schedule(7, **kw)
+        assert hazard_schedule(7, **kw) != hazard_schedule(8, **kw)
+
+    def test_min_live_floor_suppresses_total_wipeout(self):
+        """A saturating crash rate with min_live == num_workers draws NO
+        crash/preempt events at all — the floor keeps at least min_live
+        workers up at every instant."""
+        sched = hazard_schedule(
+            seed=1, num_workers=4, num_nodes=1, horizon=5.0,
+            crash_rate=50.0, preempt_rate=50.0, min_live=4,
+        )
+        counts = sched.injected_counts()
+        assert counts.get(CRASH, 0) == 0 and counts.get(PREEMPT, 0) == 0
+
+    def test_kinds_are_known(self):
+        sched = hazard_schedule(
+            seed=3, num_workers=8, num_nodes=2, horizon=2.0,
+            crash_rate=2.0, preempt_rate=2.0, slowdown_rate=2.0,
+            nic_rate=2.0,
+        )
+        assert sched.events, "saturating rates must draw something"
+        assert all(e.kind in FAULT_KINDS for e in sched.events)
+
+
+# ------------------------------------------------------------------ #
+# Hypothesis fuzz layer (optional dev dependency, same checkers)
+# ------------------------------------------------------------------ #
+
+if hypothesis is not None:
+    FUZZ = settings(max_examples=8, deadline=None)
+
+    class TestFuzzFaults:
+        @FUZZ
+        @given(seed=st.integers(0, 30))
+        def test_hazard_conservation_and_identity(self, seed):
+            check_hazard_run(seed, slowdown=False)
+
+        @FUZZ
+        @given(seed=st.integers(0, 30))
+        def test_hazard_with_slowdowns_recovers(self, seed):
+            check_hazard_run(seed, slowdown=True)
+
+        @FUZZ
+        @given(seed=st.integers(0, 30),
+               t1=st.floats(0.01, 0.2), t2=st.floats(0.01, 0.2),
+               w1=st.integers(0, 7), w2=st.integers(0, 7))
+        def test_two_crash_conservation(self, seed, t1, t2, w1, w2):
+            sched = FaultSchedule(events=(
+                FaultEvent(time=t1, kind=CRASH, worker=w1, duration=0.3),
+                FaultEvent(time=t2, kind=PREEMPT, worker=w2, notice=0.02,
+                           duration=0.3),
+            ))
+            check_crash_conservation(sched, seed=seed)

@@ -111,6 +111,17 @@ def validate_record(data: Any, name: str) -> List[str]:
         errs.append(f"{name}: quick must be a bool")
     if "only" in data and not isinstance(data["only"], str):
         errs.append(f"{name}: only must be a string")
+    # Provenance fields (added after the first records were minted):
+    # validated only when PRESENT so old records stay accepted.
+    if "seed" in data and (
+        not _is_number(data["seed"]) or isinstance(data["seed"], bool)
+        or int(data["seed"]) != data["seed"]
+    ):
+        errs.append(f"{name}: seed must be an integer")
+    if "git_sha" in data and (
+        not isinstance(data["git_sha"], str) or not data["git_sha"]
+    ):
+        errs.append(f"{name}: git_sha must be a non-empty string")
     benches = data.get("benches")
     wall_sum = 0.0
     if benches is not None:
