@@ -3,7 +3,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test lint check-bench check-docs bench bench-quick
+.PHONY: verify test lint pin-map check-bench check-docs bench bench-quick
 
 # Tier-1 verification: the full test suite plus the static checks.
 verify: test lint check-bench check-docs
@@ -11,10 +11,17 @@ verify: test lint check-bench check-docs
 test:
 	$(PYTHON) -m pytest -x -q
 
-# dyslint: the AST-based invariant linter (tools/lint/).  Needs only a
-# bare Python — no numpy/jax import happens during linting.
+# dyslint + dyflow: the AST-based invariant linter (tools/lint/) —
+# per-module passes in parallel, plus the whole-program units and
+# pin-impact passes.  Needs only a bare Python — no numpy/jax import
+# happens during linting.
 lint:
-	$(PYTHON) tools/lint/runner.py
+	$(PYTHON) tools/lint/runner.py --jobs 0
+
+# Regenerate the committed pin-impact map after changing pin-covered
+# code or the PINS declarations (lint fails while it is stale).
+pin-map:
+	$(PYTHON) tools/lint/runner.py --write-pin-map
 
 check-bench:
 	$(PYTHON) tools/check_bench.py

@@ -107,6 +107,14 @@ PINNED_MODULES = (
     "src/repro/core/admission.py",
     "src/repro/core/policy.py",
     "src/repro/core/adaptive_link.py",
+    # Acknowledged by the dyflow pin-impact pass (DY602): these are
+    # reachable from the pin roots through the interprocedural graph —
+    # types.py batch helpers and the fault-tolerance detector feed every
+    # pin; replay/workload feed the PR 6 digest pins.
+    "src/repro/core/types.py",
+    "src/repro/runtime/fault_tolerance.py",
+    "src/repro/sim/replay.py",
+    "src/repro/sim/workload.py",
 )
 
 
@@ -148,6 +156,123 @@ JIT_REACHABLE = {
 STATIC_CALLS = (
     "repro.models.perf_flags.get_flags",
 )
+
+
+# --------------------------------------------------------------------- #
+# Units/dimension contract (the DY5xx dyflow pass)
+# --------------------------------------------------------------------- #
+
+#: The unit vocabulary: name suffix -> (dimension, scale).  A name
+#: carrying one of these suffixes (``wall_s``, ``kv_bytes``,
+#: ``deficit_rows``) declares the unit of the value it binds; the
+#: units pass seeds its dataflow from these, propagates through
+#: assignments, arithmetic, calls and returns, and flags cross-DIMENSION
+#: mixing (seconds added to bytes) and same-dimension SCALE mixing
+#: (``*_gb`` compared to ``*_bytes``) repo-wide.  Scales are relative to
+#: the dimension's canonical unit (seconds / bytes / rows / tokens).
+UNIT_SUFFIXES = {
+    "s": ("seconds", 1.0),
+    "secs": ("seconds", 1.0),
+    "seconds": ("seconds", 1.0),
+    "ms": ("seconds", 1e-3),
+    "us": ("seconds", 1e-6),
+    "ns": ("seconds", 1e-9),
+    "bytes": ("bytes", 1.0),
+    "kb": ("bytes", 2.0 ** 10),
+    "mb": ("bytes", 2.0 ** 20),
+    "gb": ("bytes", 2.0 ** 30),
+    "rows": ("rows", 1.0),
+    "tokens": ("tokens", 1.0),
+}
+
+#: Whole-name override patterns, checked BEFORE the suffix rules
+#: (regex, (dimension, scale)).  ``worker_seconds_spent`` is the
+#: autoscale economics currency (worker-count x wall seconds — NOT
+#: addable to plain latency seconds); ``cost_per_slo`` and ``frac_*`` /
+#: ``*_frac`` names are dimensionless ratios despite any embedded unit
+#: token (``frac_tokens`` is a fraction OF tokens, not a token count).
+UNIT_NAME_PATTERNS = (
+    (r"(^|_)worker_seconds(_|$)", ("worker_seconds", 1.0)),
+    (r"(^|_)cost_per_slo(_|$)", ("ratio", 1.0)),
+    (r"(^|_)frac(tion)?(_|$)", ("ratio", 1.0)),
+    (r"(^|_)(jain|ratio|attainment)(_|$)", ("ratio", 1.0)),
+)
+
+#: Near-miss suffixes that look like units but are OUTSIDE the
+#: vocabulary.  ``tools/check_bench.py`` rejects BENCH row keys carrying
+#: one (a ``p99_sec`` column is a mislabeled ``p99_s``), and the units
+#: pass treats them as unit-intent it cannot resolve.
+UNIT_SUFFIX_NEAR_MISSES = {
+    "sec": "s", "msec": "ms", "msecs": "ms", "millis": "ms",
+    "usec": "us", "usecs": "us", "nanos": "ns", "byte": "bytes",
+    "kib": "kb", "mib": "mb", "gib": "gb", "token": "tokens",
+}
+
+#: Repo-relative prefixes the units pass sweeps (the whole production
+#: tree plus the benches that mint BENCH records from its numbers).
+UNITS_SCOPE = ("src/repro/", "benchmarks/")
+
+
+# --------------------------------------------------------------------- #
+# Pin-impact contract (the DY6xx dyflow pass)
+# --------------------------------------------------------------------- #
+
+#: Repo-relative prefix the whole-program call graph covers.
+GRAPH_SCOPE = ("src/repro/",)
+
+#: Registry-mediated dispatch: calling one of the FACTORIES yields "some
+#: registered policy", so a method call on the result is an edge to that
+#: method on the base class and on EVERY ``@register_policy`` subclass.
+#: Declared here (not inferred) because the registry's dict lives behind
+#: runtime decoration the static graph cannot execute.
+POLICY_REGISTRY = {
+    "module": "src/repro/core/policy.py",
+    "base": "RedistributionPolicy",
+    "decorator": POLICY_DECORATOR,
+    "factories": ("resolve_policy", "make_policy", "policy_class"),
+}
+
+#: The bit-identity pins, as data: pin name -> (test anchor, call-graph
+#: roots).  The DY6xx pass computes the reachability closure of each
+#: root set over the interprocedural call graph, commits it as
+#: ``tools/lint/pin_map.json`` (stale map = lint failure), and checks
+#: that every closure module is acknowledged in :data:`PINNED_MODULES` —
+#: so "which functions feed which pins" is an artifact CI can diff a PR
+#: against, not tribal knowledge.
+PINS = {
+    "legacy_equivalence_rtol1e9": {
+        "test": "tests/test_sim_equivalence.py",
+        "roots": (
+            "src/repro/sim/engine.py::Simulator.run_query",
+            "src/repro/sim/engine.py::MultiQuerySimulator.run",
+            "src/repro/sim/legacy.py::LegacySimulator.run_query",
+        ),
+    },
+    "policy_digests": {
+        "test": "tests/test_policy_interface.py",
+        "roots": (
+            "src/repro/sim/engine.py::MultiQuerySimulator.run",
+            "src/repro/sim/replay.py::run_open_loop",
+        ),
+    },
+    "pipeline_digests": {
+        "test": "tests/test_pipeline.py",
+        "roots": (
+            "src/repro/sim/pipeline.py::PipelineSimulator.run",
+        ),
+    },
+    "fault_bit_identity": {
+        "test": "tests/test_faults.py",
+        "roots": (
+            "src/repro/sim/engine.py::MultiQuerySimulator.run",
+            "src/repro/sim/faults.py::hazard_schedule",
+        ),
+    },
+}
+
+#: Where the committed pin-impact map lives (regenerate with
+#: ``python tools/lint/runner.py --write-pin-map``).
+PIN_MAP_PATH = "tools/lint/pin_map.json"
 
 
 # --------------------------------------------------------------------- #

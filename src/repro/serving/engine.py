@@ -517,7 +517,7 @@ class ServingEngine:
             "mean_latency": float(lat.mean()) if len(lat) else 0.0,
             "p99_latency": float(np.percentile(lat, 99)) if len(lat) else 0.0,
             "migrations": migrations,
-            "migrated_gb": migrated_bytes / 1e9,
+            "migrated_gb": migrated_bytes / float(2 ** 30),
             "migration_delay_s": migration_delay_s,
             "preemptions": preemptions,
             "truncated": truncated,

@@ -1,0 +1,54 @@
+"""Deliberately unit-broken fixture for the dyflow DY5xx units pass.
+
+NOT part of the linted tree (tests/ is outside DEFAULT_LINT_PATHS):
+``tests/test_dyflow.py`` lints this file explicitly and asserts every
+violation below is flagged — if a lattice change silently stops
+catching one of these, that test fails, not the repo's own lint run.
+"""
+
+
+def kv_budget_bytes():
+    return 4.0 * float(2 ** 30)
+
+
+def deficit_rows():
+    return 128.0
+
+
+def bill(worker_seconds_spent):
+    return worker_seconds_spent
+
+
+def mixed_dimension_add(wall_s, queue_ms, moved_bytes):
+    # DY501: seconds + bytes
+    broken = wall_s + moved_bytes
+    # DY504: seconds + milliseconds without conversion
+    also_broken_s = wall_s + queue_ms
+    return broken, also_broken_s
+
+
+def mixed_dimension_compare(wall_s):
+    # DY502: seconds vs bytes
+    if wall_s > kv_budget_bytes():
+        return True
+    # DY502: min() arguments mix seconds and rows
+    return min(wall_s, deficit_rows())
+
+
+def silent_coercions(wall_s):
+    # DY504: bytes value bound to a *_gb name without conversion
+    cap_gb = kv_budget_bytes()
+    # fine: the literal performs the conversion exactly
+    ok_gb = kv_budget_bytes() / float(2 ** 30)
+    # DY504: decimal/binary confusion — lands NEAR 2**30, not on it
+    near_gb = kv_budget_bytes() / 1e9
+    # DY503: seconds passed for a worker-seconds parameter
+    cost = bill(wall_s)
+    # DY503: dict value disagrees with its unit-suffixed key
+    row = {"p99_s": deficit_rows()}
+    return cap_gb, ok_gb, near_gb, cost, row
+
+
+def suppressed_mix(wall_s, moved_bytes):
+    # dyslint: disable=DY501 -- fixture: prove suppressions work here
+    return wall_s + moved_bytes

@@ -79,6 +79,26 @@ class TestValidateRecord:
         errs = check_bench.validate_record(rec, "x")
         assert any("status=failed" in e and "wall_s" in e for e in errs)
 
+    def test_near_miss_unit_suffix_in_derived_key_is_flagged(self):
+        rec = _record()
+        rec["benches"][0]["rows"][0]["derived"]["p99_sec"] = 0.5
+        errs = check_bench.validate_record(rec, "x")
+        assert any("p99_sec" in e and "_s" in e for e in errs)
+
+    def test_near_miss_unit_suffix_in_row_name_is_flagged(self):
+        rec = _record()
+        rec["benches"][0]["rows"][0]["name"] = "drain_gib"
+        errs = check_bench.validate_record(rec, "x")
+        assert any("drain_gib" in e and "_kb" not in e for e in errs)
+
+    def test_vocabulary_unit_suffixes_pass(self):
+        rec = _record()
+        rec["benches"][0]["rows"][0]["derived"].update(
+            {"p99_s": 0.5, "moved_bytes": 10, "kv_gb": 1.0,
+             "deficit_rows": 3, "no_unit_at_all": 1}
+        )
+        assert check_bench.validate_record(rec, "x") == []
+
     def test_bad_row_shapes(self):
         rec = _record()
         rec["benches"][0]["rows"].append({"name": "", "us_per_call": -1.0,

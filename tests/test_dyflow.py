@@ -1,0 +1,369 @@
+"""Tests for dyflow — the whole-program layer of ``tools/lint``.
+
+Three surfaces:
+
+  * the interprocedural call-graph builder (``tools/lint/graph.py``):
+    direct calls, cycles, decorated functions, method dispatch,
+    registry dispatch, and the soundness guarantee that an
+    unresolvable dynamic call degrades to an UNKNOWN edge, never a
+    silent drop;
+  * the DY5xx units pass: positives (the deliberately broken fixture
+    ``tests/lint_fixtures/unit_broken.py``), negatives (conversion by
+    the exact literal), and suppressions;
+  * the DY6xx pin-impact pass: the committed ``pin_map.json`` matches
+    the graph (staleness is a lint failure), every pin root resolves,
+    pin-reachable modules are acknowledged, and policies never write
+    through their PolicyContext views.
+
+Like test_dyslint.py this runs on a bare Python — no repro import.
+"""
+
+import json
+import os
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)
+
+from tools.lint import Module  # noqa: E402
+from tools.lint import runner  # noqa: E402
+from tools.lint.graph import (  # noqa: E402
+    MODULE_NODE,
+    UNKNOWN,
+    ModuleCache,
+    Program,
+    node_id,
+)
+from tools.lint.passes import pin_impact, units  # noqa: E402
+
+CONTRACTS = runner.load_contracts()
+
+
+# --------------------------------------------------------------------- #
+# Helpers: build a Program from in-memory sources
+# --------------------------------------------------------------------- #
+
+class _FakeCache(ModuleCache):
+    """ModuleCache over a dict of repo-relative path -> source."""
+
+    def __init__(self, sources):
+        super().__init__(ROOT)
+        self._sources = dict(sources)
+
+    def get(self, relpath):
+        mod = self._mods.get(relpath)
+        if mod is None:
+            mod = Module.from_source(
+                relpath, textwrap.dedent(self._sources[relpath])
+            )
+            self._mods[relpath] = mod
+        return mod
+
+
+def _program(sources):
+    cache = _FakeCache(sources)
+    return Program.build(
+        ROOT, CONTRACTS, cache, paths=list(sources)
+    )
+
+
+REAL_PROGRAM = Program.build(ROOT, CONTRACTS, ModuleCache(ROOT))
+
+
+# --------------------------------------------------------------------- #
+# Call graph
+# --------------------------------------------------------------------- #
+
+class TestCallGraph:
+    def test_direct_call_and_cycle(self):
+        prog = _program({"src/repro/a.py": """
+            def f():
+                return g()
+
+            def g():
+                return f()
+        """})
+        f = node_id("src/repro/a.py", "f")
+        g = node_id("src/repro/a.py", "g")
+        assert g in prog.edges[f] and f in prog.edges[g]
+        # the closure over a cycle terminates and contains both
+        assert prog.closure([f]) == {f, g}
+
+    def test_cross_module_import_dispatch(self):
+        prog = _program({
+            "src/repro/m1.py": """
+                from repro.m2 import helper
+
+                def top():
+                    return helper(1)
+            """,
+            "src/repro/m2.py": """
+                def helper(x):
+                    return x
+            """,
+        })
+        assert node_id("src/repro/m2.py", "helper") in prog.edges[
+            node_id("src/repro/m1.py", "top")
+        ]
+
+    def test_decorated_function_keeps_its_edges(self):
+        prog = _program({"src/repro/d.py": """
+            def deco(fn):
+                return fn
+
+            @deco
+            def work():
+                return leaf()
+
+            def leaf():
+                return 1
+        """})
+        work = node_id("src/repro/d.py", "work")
+        assert node_id("src/repro/d.py", "leaf") in prog.edges[work]
+        # the decorator application references both deco and work
+        mod = node_id("src/repro/d.py", MODULE_NODE)
+        assert node_id("src/repro/d.py", "deco") in prog.edges[mod]
+
+    def test_method_dispatch_through_annotation_fans_out(self):
+        prog = _program({"src/repro/c.py": """
+            class Base:
+                def hit(self):
+                    return 0
+
+            class Child(Base):
+                def hit(self):
+                    return 1
+
+            def drive(b: Base):
+                return b.hit()
+        """})
+        drive = prog.edges[node_id("src/repro/c.py", "drive")]
+        assert node_id("src/repro/c.py", "Base.hit") in drive
+        assert node_id("src/repro/c.py", "Child.hit") in drive
+
+    def test_nested_def_closure_env_and_funcref(self):
+        prog = _program({"src/repro/n.py": """
+            class Widget:
+                def spin(self):
+                    return 7
+
+            def run(w: Widget):
+                def inner():
+                    return w.spin()
+                return inner()
+        """})
+        run = node_id("src/repro/n.py", "run")
+        inner = node_id("src/repro/n.py", "run.inner")
+        assert inner in prog.edges[run]
+        # the nested def sees the enclosing annotated param
+        assert node_id("src/repro/n.py", "Widget.spin") in \
+            prog.edges[inner]
+
+    def test_unresolvable_dynamic_call_degrades_to_unknown(self):
+        prog = _program({"src/repro/u.py": """
+            def top(table):
+                return table["k"]()
+        """})
+        top = node_id("src/repro/u.py", "top")
+        # sound degradation: an UNKNOWN edge, never a silent drop
+        assert UNKNOWN in prog.edges[top]
+        assert UNKNOWN in prog.closure([top])
+
+    def test_external_library_calls_are_not_unknown(self):
+        prog = _program({"src/repro/x.py": """
+            import numpy as np
+
+            def top(v):
+                return np.sum(v)
+        """})
+        assert prog.edges[node_id("src/repro/x.py", "top")] == set()
+
+    def test_registry_dispatch_fans_out_to_all_policies(self):
+        # the real tree: engine.run routes through policies built by a
+        # nested annotated factory; the registry fan-out must reach
+        # every registered policy's route/propose
+        run = "src/repro/sim/engine.py::MultiQuerySimulator.run"
+        closure = REAL_PROGRAM.closure([run])
+        for method in (
+            "RedistributionPolicy.route",
+            "DySkewPolicy.propose",
+            "StaticRRPolicy.route",
+            "HillClimbPolicy.propose",
+        ):
+            assert f"src/repro/core/policy.py::{method}" in closure, method
+
+    def test_real_tree_has_no_syntax_breakage(self):
+        assert REAL_PROGRAM.broken == {}
+        assert len(REAL_PROGRAM.functions) > 300
+
+
+# --------------------------------------------------------------------- #
+# DY5xx units
+# --------------------------------------------------------------------- #
+
+FIXTURE = "tests/lint_fixtures/unit_broken.py"
+
+
+def _lint_fixture():
+    active, suppressed = [], []
+    checker = units._UnitChecker(REAL_PROGRAM, CONTRACTS)
+    with open(os.path.join(ROOT, FIXTURE), encoding="utf-8") as fh:
+        text = fh.read()
+    mod = Module.from_source(FIXTURE, text)
+    checker.check_module(FIXTURE, mod)
+    from tools.lint import split_suppressed
+    return split_suppressed(checker.findings, mod.lines)
+
+
+class TestUnitsPass:
+    def test_fixture_flags_every_planted_violation(self):
+        active, suppressed = _lint_fixture()
+        codes = sorted(f.code for f in active)
+        assert codes == [
+            "DY501", "DY502", "DY502", "DY503", "DY503",
+            "DY504", "DY504", "DY504",
+        ]
+
+    def test_fixture_suppression_is_honored(self):
+        active, suppressed = _lint_fixture()
+        assert [f.code for f in suppressed] == ["DY501"]
+        assert all(
+            f.line != s.line for f in active for s in suppressed
+        )
+
+    def test_exact_literal_conversion_is_clean(self):
+        active, _ = _lint_fixture()
+        # the `ok_gb = ... / float(2 ** 30)` line is NOT flagged
+        with open(os.path.join(ROOT, FIXTURE), encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+        ok_line = next(
+            i for i, l in enumerate(lines, 1) if "ok_gb" in l
+        )
+        assert all(f.line != ok_line for f in active)
+
+    def test_vocabulary_and_patterns(self):
+        u = units.unit_of_name
+        assert u("wall_s", CONTRACTS) == ("seconds", 1.0)
+        assert u("kv_bytes", CONTRACTS) == ("bytes", 1.0)
+        assert u("cap_gb", CONTRACTS) == ("bytes", 2.0 ** 30)
+        assert u("deficit_rows", CONTRACTS) == ("rows", 1.0)
+        assert u("worker_seconds_spent", CONTRACTS) == \
+            ("worker_seconds", 1.0)
+        # frac_tokens is a fraction OF tokens, not a token count
+        assert u("frac_tokens", CONTRACTS) == ("ratio", 1.0)
+        assert u("jain_index", CONTRACTS) == ("ratio", 1.0)
+        # a bare suffix with no stem declares nothing
+        assert u("s", CONTRACTS) is None
+        assert u("plain_name", CONTRACTS) is None
+
+    def test_runner_flags_fixture_when_named_explicitly(self, capsys):
+        rc = runner.main([FIXTURE, "--no-baseline"])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "DY501" in out and "unit_broken" in out
+
+    def test_directory_sweep_does_not_widen_units_scope(self, capsys):
+        # linting the tools/ DIRECTORY must not units-check tools code
+        rc = runner.main(["tools", "--no-baseline"])
+        out = capsys.readouterr().out
+        assert rc == 0, out
+
+
+# --------------------------------------------------------------------- #
+# DY6xx pin impact
+# --------------------------------------------------------------------- #
+
+class TestPinImpactPass:
+    def test_committed_pin_map_is_fresh(self):
+        computed = pin_impact.compute_pin_map(REAL_PROGRAM, CONTRACTS)
+        with open(os.path.join(ROOT, CONTRACTS.PIN_MAP_PATH),
+                  encoding="utf-8") as fh:
+            committed = json.load(fh)
+        assert committed == computed, (
+            "tools/lint/pin_map.json is stale — regenerate with "
+            "`python tools/lint/runner.py --write-pin-map`"
+        )
+
+    def test_every_pin_root_resolves(self):
+        for pin, spec in CONTRACTS.PINS.items():
+            for root in spec["roots"]:
+                assert REAL_PROGRAM.resolve_root(root), (pin, root)
+
+    def test_pin_reachable_modules_are_acknowledged(self):
+        computed = pin_impact.compute_pin_map(REAL_PROGRAM, CONTRACTS)
+        pinned = set(CONTRACTS.PINNED_MODULES)
+        for pin, spec in computed["pins"].items():
+            missing = [m for m in spec["modules"] if m not in pinned]
+            assert not missing, (pin, missing)
+
+    def test_real_tree_is_clean(self):
+        findings = pin_impact.run_program(REAL_PROGRAM, CONTRACTS)
+        assert findings == []
+
+    def test_stale_map_is_flagged(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(
+            CONTRACTS, "PIN_MAP_PATH",
+            os.path.relpath(str(tmp_path / "nope.json"), ROOT),
+        )
+        findings = pin_impact.run_program(REAL_PROGRAM, CONTRACTS)
+        assert [f.code for f in findings] == ["DY601"]
+        assert findings[0].path == "src/repro/core/contracts.py"
+
+    def test_unresolvable_root_is_flagged(self, monkeypatch):
+        pins = dict(CONTRACTS.PINS)
+        pins["ghost"] = {
+            "test": "tests/test_ghost.py",
+            "roots": ("src/repro/sim/engine.py::Gone.run",),
+        }
+        monkeypatch.setattr(CONTRACTS, "PINS", pins)
+        findings = pin_impact.run_program(REAL_PROGRAM, CONTRACTS)
+        codes = [f.code for f in findings]
+        assert "DY604" in codes          # the ghost root
+        assert "DY601" in codes          # and the map went stale
+
+    def test_policy_ctx_write_is_flagged(self):
+        prog = _program({"src/repro/core/policy.py": """
+            class RedistributionPolicy:
+                def route(self, producer, batch, now):
+                    return []
+
+            def register_policy(cls):
+                return cls
+
+            @register_policy
+            class Sneaky(RedistributionPolicy):
+                name = "sneaky"
+
+                def __init__(self, ctx):
+                    self.ctx = ctx           # binding the view: legal
+
+                def route(self, producer, batch, now):
+                    self.ctx.outstanding()[0] = 0.0
+                    self.ctx.workers.append(3)
+                    return []
+        """})
+        findings = []
+        pin_impact._check_ownership(prog, CONTRACTS, findings)
+        assert sorted(f.code for f in findings) == ["DY603", "DY603"]
+        lines = {f.line for f in findings}
+        assert len(lines) == 2           # both writes, not __init__
+
+    def test_real_policies_never_write_through_ctx(self):
+        findings = []
+        pin_impact._check_ownership(REAL_PROGRAM, CONTRACTS, findings)
+        assert findings == []
+
+    def test_pin_map_format(self):
+        computed = pin_impact.compute_pin_map(REAL_PROGRAM, CONTRACTS)
+        assert computed["version"] == pin_impact.PIN_MAP_VERSION
+        for pin, spec in computed["pins"].items():
+            assert set(spec) == {
+                "test", "roots", "functions", "modules",
+                "over_approximate",
+            }
+            assert spec["functions"] == sorted(spec["functions"])
+            assert UNKNOWN not in spec["functions"]
+            for fn in spec["functions"]:
+                mod = fn.split("::")[0]
+                assert mod in spec["modules"]

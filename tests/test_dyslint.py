@@ -26,6 +26,7 @@ from tools.lint import (  # noqa: E402
 )
 from tools.lint.passes import (  # noqa: E402
     ALL_PASSES,
+    PROGRAM_PASSES,
     all_codes,
     capability,
     determinism,
@@ -73,7 +74,7 @@ class TestFramework:
 
     def test_pass_codes_are_disjoint_and_prefixed(self):
         seen = {}
-        for p in ALL_PASSES:
+        for p in ALL_PASSES + PROGRAM_PASSES:
             for code in p.CODES:
                 assert code.startswith("DY"), code
                 assert code not in seen, f"{code} claimed twice"

@@ -15,12 +15,13 @@ from __future__ import annotations
 
 import argparse
 import glob
+import importlib.util
 import json
 import math
 import os
 import re
 import sys
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -31,6 +32,44 @@ BENCH_STATUSES = ("ok", "failed", "skipped")
 ROW_KEYS = ("name", "us_per_call", "derived")
 
 _NAME = re.compile(r"^BENCH_(\d+)\.json$")
+
+_CONTRACTS_PATH = os.path.join(ROOT, "src", "repro", "core",
+                               "contracts.py")
+
+
+def _load_unit_vocabulary(
+    path: str = _CONTRACTS_PATH,
+) -> Dict[str, str]:
+    """Near-miss suffix -> canonical suffix, from the contracts layer
+    (loaded standalone like ``tools/lint`` does: stdlib only, no
+    ``repro`` import)."""
+    spec = importlib.util.spec_from_file_location(
+        "_check_bench_contracts", path
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return dict(mod.UNIT_SUFFIX_NEAR_MISSES)
+
+
+_NEAR_MISSES: Optional[Dict[str, str]] = None
+
+
+def _check_unit_key(key: Any, where: str, errs: List[str]) -> None:
+    """A metric key carrying a unit-LIKE suffix must use the contracts
+    vocabulary: a ``p99_sec`` column is a mislabeled ``p99_s`` that
+    every downstream consumer will mis-parse."""
+    global _NEAR_MISSES
+    if not isinstance(key, str) or "_" not in key:
+        return
+    if _NEAR_MISSES is None:
+        _NEAR_MISSES = _load_unit_vocabulary()
+    stem, _, suffix = key.lower().rpartition("_")
+    canonical = _NEAR_MISSES.get(suffix)
+    if canonical is not None:
+        errs.append(
+            f"{where}: key {key!r} carries non-vocabulary unit suffix "
+            f"_{suffix} — use _{canonical} (see contracts.UNIT_SUFFIXES)"
+        )
 
 
 def _is_number(v: Any) -> bool:
@@ -46,6 +85,8 @@ def _check_row(row: Any, where: str, errs: List[str]) -> None:
             errs.append(f"{where}: row missing key {k!r}")
     if "name" in row and not (isinstance(row["name"], str) and row["name"]):
         errs.append(f"{where}: row name must be a non-empty string")
+    elif "name" in row:
+        _check_unit_key(row["name"], where, errs)
     # NaN is nulled by the writer, so None is legal alongside numbers.
     if "us_per_call" in row:
         v = row["us_per_call"]
@@ -58,6 +99,9 @@ def _check_row(row: Any, where: str, errs: List[str]) -> None:
     if "derived" in row and not isinstance(row["derived"], dict):
         errs.append(f"{where}: derived must be an object, got "
                     f"{type(row['derived']).__name__}")
+    elif isinstance(row.get("derived"), dict):
+        for k in row["derived"]:
+            _check_unit_key(k, f"{where}.derived", errs)
 
 
 def _check_bench(bench: Any, where: str, errs: List[str]) -> float:

@@ -1,0 +1,846 @@
+"""dyflow's whole-program layer: an interprocedural call graph over
+``src/repro``.
+
+The per-module dyslint passes (DY1xx–DY4xx) see one file at a time;
+the contracts they enforce — units flowing through the economics
+formulas, the reachability of the bit-identity pins — cross module
+boundaries through three kinds of dispatch this module resolves
+statically:
+
+  * **direct calls** — ``f(...)`` on module-level functions, imported
+    functions, and nested defs;
+  * **method dispatch** — ``obj.m(...)`` where the receiver's class is
+    annotated (parameter/AnnAssign annotations), constructed in scope
+    (``x = ClassName(...)``), or an attribute whose type the class's
+    ``__init__``/body declares; a call through a base class fans out to
+    every in-program override (may-call over-approximation);
+  * **registry dispatch** — the ``RedistributionPolicy`` registry
+    (``contracts.POLICY_REGISTRY``): a value produced by
+    ``resolve_policy``/``make_policy``/``policy_class`` is "some
+    registered policy", so calls on it edge to that method on the base
+    class and on every ``@register_policy`` class.
+
+Anything still unresolvable — a callable plucked from a container, a
+``Callable`` field, ``getattr`` — degrades to an edge to the
+:data:`UNKNOWN` sentinel, never to a silent drop: the pin-impact pass
+records it so a closure that contains ``<unknown>`` is visibly
+over-approximate rather than quietly incomplete.  References to program
+functions in non-call position (``partial(f, ...)``, callbacks, heap
+payloads, decorators) also create edges, which is what carries the
+closure through the engine's jit/partial plumbing.
+
+Like the rest of ``tools/lint`` this runs on a bare Python: no
+``repro`` import, no numpy/jax.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from tools.lint import Module
+from tools.lint.astutil import ImportMap, dotted
+
+#: The sound "I could not resolve this callee" sink node.
+UNKNOWN = "<unknown>"
+
+#: Node id of a module's top-level code (imports, class bodies,
+#: decorator applications, dataclass field factories).
+MODULE_NODE = "<module>"
+
+
+def node_id(path: str, qualname: str) -> str:
+    return f"{path}::{qualname}"
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function or method definition."""
+
+    node_id: str
+    path: str
+    qualname: str            # "f", "Cls.m", "outer.inner"
+    name: str
+    node: ast.AST            # FunctionDef / AsyncFunctionDef
+    cls: Optional[str] = None      # owning class name, if a method
+    params: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    """One class definition with its in-program inheritance links."""
+
+    path: str
+    name: str
+    node: ast.ClassDef
+    methods: Dict[str, FunctionInfo] = dataclasses.field(
+        default_factory=dict
+    )
+    base_exprs: List[ast.expr] = dataclasses.field(default_factory=list)
+    bases: List["ClassInfo"] = dataclasses.field(default_factory=list)
+    is_registered_policy: bool = False
+    #: Attribute name -> ("class", ClassInfo) | ("policy",) — inferred
+    #: from __init__ assignments and class-body annotations.
+    attr_types: Dict[str, Tuple] = dataclasses.field(default_factory=dict)
+
+    def mro(self) -> List["ClassInfo"]:
+        """Linearized in-program ancestry (self first, duplicates
+        dropped); external bases simply end a branch."""
+        out: List[ClassInfo] = []
+        stack: List[ClassInfo] = [self]
+        while stack:
+            c = stack.pop(0)
+            if c not in out:
+                out.append(c)
+                stack.extend(c.bases)
+        return out
+
+    def find_method(self, name: str) -> Optional[FunctionInfo]:
+        for c in self.mro():
+            if name in c.methods:
+                return c.methods[name]
+        return None
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """A parsed module plus its symbol tables."""
+
+    path: str
+    module: Module
+    imports: ImportMap
+    mod_name: str            # "repro.core.policy"
+    functions: Dict[str, FunctionInfo] = dataclasses.field(
+        default_factory=dict
+    )
+    classes: Dict[str, ClassInfo] = dataclasses.field(default_factory=dict)
+
+
+class ModuleCache:
+    """Parse each source file exactly once; shared by the per-module
+    passes, the call graph, and the units pass (the `--jobs` runner
+    hands one cache per worker)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self._mods: Dict[str, Module] = {}
+
+    def get(self, relpath: str) -> Module:
+        mod = self._mods.get(relpath)
+        if mod is None:
+            full = os.path.join(self.root, relpath)
+            with open(full, encoding="utf-8") as fh:
+                text = fh.read()
+            mod = Module.from_source(relpath, text)
+            self._mods[relpath] = mod
+        return mod
+
+
+def _mod_name(relpath: str) -> str:
+    """src/repro/core/policy.py -> repro.core.policy"""
+    p = relpath[:-3] if relpath.endswith(".py") else relpath
+    parts = p.split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+# Inferred-type lattice values (plain tuples, matched by first element):
+#   ("class", ClassInfo)   — an instance of a known program class
+#   ("classref", ClassInfo) — the class OBJECT itself (constructor)
+#   ("policy",)            — some registered policy instance
+#   ("policyref",)         — some registered policy class object
+#   ("seq", T)             — a list/tuple/comprehension of T
+#   ("funcref", fi)        — a program function object (nested defs,
+#                            factory results); calling it applies its
+#                            return annotation
+_POLICY = ("policy",)
+_POLICY_REF = ("policyref",)
+
+
+class Program:
+    """The whole-program index + call graph.  Build once per lint run
+    via :meth:`build`; reuse the :class:`ModuleCache` it was built from
+    for the per-module passes."""
+
+    def __init__(self, root: str, contracts, cache: ModuleCache):
+        self.root = root
+        self.contracts = contracts
+        self.cache = cache
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.classes: List[ClassInfo] = []
+        self.edges: Dict[str, Set[str]] = {}
+        self.broken: Dict[str, str] = {}     # relpath -> syntax error
+        self._by_mod_func: Dict[Tuple[str, str], FunctionInfo] = {}
+        self._by_mod_class: Dict[Tuple[str, str], ClassInfo] = {}
+        self._by_astnode: Dict[int, FunctionInfo] = {}
+        self._subclasses: Dict[int, List[ClassInfo]] = {}
+        self._policy_classes: List[ClassInfo] = []
+        self._policy_base: Optional[ClassInfo] = None
+        self._prog_roots: Optional[Set[str]] = None
+        self._attrs_in_progress: Set[int] = set()
+
+    # ------------------------------------------------------------- #
+    # Construction
+    # ------------------------------------------------------------- #
+
+    @classmethod
+    def build(
+        cls, root: str, contracts, cache: Optional[ModuleCache] = None,
+        paths: Optional[Sequence[str]] = None,
+    ) -> "Program":
+        """Index every .py under ``contracts.GRAPH_SCOPE`` (or an
+        explicit ``paths`` list of repo-relative files) and extract the
+        call graph."""
+        cache = cache or ModuleCache(root)
+        prog = cls(root, contracts, cache)
+        if paths is None:
+            paths = []
+            for prefix in contracts.GRAPH_SCOPE:
+                base = os.path.join(root, prefix)
+                for dirpath, dirnames, filenames in os.walk(base):
+                    dirnames[:] = sorted(
+                        d for d in dirnames
+                        if d != "__pycache__" and not d.startswith(".")
+                    )
+                    for name in sorted(filenames):
+                        if name.endswith(".py"):
+                            full = os.path.join(dirpath, name)
+                            paths.append(
+                                os.path.relpath(full, root).replace(
+                                    os.sep, "/"
+                                )
+                            )
+        for rel in paths:
+            try:
+                mod = prog.cache.get(rel)
+            except SyntaxError as e:
+                prog.broken[rel] = str(e)
+                continue
+            prog._index_module(rel, mod)
+        prog._link_classes()
+        for mi in prog.modules.values():
+            prog._extract_edges(mi)
+        return prog
+
+    def _index_module(self, rel: str, mod: Module) -> None:
+        mi = ModuleInfo(
+            path=rel, module=mod, imports=ImportMap(mod.tree),
+            mod_name=_mod_name(rel),
+        )
+        self.modules[rel] = mi
+        for stmt in mod.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._index_function(mi, stmt, prefix="", cls=None)
+            elif isinstance(stmt, ast.ClassDef):
+                ci = ClassInfo(
+                    path=rel, name=stmt.name, node=stmt,
+                    base_exprs=list(stmt.bases),
+                )
+                for dec in stmt.decorator_list:
+                    d = self._decorator_name(dec, mi)
+                    if d == self.contracts.POLICY_DECORATOR:
+                        ci.is_registered_policy = True
+                for sub in stmt.body:
+                    if isinstance(
+                        sub, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    ):
+                        fi = self._index_function(
+                            mi, sub, prefix=f"{stmt.name}.", cls=stmt.name
+                        )
+                        ci.methods[sub.name] = fi
+                mi.classes[stmt.name] = ci
+                self.classes.append(ci)
+                self._by_mod_class[(mi.mod_name, stmt.name)] = ci
+        # module pseudo-node for top-level code
+        self.edges.setdefault(node_id(rel, MODULE_NODE), set())
+
+    def _index_function(
+        self, mi: ModuleInfo, node, prefix: str, cls: Optional[str]
+    ) -> FunctionInfo:
+        qual = f"{prefix}{node.name}"
+        fi = FunctionInfo(
+            node_id=node_id(mi.path, qual), path=mi.path, qualname=qual,
+            name=node.name, node=node, cls=cls,
+            params=[a.arg for a in node.args.posonlyargs
+                    + node.args.args + node.args.kwonlyargs],
+        )
+        self.functions[fi.node_id] = fi
+        self._by_astnode[id(node)] = fi
+        if cls is None and prefix == "":
+            mi.functions[node.name] = fi
+            self._by_mod_func[(mi.mod_name, node.name)] = fi
+        self.edges.setdefault(fi.node_id, set())
+        # nested defs: indexed under "outer.inner" with an implicit
+        # containment edge (the closure a factory returns is reachable
+        # exactly when the factory is).
+        for sub in ast.walk(node):
+            if sub is node:
+                continue
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sub_id = node_id(mi.path, f"{qual}.{sub.name}")
+                if sub_id in self.functions:   # name collision at depth
+                    sub_id = f"{sub_id}@{sub.lineno}"
+                sub_fi = FunctionInfo(
+                    node_id=sub_id, path=mi.path,
+                    qualname=sub_id.split("::", 1)[1],
+                    name=sub.name, node=sub, cls=cls,
+                    params=[a.arg for a in sub.args.posonlyargs
+                            + sub.args.args + sub.args.kwonlyargs],
+                )
+                self.functions[sub_fi.node_id] = sub_fi
+                self._by_astnode[id(sub)] = sub_fi
+                self.edges.setdefault(fi.node_id, set()).add(
+                    sub_fi.node_id
+                )
+                self.edges.setdefault(sub_fi.node_id, set())
+        return fi
+
+    def _decorator_name(self, dec: ast.expr, mi: ModuleInfo) -> str:
+        """Last path segment of a decorator expression (unwrapping
+        calls like ``@functools.partial(jit, ...)`` to their callee)."""
+        if isinstance(dec, ast.Call):
+            dec = dec.func
+        d = dotted(dec, mi.imports)
+        if d:
+            return d.rsplit(".", 1)[-1]
+        if isinstance(dec, ast.Name):
+            return dec.id
+        if isinstance(dec, ast.Attribute):
+            return dec.attr
+        return ""
+
+    def _link_classes(self) -> None:
+        for ci in self.classes:
+            mi = self.modules[ci.path]
+            for expr in ci.base_exprs:
+                base = self._resolve_class_expr(expr, mi)
+                if base is not None:
+                    ci.bases.append(base)
+        # subclass index (transitive, via repeated direct expansion)
+        direct: Dict[int, List[ClassInfo]] = {}
+        for ci in self.classes:
+            for b in ci.bases:
+                direct.setdefault(id(b), []).append(ci)
+        for ci in self.classes:
+            seen: List[ClassInfo] = []
+            stack = list(direct.get(id(ci), []))
+            while stack:
+                c = stack.pop()
+                if c not in seen:
+                    seen.append(c)
+                    stack.extend(direct.get(id(c), []))
+            self._subclasses[id(ci)] = seen
+        # the policy registry
+        reg = getattr(self.contracts, "POLICY_REGISTRY", None)
+        if reg:
+            base = None
+            for ci in self.classes:
+                if ci.path == reg["module"] and ci.name == reg["base"]:
+                    base = ci
+                    break
+            self._policy_base = base
+            self._policy_classes = [
+                c for c in self.classes if c.is_registered_policy
+            ]
+
+    def _resolve_class_expr(
+        self, expr: ast.expr, mi: ModuleInfo
+    ) -> Optional[ClassInfo]:
+        """Resolve a Name/Attribute (or string annotation) to a program
+        class, through the module's imports."""
+        if isinstance(expr, ast.Constant) and isinstance(expr.value, str):
+            try:
+                expr = ast.parse(expr.value, mode="eval").body
+            except SyntaxError:
+                return None
+        if isinstance(expr, ast.Subscript):   # Optional[X] / List[X]
+            return None
+        if isinstance(expr, ast.Name) and expr.id in mi.classes:
+            return mi.classes[expr.id]
+        d = dotted(expr, mi.imports)
+        if d is None:
+            return None
+        head, _, tail = d.rpartition(".")
+        return self._by_mod_class.get((head, tail))
+
+    # ------------------------------------------------------------- #
+    # Symbol lookup
+    # ------------------------------------------------------------- #
+
+    def lookup_dotted(self, d: str, _depth: int = 0):
+        """``repro.core.policy.resolve_policy`` -> FunctionInfo /
+        ClassInfo / None (external or unresolved)."""
+        head, _, tail = d.rpartition(".")
+        fi = self._by_mod_func.get((head, tail))
+        if fi is not None:
+            return fi
+        ci = self._by_mod_class.get((head, tail))
+        if ci is not None:
+            return ci
+        # Cls.method / module attribute chains: try one level up.
+        h2, _, mid = head.rpartition(".")
+        ci = self._by_mod_class.get((h2, mid))
+        if ci is not None:
+            return ci.find_method(tail)
+        # Re-export: `from repro.core import waterfill_counts` where the
+        # package __init__ merely re-imports the symbol.  Follow one hop
+        # through the exporting module's own imports.
+        if _depth < 4:
+            for mi in self.modules.values():
+                if mi.mod_name == head:
+                    target = mi.imports.names.get(tail)
+                    if target is not None and target != d:
+                        return self.lookup_dotted(target, _depth + 1)
+                    break
+        return None
+
+    def is_program_name(self, d: str) -> bool:
+        """Does this dotted path point INTO the indexed tree (even if
+        the symbol itself did not resolve)?  Unresolved program-internal
+        callees degrade to UNKNOWN; external libraries do not."""
+        if self._prog_roots is None:
+            self._prog_roots = {
+                mi.mod_name.split(".", 1)[0]
+                for mi in self.modules.values()
+            }
+        return d.split(".", 1)[0] in self._prog_roots
+
+    def subclasses(self, ci: ClassInfo) -> List[ClassInfo]:
+        return self._subclasses.get(id(ci), [])
+
+    @property
+    def policy_classes(self) -> List[ClassInfo]:
+        return list(self._policy_classes)
+
+    @property
+    def policy_base(self) -> Optional[ClassInfo]:
+        return self._policy_base
+
+    def _is_policy_class(self, ci: ClassInfo) -> bool:
+        if ci.is_registered_policy:
+            return True
+        base = self._policy_base
+        return base is not None and (
+            ci is base or base in ci.mro()
+        )
+
+    # ------------------------------------------------------------- #
+    # Local type inference
+    # ------------------------------------------------------------- #
+
+    def _class_attr_types(self, ci: ClassInfo) -> Dict[str, Tuple]:
+        if ci.attr_types:
+            return ci.attr_types
+        # Re-entrancy guard: inferring an attribute's type can ask for
+        # the same class's attribute table (self.x = self._make_x()).
+        if id(ci) in self._attrs_in_progress:
+            return {}
+        self._attrs_in_progress.add(id(ci))
+        mi = self.modules[ci.path]
+        types: Dict[str, Tuple] = {}
+        # class-body annotations (dataclass fields included)
+        for stmt in ci.node.body:
+            if isinstance(stmt, ast.AnnAssign) and isinstance(
+                stmt.target, ast.Name
+            ):
+                t = self._annotation_type(stmt.annotation, mi)
+                if t is not None:
+                    types[stmt.target.id] = t
+        # __init__ assignments: self.x = <param annotated C> / C(...)
+        init = ci.methods.get("__init__")
+        if init is not None:
+            env = self._param_types(init, mi)
+            for stmt in ast.walk(init.node):
+                if isinstance(stmt, ast.Assign):
+                    for tgt in stmt.targets:
+                        if (
+                            isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"
+                        ):
+                            t = self._expr_type(stmt.value, mi, env, ci)
+                            if t is not None:
+                                types.setdefault(tgt.attr, t)
+        for base in ci.bases:
+            for k, v in self._class_attr_types(base).items():
+                types.setdefault(k, v)
+        self._attrs_in_progress.discard(id(ci))
+        ci.attr_types = types
+        return types
+
+    def _annotation_type(
+        self, ann: ast.expr, mi: ModuleInfo
+    ) -> Optional[Tuple]:
+        c = self._resolve_class_expr(ann, mi)
+        if c is None:
+            return None
+        if self._is_policy_class(c):
+            return _POLICY
+        return ("class", c)
+
+    def _param_types(
+        self, fi: FunctionInfo, mi: ModuleInfo
+    ) -> Dict[str, Tuple]:
+        env: Dict[str, Tuple] = {}
+        args = fi.node.args
+        for a in args.args + args.posonlyargs + args.kwonlyargs:
+            if a.annotation is not None:
+                t = self._annotation_type(a.annotation, mi)
+                if t is not None:
+                    env[a.arg] = t
+        return env
+
+    def _expr_type(
+        self, expr: ast.expr, mi: ModuleInfo, env: Dict[str, Tuple],
+        ci: Optional[ClassInfo],
+    ) -> Optional[Tuple]:
+        """Best-effort static type of an expression (None = unknown)."""
+        reg = getattr(self.contracts, "POLICY_REGISTRY", None)
+        if isinstance(expr, ast.Name):
+            if expr.id == "self" and ci is not None:
+                return ("class", ci)
+            if expr.id in env:
+                return env[expr.id]
+            if expr.id in mi.classes:
+                c = mi.classes[expr.id]
+                return _POLICY_REF if self._is_policy_class(c) else (
+                    "classref", c
+                )
+            d = dotted(expr, mi.imports)
+            if d:
+                sym = self.lookup_dotted(d)
+                if isinstance(sym, ClassInfo):
+                    return _POLICY_REF if self._is_policy_class(sym) else (
+                        "classref", sym
+                    )
+            return None
+        if isinstance(expr, ast.Attribute):
+            base_t = self._expr_type(expr.value, mi, env, ci)
+            if base_t is not None and base_t[0] == "class":
+                at = self._class_attr_types(base_t[1]).get(expr.attr)
+                return at
+            d = dotted(expr, mi.imports)
+            if d:
+                sym = self.lookup_dotted(d)
+                if isinstance(sym, ClassInfo):
+                    return _POLICY_REF if self._is_policy_class(sym) else (
+                        "classref", sym
+                    )
+            return None
+        if isinstance(expr, ast.Call):
+            # super(): methods resolve through the first program base
+            if (
+                isinstance(expr.func, ast.Name)
+                and expr.func.id == "super"
+                and ci is not None
+            ):
+                return ("class", ci.bases[0]) if ci.bases else None
+            # constructor?
+            t = self._expr_type(expr.func, mi, env, ci)
+            if t is not None:
+                if t[0] == "classref":
+                    c = t[1]
+                    return _POLICY if self._is_policy_class(c) else (
+                        "class", c
+                    )
+                if t[0] == "policyref":
+                    return _POLICY
+            # registry factory?
+            if reg:
+                fname = None
+                if isinstance(expr.func, ast.Name):
+                    fname = expr.func.id
+                elif isinstance(expr.func, ast.Attribute):
+                    fname = expr.func.attr
+                if fname in reg["factories"]:
+                    if fname == "resolve_policy" or fname == "policy_class":
+                        return _POLICY_REF
+                    return _POLICY
+            # return-annotation inference: f(...) where f's def carries
+            # `-> C` for a program class C
+            target = self._resolve_callable(expr.func, mi, env, ci)
+            if isinstance(target, FunctionInfo):
+                returns = getattr(target.node, "returns", None)
+                if returns is not None:
+                    t_mi = self.modules.get(target.path, mi)
+                    return self._annotation_type(returns, t_mi)
+            return None
+        if isinstance(expr, (ast.List, ast.Tuple)):
+            elts = [self._expr_type(e, mi, env, ci) for e in expr.elts]
+            elts = [t for t in elts if t is not None]
+            if elts and all(t == elts[0] for t in elts):
+                return ("seq", elts[0])
+            return None
+        if isinstance(expr, ast.ListComp):
+            t = self._expr_type(expr.elt, mi, env, ci)
+            return ("seq", t) if t is not None else None
+        if isinstance(expr, ast.Subscript):
+            base_t = self._expr_type(expr.value, mi, env, ci)
+            if base_t is not None and base_t[0] == "seq":
+                return base_t[1]
+            return None
+        return None
+
+    # ------------------------------------------------------------- #
+    # Edge extraction
+    # ------------------------------------------------------------- #
+
+    def _extract_edges(self, mi: ModuleInfo) -> None:
+        owner_module = node_id(mi.path, MODULE_NODE)
+
+        # Ownership: every call/reference belongs to its innermost
+        # enclosing function (the module pseudo-node otherwise).
+        def visit(body_owner: str, node: ast.AST,
+                  env: Dict[str, Tuple], ci: Optional[ClassInfo]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    # switch owner; env = closure variables (nested defs
+                    # see the enclosing scope) minus shadowing params,
+                    # plus the def's own annotated params
+                    fi = self._by_astnode.get(id(child))
+                    a = child.args
+                    shadow = {p.arg for p in a.posonlyargs + a.args
+                              + a.kwonlyargs}
+                    sub_env = {
+                        k: v for k, v in env.items() if k not in shadow
+                    }
+                    if fi is not None:
+                        sub_env.update(self._param_types(fi, mi))
+                        # later siblings can call/reference this def
+                        env[child.name] = ("funcref", fi)
+                    owner = fi.node_id if fi is not None else body_owner
+                    for dec in child.decorator_list:
+                        visit(body_owner, dec, env, ci)
+                        self._reference(body_owner, dec, mi, env, ci)
+                    visit(owner, child, sub_env, ci)
+                    continue
+                if isinstance(child, ast.ClassDef):
+                    new_ci = mi.classes.get(child.name, ci)
+                    for dec in child.decorator_list:
+                        self._reference(body_owner, dec, mi, env, ci)
+                    visit(body_owner, child, {}, new_ci)
+                    continue
+                if isinstance(child, ast.Call):
+                    self._call_edge(body_owner, child, mi, env, ci)
+                    visit(body_owner, child, env, ci)
+                    continue
+                if isinstance(child, (ast.Name, ast.Attribute)):
+                    # Non-call reference to a program function (callback,
+                    # partial argument, heap payload) = may-call edge.
+                    target = self._resolve_callable(
+                        child, mi, env, ci, as_callee=False
+                    )
+                    if isinstance(target, FunctionInfo):
+                        self.edges.setdefault(body_owner, set()).add(
+                            target.node_id
+                        )
+                    visit(body_owner, child, env, ci)
+                    continue
+                if isinstance(child, ast.Assign):
+                    t = self._expr_type(child.value, mi, env, ci)
+                    if t is not None:
+                        for tgt in child.targets:
+                            if isinstance(tgt, ast.Name):
+                                env[tgt.id] = t
+                elif isinstance(child, ast.AnnAssign) and isinstance(
+                    child.target, ast.Name
+                ):
+                    t = self._annotation_type(child.annotation, mi)
+                    if t is not None:
+                        env[child.target.id] = t
+                visit(body_owner, child, env, ci)
+
+        visit(owner_module, mi.module.tree, {}, None)
+
+    def _reference(
+        self, owner: str, expr: ast.expr, mi: ModuleInfo,
+        env: Dict[str, Tuple], ci: Optional[ClassInfo],
+    ) -> None:
+        """Reference edge for a decorator expression."""
+        node = expr.func if isinstance(expr, ast.Call) else expr
+        target = self._resolve_callable(
+            node, mi, env, ci, as_callee=False
+        )
+        if isinstance(target, FunctionInfo):
+            self.edges.setdefault(owner, set()).add(target.node_id)
+
+    def _resolve_callable(
+        self, func: ast.expr, mi: ModuleInfo, env: Dict[str, Tuple],
+        ci: Optional[ClassInfo], as_callee: bool = True,
+    ):
+        """Resolve a callee expression.  Returns a FunctionInfo, a
+        ClassInfo (constructor), a list of FunctionInfos (dynamic
+        dispatch fan-out), "external", or None (unresolvable)."""
+        if isinstance(func, ast.Name):
+            name = func.id
+            if name in env:
+                return self._typed_value_call(env[name], None)
+            # local class / function in this module
+            if name in mi.classes:
+                return mi.classes[name]
+            if name in mi.functions:
+                return mi.functions[name]
+            d = dotted(func, mi.imports)
+            if d is not None:
+                sym = self.lookup_dotted(d)
+                if sym is not None:
+                    return sym
+                return None if self.is_program_name(d) else "external"
+            if name in _BUILTIN_NAMES:
+                return "external"
+            return None
+        if isinstance(func, ast.Attribute):
+            # full dotted import chain (module.func / module.Cls)
+            d = dotted(func, mi.imports)
+            if d is not None:
+                sym = self.lookup_dotted(d)
+                if sym is not None:
+                    return sym
+                return None if self.is_program_name(d) else "external"
+            recv_t = self._expr_type(func.value, mi, env, ci)
+            if recv_t is not None:
+                return self._typed_value_call(recv_t, func.attr)
+            return None
+        if isinstance(func, ast.Call) and as_callee:
+            # calling a call's result: `resolve_policy(kind)(cfg, ctx)`
+            t = self._expr_type(func, mi, env, ci)
+            if t is not None:
+                return self._typed_value_call(t, None)
+            return None
+        if isinstance(func, ast.Subscript) and as_callee:
+            # `policies[q](...)` — a callable out of a typed sequence
+            t = self._expr_type(func, mi, env, ci)
+            if t is not None:
+                return self._typed_value_call(t, None)
+            return None
+        return None
+
+    def _typed_value_call(self, t: Tuple, attr: Optional[str]):
+        """Call/method-call through a typed value."""
+        if t[0] == "class":
+            target = t[1]
+            if attr is None:
+                return None          # calling an instance: __call__?
+            m = target.find_method(attr)
+            if m is None:
+                if self._is_policy_class(target):
+                    return self._policy_method_fanout(attr)
+                return None
+            out = [m]
+            for sub in self.subclasses(target):
+                if attr in sub.methods and sub.methods[attr] is not m:
+                    out.append(sub.methods[attr])
+            return out
+        if t[0] == "policy":
+            if attr is None:
+                return None
+            return self._policy_method_fanout(attr)
+        if t[0] == "classref":
+            if attr is None:
+                return t[1]          # construction
+            m = t[1].find_method(attr)
+            return m
+        if t[0] == "funcref":
+            return t[1] if attr is None else None
+        if t[0] == "policyref":
+            if attr is None:
+                # constructing "some registered policy"
+                out = []
+                for c in self._policy_fanout_classes():
+                    init = c.find_method("__init__")
+                    if init is not None and init not in out:
+                        out.append(init)
+                return out or None
+            return self._policy_method_fanout(attr)
+        return None
+
+    def _policy_fanout_classes(self) -> List[ClassInfo]:
+        out = list(self._policy_classes)
+        if self._policy_base is not None and self._policy_base not in out:
+            out.append(self._policy_base)
+        return out
+
+    def _policy_method_fanout(self, attr: str):
+        out: List[FunctionInfo] = []
+        for c in self._policy_fanout_classes():
+            m = c.find_method(attr)
+            if m is not None and m not in out:
+                out.append(m)
+        return out or None
+
+    def _call_edge(
+        self, owner: str, call: ast.Call, mi: ModuleInfo,
+        env: Dict[str, Tuple], ci: Optional[ClassInfo],
+    ) -> None:
+        target = self._resolve_callable(call.func, mi, env, ci)
+        edges = self.edges.setdefault(owner, set())
+        if target is None:
+            edges.add(UNKNOWN)
+            return
+        if target == "external":
+            return
+        if isinstance(target, ClassInfo):
+            # constructor: __init__ + __post_init__ through the MRO
+            hit = False
+            for name in ("__init__", "__post_init__"):
+                m = target.find_method(name)
+                if m is not None:
+                    edges.add(m.node_id)
+                    hit = True
+            if not hit:
+                # plain dataclass/namedtuple construction: no user code
+                pass
+            return
+        if isinstance(target, FunctionInfo):
+            edges.add(target.node_id)
+            return
+        if isinstance(target, list):
+            for fi in target:
+                edges.add(fi.node_id)
+            return
+        edges.add(UNKNOWN)
+
+    # ------------------------------------------------------------- #
+    # Reachability
+    # ------------------------------------------------------------- #
+
+    def resolve_root(self, root: str) -> Optional[str]:
+        """A ``path::Qual.name`` pin root -> node id (validated)."""
+        return root if root in self.functions else None
+
+    def closure(self, roots: Iterable[str]) -> Set[str]:
+        """Forward reachability over the call graph from ``roots``
+        (node ids).  The result may contain :data:`UNKNOWN`."""
+        seen: Set[str] = set()
+        stack = [r for r in roots]
+        while stack:
+            n = stack.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            for callee in self.edges.get(n, ()):
+                if callee not in seen:
+                    stack.append(callee)
+        return seen
+
+
+#: Builtin callables: calls to these are external, not UNKNOWN.
+_BUILTIN_NAMES = frozenset((
+    "super", "slice", "memoryview", "bytes", "bytearray", "complex",
+    "object", "staticmethod", "classmethod", "property", "callable",
+    "exec", "eval", "compile", "globals", "locals", "delattr", "input",
+    "print", "len", "range", "enumerate", "zip", "map", "filter",
+    "sorted", "reversed", "min", "max", "sum", "abs", "round", "int",
+    "float", "bool", "str", "repr", "list", "tuple", "dict", "set",
+    "frozenset", "isinstance", "issubclass", "getattr", "setattr",
+    "hasattr", "iter", "next", "open", "type", "id", "hash", "vars",
+    "any", "all", "divmod", "pow", "format", "ord", "chr",
+))

@@ -1,9 +1,15 @@
-"""The dyslint passes.  Each pass module exports:
+"""The dyslint passes.  Each PER-MODULE pass exports:
 
   * ``NAME``   — short pass name for ``--list-codes`` output;
   * ``CODES``  — {code: one-line description};
   * ``applies(relpath, contracts) -> bool`` — scope predicate;
   * ``run(module, contracts) -> list[Finding]``.
+
+The dyflow PROGRAM passes (``PROGRAM_PASSES``) see the whole tree at
+once instead: they export ``run_program(program, contracts)`` taking
+the interprocedural :class:`tools.lint.graph.Program`, and the runner
+invokes them once per lint run (never per file), filtering their
+findings to the requested scope.
 """
 
 from __future__ import annotations
@@ -13,13 +19,17 @@ from tools.lint.passes import (  # noqa: F401
     determinism,
     float_order,
     jax_hazard,
+    pin_impact,
+    units,
 )
 
 ALL_PASSES = (determinism, capability, jax_hazard, float_order)
 
+PROGRAM_PASSES = (units, pin_impact)
+
 
 def all_codes() -> dict:
     out = {}
-    for p in ALL_PASSES:
+    for p in ALL_PASSES + PROGRAM_PASSES:
         out.update(p.CODES)
     return out

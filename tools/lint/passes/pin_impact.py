@@ -1,0 +1,251 @@
+"""DY6xx — pin impact: which functions feed the bit-identity pins, as
+a committed artifact.
+
+``contracts.PINS`` declares each pin's call-graph roots (the functions
+the pinned tests drive).  This pass computes the forward reachability
+closure of every pin over the interprocedural graph (``graph.py``) and
+checks three things:
+
+  DY601  the committed ``tools/lint/pin_map.json`` does not match the
+         computed closures — regenerate with
+         ``python tools/lint/runner.py --write-pin-map`` (CI fails on
+         a stale map, so "which functions feed which pins" is a
+         reviewed diff, not tribal knowledge)
+  DY602  a module reached by a pin closure is missing from
+         ``contracts.PINNED_MODULES`` (the float-order pass and the
+         reviewers' attention skip it)
+  DY603  policy/plugin code writes engine-owned state through its
+         ``PolicyContext`` views (``self.ctx.*``) — policies may
+         observe the engine, never steer it behind the engine's back
+  DY604  a declared pin root does not resolve to a known function
+
+DY601/DY602/DY604 anchor to the declaration they contradict in
+``src/repro/core/contracts.py``; DY603 anchors to the offending write.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from tools.lint import Finding
+from tools.lint.graph import UNKNOWN, ClassInfo, Program
+
+NAME = "pin-impact"
+
+CODES = {
+    "DY601": "committed pin-impact map (pin_map.json) is stale",
+    "DY602": "pin-reachable module missing from PINNED_MODULES",
+    "DY603": "policy writes engine-owned state through a PolicyContext "
+             "view",
+    "DY604": "bit-identity pin root does not resolve",
+}
+
+PIN_MAP_VERSION = 1
+
+#: Container methods that mutate their receiver in place.
+_MUTATORS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "update", "setdefault", "add", "discard", "sort", "reverse",
+    "fill", "put", "itemset",
+})
+
+_CONTRACTS_PATH = "src/repro/core/contracts.py"
+
+
+def applies(relpath: str, contracts) -> bool:  # per-module API: unused
+    return False
+
+
+# ------------------------------------------------------------------- #
+# The map
+# ------------------------------------------------------------------- #
+
+def compute_pin_map(program: Program, contracts) -> dict:
+    """The committed artifact: pin -> roots, reachable functions,
+    reachable modules, and whether the closure is over-approximate
+    (contains an unresolved callee)."""
+    pins: Dict[str, dict] = {}
+    for name in sorted(contracts.PINS):
+        spec = contracts.PINS[name]
+        roots = [r for r in spec["roots"]
+                 if program.resolve_root(r) is not None]
+        closure = program.closure(roots)
+        funcs = sorted(n for n in closure if n != UNKNOWN)
+        pins[name] = {
+            "test": spec["test"],
+            "roots": sorted(spec["roots"]),
+            "functions": funcs,
+            "modules": sorted({n.split("::")[0] for n in funcs}),
+            "over_approximate": UNKNOWN in closure,
+        }
+    return {"version": PIN_MAP_VERSION, "pins": pins}
+
+
+def dump_pin_map(pin_map: dict) -> str:
+    return json.dumps(pin_map, indent=2, sort_keys=True) + "\n"
+
+
+def load_pin_map(path: str) -> Optional[dict]:
+    try:
+        with open(path, encoding="utf-8") as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return None
+
+
+# ------------------------------------------------------------------- #
+# Findings
+# ------------------------------------------------------------------- #
+
+def _contracts_line(program: Program, needle: str) -> int:
+    """1-based line in contracts.py containing ``needle`` (anchors the
+    finding to the declaration it contradicts)."""
+    try:
+        lines = program.cache.get(_CONTRACTS_PATH).lines
+    except (OSError, SyntaxError):
+        return 1
+    for i, line in enumerate(lines, 1):
+        if needle in line:
+            return i
+    return 1
+
+
+def _check_pins(program: Program, contracts,
+                out: List[Finding]) -> dict:
+    for name in sorted(contracts.PINS):
+        for root in contracts.PINS[name]["roots"]:
+            if program.resolve_root(root) is None:
+                out.append(Finding(
+                    code="DY604", path=_CONTRACTS_PATH,
+                    line=_contracts_line(program, root.split("::")[-1]),
+                    col=0,
+                    message=f"pin {name!r} root {root!r} does not "
+                            f"resolve to a known function — fix the "
+                            f"PINS entry or the renamed symbol",
+                ))
+    pin_map = compute_pin_map(program, contracts)
+    committed = load_pin_map(
+        os.path.join(program.root, contracts.PIN_MAP_PATH)
+    )
+    if committed != pin_map:
+        out.append(Finding(
+            code="DY601", path=_CONTRACTS_PATH,
+            line=_contracts_line(program, "PIN_MAP_PATH"),
+            col=0,
+            message=f"{contracts.PIN_MAP_PATH} is stale "
+                    f"{'(missing/unreadable) ' if committed is None else ''}"
+                    f"— regenerate with `python tools/lint/runner.py "
+                    f"--write-pin-map` and commit the diff",
+        ))
+    pinned = set(contracts.PINNED_MODULES)
+    missing: Dict[str, List[str]] = {}
+    for name, spec in pin_map["pins"].items():
+        for mod in spec["modules"]:
+            if mod not in pinned:
+                missing.setdefault(mod, []).append(name)
+    for mod in sorted(missing):
+        out.append(Finding(
+            code="DY602", path=_CONTRACTS_PATH,
+            line=_contracts_line(program, "PINNED_MODULES"),
+            col=0,
+            message=f"{mod} is reachable from pin(s) "
+                    f"{', '.join(missing[mod])} but missing from "
+                    f"PINNED_MODULES — acknowledge it (and accept the "
+                    f"float-order pass there) or cut the edge",
+        ))
+    return pin_map
+
+
+# ------------------------------------------------------------------- #
+# Ownership: policies must not write through ctx views
+# ------------------------------------------------------------------- #
+
+def _ctx_rooted(node: ast.expr) -> Tuple[bool, int]:
+    """Does this access chain pass through a ``ctx`` attribute (or a
+    bare ``ctx`` name)?  Returns (rooted, steps beyond the ctx link) —
+    ``self.ctx`` itself is 0 steps (rebinding the view handle, legal);
+    ``self.ctx.outstanding()[p]`` is > 0 (a write THROUGH the view)."""
+    steps = 0
+    cur = node
+    while True:
+        if isinstance(cur, ast.Attribute):
+            if cur.attr == "ctx":
+                return True, steps
+            steps += 1
+            cur = cur.value
+        elif isinstance(cur, ast.Subscript):
+            steps += 1
+            cur = cur.value
+        elif isinstance(cur, ast.Call):
+            steps += 1
+            cur = cur.func
+        elif isinstance(cur, ast.Name):
+            return (cur.id == "ctx"), steps
+        else:
+            return False, steps
+
+
+def _check_ownership(program: Program, contracts,
+                     out: List[Finding]) -> None:
+    classes: List[ClassInfo] = []
+    base = program.policy_base
+    if base is not None:
+        classes.append(base)
+        classes.extend(program.subclasses(base))
+    for ci in program.policy_classes:
+        if ci not in classes:
+            classes.append(ci)
+
+    def flag(path: str, node: ast.AST, cls: str, what: str) -> None:
+        out.append(Finding(
+            code="DY603", path=path, line=node.lineno,
+            col=node.col_offset,
+            message=f"{cls}: {what} — PolicyContext views are "
+                    f"engine-owned observations; a policy influences "
+                    f"routing only through its return values",
+        ))
+
+    for ci in classes:
+        for fi in ci.methods.values():
+            for node in ast.walk(fi.node):
+                if isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        rooted, steps = _ctx_rooted(t)
+                        if rooted and steps > 0:
+                            flag(ci.path, node, ci.name,
+                                 f"assigns through ctx view "
+                                 f"`{ast.unparse(t)}`")
+                elif isinstance(node, ast.Delete):
+                    for t in node.targets:
+                        rooted, steps = _ctx_rooted(t)
+                        if rooted and steps > 0:
+                            flag(ci.path, node, ci.name,
+                                 f"deletes through ctx view "
+                                 f"`{ast.unparse(t)}`")
+                elif isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute
+                ) and node.func.attr in _MUTATORS:
+                    rooted, steps = _ctx_rooted(node.func.value)
+                    if rooted and steps >= 0:
+                        flag(ci.path, node, ci.name,
+                             f"mutates a ctx view in place "
+                             f"(`{ast.unparse(node.func)}`)")
+
+
+def run_program(program: Program, contracts,
+                extra_paths=()) -> List[Finding]:
+    """Whole-program entry point (see ``passes.PROGRAM_PASSES``).
+    ``extra_paths`` is accepted for interface parity with the units
+    pass; pin impact is defined by the graph scope alone."""
+    out: List[Finding] = []
+    _check_pins(program, contracts, out)
+    _check_ownership(program, contracts, out)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return out

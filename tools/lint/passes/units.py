@@ -1,0 +1,650 @@
+"""DY5xx — units/dimensions: the economics and latency formulas must
+not mix units.
+
+A silent unit bug — seconds added to bytes, a ``*_gb`` budget compared
+to a ``*_bytes`` occupancy, worker-seconds (the autoscale billing
+currency) folded into plain wall seconds — corrupts a BENCH record or
+an admission threshold without failing a single test.  This pass runs
+over the WHOLE program (``contracts.UNITS_SCOPE``): units are seeded
+from the naming vocabulary in ``contracts.UNIT_SUFFIXES`` /
+``UNIT_NAME_PATTERNS`` (``wall_s``, ``kv_bytes``, ``deficit_rows``)
+and propagated through assignments, arithmetic, comparisons, calls
+(arguments matched to the callee's parameter names through the
+interprocedural graph) and return values (a function named ``*_s`` or
+returning unit-named expressions types its call sites).
+
+  DY501  cross-dimension arithmetic (seconds + bytes)
+  DY502  cross-dimension comparison (incl. ``min``/``max`` arguments)
+  DY503  unit-typed value silently coerced (assignment or call
+         argument whose declared unit disagrees in dimension)
+  DY504  same-dimension scale mixing (``*_gb`` vs ``*_bytes``,
+         ``*_ms`` vs ``*_s``)
+
+The lattice is deliberately conservative: a violation is reported only
+when BOTH sides carry a known unit.  Numeric literals are
+unit-compatible with everything (``x_s * 2`` is fine); multiplication
+and division produce derived dimensions this pass does not track
+(``bytes / s`` is a rate, not an error) except that dividing two
+values of the SAME unit yields a dimensionless ratio.  Dividing or
+multiplying by a literal that lands exactly on another scale in the
+vocabulary PERFORMS the conversion (``kv_bytes / 2**30`` is gb;
+``kv_bytes / 1e9`` is a mislabel and stays flagged), while any other
+literal leaves the scale unknown — same dimension, no scale verdict.
+"""
+
+from __future__ import annotations
+
+import ast
+import math
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.lint import Finding, Module
+from tools.lint.astutil import ImportMap, dotted
+from tools.lint.graph import FunctionInfo, Program
+
+NAME = "units"
+
+CODES = {
+    "DY501": "cross-dimension arithmetic (e.g. seconds + bytes)",
+    "DY502": "cross-dimension comparison",
+    "DY503": "unit-typed value silently coerced across dimensions",
+    "DY504": "same-dimension scale mixing (e.g. *_gb vs *_bytes)",
+}
+
+#: Unit lattice: ``None`` = unknown, ``ANY`` = numeric literal
+#: (compatible with everything), ``(dimension, scale)`` otherwise.
+ANY = ("any", 0.0)
+RATIO = ("ratio", 1.0)
+
+#: Builtins/numpy reducers that preserve their first argument's unit.
+_PRESERVING = frozenset({"abs", "float", "round", "sum"})
+_NUMPY_PRESERVING = re.compile(
+    r"\.(sum|mean|median|std|min|max|amin|amax|nanmin|nanmax|cumsum|"
+    r"percentile|quantile|clip|abs|maximum|minimum)$"
+)
+
+
+def applies(relpath: str, contracts) -> bool:  # per-module API: unused
+    return False
+
+
+def _compiled_patterns(contracts):
+    pats = getattr(contracts, "_DYFLOW_UNIT_PATS", None)
+    if pats is None:
+        pats = [
+            (re.compile(rx), tuple(unit))
+            for rx, unit in contracts.UNIT_NAME_PATTERNS
+        ]
+        contracts._DYFLOW_UNIT_PATS = pats
+    return pats
+
+
+def unit_of_name(name: str, contracts) -> Optional[Tuple[str, float]]:
+    """Seed unit from a name per the contracts vocabulary (whole-name
+    patterns first, then the ``_<suffix>`` rule).  A bare suffix with
+    no stem (a variable literally named ``s``) declares nothing."""
+    low = name.lower()
+    for rx, unit in _compiled_patterns(contracts):
+        if rx.search(low):
+            return unit
+    if "_" not in low:
+        return None
+    suffix = low.rsplit("_", 1)[1]
+    u = contracts.UNIT_SUFFIXES.get(suffix)
+    return tuple(u) if u else None
+
+
+def _known(u: Optional[Tuple[str, float]]) -> bool:
+    return u is not None and u != ANY
+
+
+def _const_value(e: ast.expr) -> Optional[float]:
+    """Fold a literal numeric expression (``1e9``, ``2 ** 30``,
+    ``1 << 30``, ``1024 * 1024``) to its value, else None."""
+    if isinstance(e, ast.Constant):
+        if isinstance(e.value, bool) or not isinstance(
+            e.value, (int, float)
+        ):
+            return None
+        return float(e.value)
+    if isinstance(e, ast.UnaryOp) and isinstance(e.op, ast.USub):
+        v = _const_value(e.operand)
+        return -v if v is not None else None
+    if isinstance(e, ast.BinOp):
+        a = _const_value(e.left)
+        b = _const_value(e.right)
+        if a is None or b is None:
+            return None
+        try:
+            if isinstance(e.op, ast.Mult):
+                return a * b
+            if isinstance(e.op, ast.Div):
+                return a / b
+            if isinstance(e.op, ast.Pow):
+                return float(a ** b)
+            if isinstance(e.op, ast.LShift):
+                return float(int(a) << int(b))
+            if isinstance(e.op, ast.Add):
+                return a + b
+            if isinstance(e.op, ast.Sub):
+                return a - b
+        except (OverflowError, ZeroDivisionError, ValueError):
+            return None
+    if isinstance(e, ast.Call) and isinstance(e.func, ast.Name) \
+            and e.func.id in ("float", "int") and len(e.args) == 1 \
+            and not e.keywords:
+        return _const_value(e.args[0])
+    return None
+
+
+def _dim_scales(contracts) -> Dict[str, Set[float]]:
+    """Every scale the vocabulary names, per dimension — the targets a
+    literal multiply/divide may legally convert between."""
+    scales = getattr(contracts, "_DYFLOW_DIM_SCALES", None)
+    if scales is None:
+        scales = {}
+        for dim, scale in contracts.UNIT_SUFFIXES.values():
+            scales.setdefault(dim, set()).add(float(scale))
+        for _, (dim, scale) in contracts.UNIT_NAME_PATTERNS:
+            scales.setdefault(dim, set()).add(float(scale))
+        contracts._DYFLOW_DIM_SCALES = scales
+    return scales
+
+
+class _Scope:
+    """One lexical scope: the module's import map, its top-level
+    function table (for intra-module call resolution), and the local
+    name -> unit environment."""
+
+    __slots__ = ("mi", "imports", "localfuncs", "env")
+
+    def __init__(self, mi, imports, localfuncs, env=None):
+        self.mi = mi                  # ModuleInfo or None (benchmarks)
+        self.imports = imports
+        self.localfuncs = localfuncs  # name -> ast def node
+        self.env: Dict[str, Tuple[str, float]] = env or {}
+
+    def child(self) -> "_Scope":
+        return _Scope(self.mi, self.imports, self.localfuncs,
+                      dict(self.env))
+
+
+class _UnitChecker:
+    def __init__(self, program: Program, contracts):
+        self.prog = program
+        self.c = contracts
+        self.findings: List[Finding] = []
+        self._emitted: Set[Tuple[str, str, int, int]] = set()
+        self._ret_cache: Dict[int, Optional[Tuple[str, float]]] = {}
+        self._ret_stack: Set[int] = set()
+        self._path = ""
+
+    # --------------------------------------------------------------- #
+    # Findings
+    # --------------------------------------------------------------- #
+
+    def _add(self, code: str, node: ast.AST, msg: str) -> None:
+        key = (code, self._path, node.lineno, node.col_offset)
+        if key in self._emitted:
+            return
+        self._emitted.add(key)
+        self.findings.append(Finding(
+            code=code, path=self._path, line=node.lineno,
+            col=node.col_offset, message=msg,
+        ))
+
+    @staticmethod
+    def _fmt(u: Tuple[str, Optional[float]]) -> str:
+        dim, scale = u
+        if scale is None:
+            return f"{dim}(rescaled)"
+        return dim if scale == 1.0 else f"{dim}(x{scale:g})"
+
+    def _flag_pair(
+        self, node: ast.AST, a, b, what: str,
+        dim_code: str, scale_code: str = "DY504",
+    ) -> None:
+        """Emit the dimension- or scale-mixing finding for a known
+        conflicting pair.  A ``None`` scale (value rescaled by an
+        arbitrary literal) carries no scale verdict."""
+        if a[0] != b[0]:
+            self._add(dim_code, node,
+                      f"{what} mixes dimensions: {self._fmt(a)} vs "
+                      f"{self._fmt(b)}")
+        elif a[1] is not None and b[1] is not None and a[1] != b[1]:
+            self._add(scale_code, node,
+                      f"{what} mixes scales of {a[0]}: {self._fmt(a)} "
+                      f"vs {self._fmt(b)} — convert explicitly")
+
+    # --------------------------------------------------------------- #
+    # Expression units (also recurses into every sub-expression)
+    # --------------------------------------------------------------- #
+
+    def expr(self, e: ast.expr, s: _Scope) -> Optional[Tuple[str, float]]:
+        if isinstance(e, ast.Constant):
+            if isinstance(e.value, bool) or not isinstance(
+                e.value, (int, float)
+            ):
+                return None
+            return ANY
+        if isinstance(e, ast.Name):
+            if e.id in s.env:
+                return s.env[e.id]
+            return unit_of_name(e.id, self.c)
+        if isinstance(e, ast.Attribute):
+            self.expr(e.value, s)
+            return unit_of_name(e.attr, self.c)
+        if isinstance(e, ast.BinOp):
+            return self._binop(e, s)
+        if isinstance(e, ast.Compare):
+            self._compare(e, s)
+            return None
+        if isinstance(e, ast.Call):
+            return self._call(e, s)
+        if isinstance(e, ast.UnaryOp):
+            return self.expr(e.operand, s)
+        if isinstance(e, ast.IfExp):
+            self.expr(e.test, s)
+            a = self.expr(e.body, s)
+            b = self.expr(e.orelse, s)
+            if a == b:
+                return a
+            if _known(a) and b == ANY:
+                return a
+            if _known(b) and a == ANY:
+                return b
+            return None
+        if isinstance(e, ast.BoolOp):
+            units = [self.expr(v, s) for v in e.values]
+            known = [u for u in units if _known(u)]
+            return known[0] if known else None
+        if isinstance(e, ast.Subscript):
+            # d["wall_s"] declares; a_s[i] inherits the container's unit
+            self.expr(e.slice, s)
+            if isinstance(e.slice, ast.Constant) and isinstance(
+                e.slice.value, str
+            ):
+                container = self.expr(e.value, s)
+                key_u = unit_of_name(e.slice.value, self.c)
+                return key_u if key_u is not None else container
+            return self.expr(e.value, s)
+        if isinstance(e, (ast.List, ast.Tuple, ast.Set)):
+            units = [self.expr(v, s) for v in e.elts]
+            known = [u for u in units if _known(u)]
+            if known and all(u == known[0] for u in known):
+                return known[0]
+            return None
+        if isinstance(e, ast.Dict):
+            for k, v in zip(e.keys, e.values):
+                vu = self.expr(v, s)
+                if k is None:
+                    continue
+                self.expr(k, s)
+                if isinstance(k, ast.Constant) and isinstance(
+                    k.value, str
+                ):
+                    ku = unit_of_name(k.value, self.c)
+                    if _known(ku) and _known(vu):
+                        self._flag_pair(
+                            v, ku, vu, f"dict value for key "
+                            f"{k.value!r}", "DY503")
+            return None
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            sub = s.child()
+            for gen in e.generators:
+                self.expr(gen.iter, s)
+                for cond in gen.ifs:
+                    self.expr(cond, sub)
+            return self.expr(e.elt, sub)
+        if isinstance(e, ast.Starred):
+            return self.expr(e.value, s)
+        # fallback: visit children so nested BinOp/Compare still checked
+        for child in ast.iter_child_nodes(e):
+            if isinstance(child, ast.expr):
+                self.expr(child, s)
+        return None
+
+    def _binop(self, e: ast.BinOp, s: _Scope):
+        a = self.expr(e.left, s)
+        b = self.expr(e.right, s)
+        if isinstance(e.op, (ast.Add, ast.Sub)):
+            if _known(a) and _known(b) and a != b:
+                self._flag_pair(
+                    e, a, b,
+                    "addition" if isinstance(e.op, ast.Add)
+                    else "subtraction", "DY501")
+                return None
+            if _known(a):
+                return a if b in (ANY, a, None) and b is not None else None
+            if _known(b):
+                return b if a == ANY else None
+            return ANY if a == ANY and b == ANY else None
+        if isinstance(e.op, ast.Mult):
+            if a == ANY and _known(b):
+                return self._rescaled(b, e.left, invert=True)
+            if b == ANY and _known(a):
+                return self._rescaled(a, e.right, invert=True)
+            if _known(a) and b == RATIO:
+                return a
+            if _known(b) and a == RATIO:
+                return b
+            return ANY if a == ANY and b == ANY else None
+        if isinstance(e.op, (ast.Div, ast.FloorDiv)):
+            if _known(a) and _known(b) and a[0] == b[0]:
+                return RATIO if a[1] == b[1] else None
+            if _known(a) and b == ANY:
+                return self._rescaled(a, e.right, invert=False)
+            if _known(a) and b == RATIO:
+                return a
+            return ANY if a == ANY and b == ANY else None
+        return None
+
+    def _rescaled(self, u, literal: ast.expr, invert: bool):
+        """Unit after multiplying (``invert=True``) or dividing a
+        ``u``-typed value by a numeric literal.  A literal landing
+        exactly on another vocabulary scale PERFORMS the conversion
+        (``bytes / 2**30`` -> gb); anything else keeps the dimension
+        but forgets the scale."""
+        dim, scale = u
+        c = _const_value(literal)
+        if c in (None, 0.0) or scale is None:
+            return (dim, None)
+        new = scale / c if invert else scale * c
+        near = None
+        for known_scale in _dim_scales(self.c).get(dim, ()):
+            if math.isclose(new, known_scale, rel_tol=1e-9):
+                return (dim, known_scale)
+            if math.isclose(new, known_scale, rel_tol=0.1):
+                near = known_scale
+        if near is not None:
+            # NEAR a vocabulary scale but not on it: the decimal-vs-
+            # binary confusion class (``/ 1e9`` where gb means 2**30).
+            # Keep the computed scale so the use site reports the
+            # mismatch instead of silently forgetting it.
+            return (dim, new)
+        return (dim, None)
+
+    def _compare(self, e: ast.Compare, s: _Scope) -> None:
+        units = [self.expr(e.left, s)]
+        units.extend(self.expr(cmp, s) for cmp in e.comparators)
+        known = [(u, n) for u, n in zip(units, [e.left] + e.comparators)
+                 if _known(u)]
+        for (a, _), (b, node) in zip(known, known[1:]):
+            if a != b:
+                self._flag_pair(e, a, b, "comparison", "DY502")
+
+    def _call(self, e: ast.Call, s: _Scope):
+        fname = None
+        if isinstance(e.func, ast.Name):
+            fname = e.func.id
+        elif isinstance(e.func, ast.Attribute):
+            fname = e.func.attr
+            self.expr(e.func.value, s)
+        arg_units = [self.expr(a, s) for a in e.args]
+        kw_units = {kw.arg: self.expr(kw.value, s) for kw in e.keywords}
+        # min/max compare their arguments
+        if isinstance(e.func, ast.Name) and fname in ("min", "max"):
+            known = [u for u in arg_units if _known(u)]
+            for a, b in zip(known, known[1:]):
+                if a != b:
+                    self._flag_pair(e, a, b, f"{fname}() arguments",
+                                    "DY502")
+            return known[0] if known and all(
+                u == known[0] for u in known
+            ) else None
+        if isinstance(e.func, ast.Name) and fname in _PRESERVING:
+            return arg_units[0] if arg_units else None
+        d = dotted(e.func, s.imports)
+        if d and _NUMPY_PRESERVING.search(d):
+            return arg_units[0] if arg_units else None
+        # program function: match args to parameter names, use returns
+        target = self._resolve(e.func, s)
+        if target is not None:
+            self._check_args(e, target, arg_units, kw_units, s)
+            return self._return_unit(target)
+        # unresolved: the callee NAME may still declare the unit
+        return unit_of_name(fname, self.c) if fname else None
+
+    # --------------------------------------------------------------- #
+    # Interprocedural pieces
+    # --------------------------------------------------------------- #
+
+    def _resolve(self, func: ast.expr, s: _Scope):
+        """Callee ast def node + its module scope, or None.  Only
+        direct function calls (local name or imported dotted path) are
+        matched — method dispatch falls back to name seeding."""
+        if isinstance(func, ast.Name):
+            node = s.localfuncs.get(func.id)
+            if node is not None:
+                return (node, s)
+        d = dotted(func, s.imports)
+        if d is not None:
+            sym = self.prog.lookup_dotted(d)
+            if isinstance(sym, FunctionInfo):
+                mi = self.prog.modules.get(sym.path)
+                if mi is not None:
+                    tscope = _Scope(
+                        mi, mi.imports,
+                        {n: f.node for n, f in mi.functions.items()},
+                    )
+                    return (sym.node, tscope)
+        return None
+
+    def _check_args(self, e, target, arg_units, kw_units, s) -> None:
+        node, _tscope = target
+        a = node.args
+        params = [p.arg for p in a.posonlyargs + a.args]
+        if params and params[0] in ("self", "cls"):
+            params = params[1:]
+        for i, (arg, u) in enumerate(zip(e.args, arg_units)):
+            if i >= len(params) or not _known(u):
+                continue
+            pu = unit_of_name(params[i], self.c)
+            if _known(pu) and pu != u:
+                self._flag_pair(
+                    arg, u, pu,
+                    f"argument for parameter {params[i]!r} of "
+                    f"{node.name}()", "DY503")
+        kw_names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        for kw in e.keywords:
+            u = kw_units.get(kw.arg)
+            if kw.arg is None or kw.arg not in kw_names or not _known(u):
+                continue
+            pu = unit_of_name(kw.arg, self.c)
+            if _known(pu) and pu != u:
+                self._flag_pair(
+                    kw.value, u, pu,
+                    f"argument for parameter {kw.arg!r} of "
+                    f"{node.name}()", "DY503")
+
+    def _return_unit(self, target) -> Optional[Tuple[str, float]]:
+        """A function's result unit: its own name's suffix, else the
+        consistent unit of its return expressions."""
+        node, tscope = target
+        named = unit_of_name(node.name, self.c)
+        if named is not None:
+            return named
+        key = id(node)
+        if key in self._ret_cache:
+            return self._ret_cache[key]
+        if key in self._ret_stack:        # recursion: give up soundly
+            return None
+        self._ret_stack.add(key)
+        # returns are typed in a throwaway env (param names only);
+        # findings inside the body come from its own module walk, so
+        # silence emission while peeking.
+        saved, self.findings = self.findings, []
+        units = set()
+        sub = _Scope(tscope.mi, tscope.imports, tscope.localfuncs)
+        for st in ast.walk(node):
+            if isinstance(st, ast.Return) and st.value is not None:
+                units.add(self.expr(st.value, sub))
+        self.findings = saved
+        self._ret_stack.discard(key)
+        known = {u for u in units if _known(u)}
+        out = known.pop() if len(known) == 1 and units <= known | {
+            ANY
+        } else None
+        self._ret_cache[key] = out
+        return out
+
+    # --------------------------------------------------------------- #
+    # Statements
+    # --------------------------------------------------------------- #
+
+    def _target_unit(self, t: ast.expr, s: _Scope):
+        """Declared unit of an assignment target (None if undeclared)."""
+        if isinstance(t, ast.Name):
+            return unit_of_name(t.id, self.c)
+        if isinstance(t, ast.Attribute):
+            return unit_of_name(t.attr, self.c)
+        if isinstance(t, ast.Subscript) and isinstance(
+            t.slice, ast.Constant
+        ) and isinstance(t.slice.value, str):
+            return unit_of_name(t.slice.value, self.c)
+        return None
+
+    def _bind(self, t: ast.expr, value_u, s: _Scope,
+              where: ast.AST) -> None:
+        tu = self._target_unit(t, s)
+        if _known(tu) and _known(value_u) and tu != value_u:
+            self._flag_pair(where, value_u, tu,
+                            f"assignment to {ast.unparse(t)!r}", "DY503")
+        if isinstance(t, ast.Name):
+            u = tu if tu is not None else value_u
+            if u is not None:
+                s.env[t.id] = u
+            else:
+                s.env.pop(t.id, None)
+
+    def stmt(self, st: ast.stmt, s: _Scope) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in st.decorator_list:
+                self.expr(dec, s)
+            a = st.args
+            sub = s.child()
+            for p in a.posonlyargs + a.args + a.kwonlyargs:
+                pu = unit_of_name(p.arg, self.c)
+                if pu is not None:
+                    sub.env[p.arg] = pu
+                else:
+                    sub.env.pop(p.arg, None)
+            for dflt in list(a.defaults) + [
+                d for d in a.kw_defaults if d is not None
+            ]:
+                self.expr(dflt, s)
+            for b in st.body:
+                self.stmt(b, sub)
+            return
+        if isinstance(st, ast.ClassDef):
+            for dec in st.decorator_list:
+                self.expr(dec, s)
+            sub = _Scope(s.mi, s.imports, s.localfuncs)
+            for b in st.body:
+                self.stmt(b, sub)
+            return
+        if isinstance(st, ast.Assign):
+            vu = self.expr(st.value, s)
+            for t in st.targets:
+                if isinstance(t, (ast.Tuple, ast.List)) and isinstance(
+                    st.value, (ast.Tuple, ast.List)
+                ) and len(t.elts) == len(st.value.elts):
+                    for te, ve in zip(t.elts, st.value.elts):
+                        self._bind(te, self.expr(ve, s), s, te)
+                else:
+                    self._bind(t, vu, s, st)
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        self.expr(t.value, s)
+            return
+        if isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                self._bind(st.target, self.expr(st.value, s), s, st)
+            return
+        if isinstance(st, ast.AugAssign):
+            vu = self.expr(st.value, s)
+            tu = self._target_unit(st.target, s)
+            if isinstance(st.target, ast.Name) and tu is None:
+                tu = s.env.get(st.target.id)
+            if isinstance(st.op, (ast.Add, ast.Sub)) and _known(tu) \
+                    and _known(vu) and tu != vu:
+                self._flag_pair(st, tu, vu, "augmented assignment",
+                                "DY501")
+            return
+        # generic: visit child expressions and statements
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.expr):
+                self.expr(child, s)
+            elif isinstance(child, ast.stmt):
+                self.stmt(child, s)
+            else:
+                # e.g. withitem / excepthandler wrappers
+                for sub in ast.iter_child_nodes(child):
+                    if isinstance(sub, ast.expr):
+                        self.expr(sub, s)
+                    elif isinstance(sub, ast.stmt):
+                        self.stmt(sub, s)
+
+    # --------------------------------------------------------------- #
+    # Module / tree drivers
+    # --------------------------------------------------------------- #
+
+    def check_module(self, relpath: str, module: Module) -> None:
+        self._path = relpath
+        mi = self.prog.modules.get(relpath)
+        imports = mi.imports if mi else ImportMap(module.tree)
+        localfuncs = {
+            st.name: st for st in module.tree.body
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        scope = _Scope(mi, imports, localfuncs)
+        for st in module.tree.body:
+            self.stmt(st, scope)
+
+
+def _scope_files(program: Program, contracts) -> List[str]:
+    out: List[str] = []
+    for prefix in contracts.UNITS_SCOPE:
+        base = os.path.join(program.root, prefix)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if d != "__pycache__" and not d.startswith(".")
+            )
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    full = os.path.join(dirpath, name)
+                    out.append(
+                        os.path.relpath(full, program.root).replace(
+                            os.sep, "/"
+                        )
+                    )
+    return out
+
+
+def run_program(
+    program: Program, contracts,
+    extra_paths: Sequence[str] = (),
+) -> List[Finding]:
+    """Whole-program entry point (see ``passes.PROGRAM_PASSES``).
+
+    ``extra_paths`` are repo-relative files OUTSIDE ``UNITS_SCOPE`` the
+    caller explicitly asked to lint (fixtures, one-off scripts) — the
+    runner passes files named on the command line, never directory
+    sweeps."""
+    checker = _UnitChecker(program, contracts)
+    seen: Set[str] = set()
+    for rel in list(_scope_files(program, contracts)) + list(extra_paths):
+        if rel in seen:
+            continue
+        seen.add(rel)
+        try:
+            module = program.cache.get(rel)
+        except (OSError, SyntaxError):
+            continue                # per-module pass reports DY001
+        checker.check_module(rel, module)
+    checker.findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return checker.findings

@@ -1,0 +1,109 @@
+"""Diff-aware pin-impact gate: run the bit-identity pin tests a diff
+can actually affect.
+
+CI calls this after the lint job has verified ``pin_map.json`` is
+fresh: the committed map names which modules feed which pins, so a PR
+that touches pin-covered code gets an EXPLICIT run of exactly the
+digest/equivalence tests it endangers — and a PR that doesn't gets a
+fast no-op instead of "trust the full suite caught it".
+
+Usage::
+
+    python tools/lint/pin_gate.py --base origin/main      # diff vs ref
+    python tools/lint/pin_gate.py path1.py path2.py ...   # explicit
+    python tools/lint/pin_gate.py --list --base origin/main  # plan only
+
+Exit status: 0 when no pin is affected or every affected pin's test
+passes; the pytest exit status otherwise.  Changes to the analyzer
+itself (``tools/lint/``), to the contract layer, or to a pin's test
+file conservatively affect EVERY pin.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Sequence
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)
+)))
+
+_CONTRACTS = "src/repro/core/contracts.py"
+
+#: Prefixes whose changes invalidate the map/analysis itself.
+_GLOBAL_PREFIXES = ("tools/lint/", _CONTRACTS)
+
+
+def changed_files(base: str) -> List[str]:
+    out = subprocess.run(
+        ["git", "diff", "--name-only", f"{base}...HEAD"],
+        cwd=_ROOT, capture_output=True, text=True, check=True,
+    ).stdout
+    return [line.strip() for line in out.splitlines() if line.strip()]
+
+
+def affected_pins(
+    files: Sequence[str], pin_map: dict
+) -> Dict[str, List[str]]:
+    """pin name -> the changed files that put it at risk."""
+    out: Dict[str, List[str]] = {}
+    for f in files:
+        rel = f.replace(os.sep, "/")
+        if rel.startswith(_GLOBAL_PREFIXES):
+            for pin in pin_map["pins"]:
+                out.setdefault(pin, []).append(rel)
+            continue
+        for pin, spec in pin_map["pins"].items():
+            if rel in spec["modules"] or rel == spec["test"]:
+                out.setdefault(pin, []).append(rel)
+    return out
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="pin-gate", description=__doc__)
+    ap.add_argument("files", nargs="*",
+                    help="changed files (default: git diff vs --base)")
+    ap.add_argument("--base", default="origin/main",
+                    help="ref to diff against when no files are given")
+    ap.add_argument("--map", default=os.path.join(
+        _ROOT, "tools", "lint", "pin_map.json"))
+    ap.add_argument("--list", action="store_true",
+                    help="print the plan without running pytest")
+    args = ap.parse_args(argv)
+
+    with open(args.map, encoding="utf-8") as fh:
+        pin_map = json.load(fh)
+    files = args.files or changed_files(args.base)
+    affected = affected_pins(files, pin_map)
+    if not affected:
+        print(f"pin gate: {len(files)} changed file(s) touch no "
+              f"pin-covered module — nothing to re-run")
+        return 0
+    tests = sorted({
+        pin_map["pins"][pin]["test"] for pin in affected
+    })
+    for pin in sorted(affected):
+        print(f"pin gate: {pin} affected via "
+              f"{', '.join(sorted(set(affected[pin]))[:4])}"
+              f"{' ...' if len(set(affected[pin])) > 4 else ''}")
+    print(f"pin gate: running {' '.join(tests)}")
+    if args.list:
+        return 0
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(_ROOT, "src"),
+                    env.get("PYTHONPATH", "")) if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", *tests],
+        cwd=_ROOT, env=env,
+    )
+    return proc.returncode
+
+
+if __name__ == "__main__":
+    sys.exit(main())

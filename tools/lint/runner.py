@@ -4,8 +4,19 @@ Usage (see ``make lint``)::
 
     python tools/lint/runner.py                  # src/ tools/ benchmarks/
     python tools/lint/runner.py path [path ...]  # explicit scope
+    python tools/lint/runner.py --jobs 0         # parallel (auto width)
     python tools/lint/runner.py --list-codes
     python tools/lint/runner.py --update-baseline
+    python tools/lint/runner.py --write-pin-map  # regen pin_map.json
+
+Two kinds of passes run:
+
+  * the per-module passes (DY1xx–DY4xx) — one file at a time, parsed
+    once into a shared :class:`tools.lint.graph.ModuleCache` and
+    parallelizable with ``--jobs N`` (0 = one worker per core);
+  * the dyflow program passes (DY5xx units, DY6xx pin impact) — run
+    once over the whole-program call graph built from that same cache,
+    with findings filtered to the requested scope.
 
 Exit status: 0 when every finding is inline-suppressed
 (``# dyslint: disable=CODE -- reason``) or grandfathered in
@@ -19,9 +30,11 @@ from __future__ import annotations
 
 import argparse
 import importlib.util
+import multiprocessing
 import os
 import sys
-from typing import Dict, List, Sequence, Tuple
+import time
+from typing import Dict, List, Sequence, Set, Tuple
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__)
@@ -37,7 +50,13 @@ from tools.lint import (  # noqa: E402
     split_baselined,
     split_suppressed,
 )
-from tools.lint.passes import ALL_PASSES, all_codes  # noqa: E402
+from tools.lint.graph import ModuleCache, Program  # noqa: E402
+from tools.lint.passes import (  # noqa: E402
+    ALL_PASSES,
+    PROGRAM_PASSES,
+    all_codes,
+    pin_impact,
+)
 
 _CONTRACTS_PATH = os.path.join(_ROOT, "src", "repro", "core", "contracts.py")
 _BASELINE_PATH = os.path.join(_ROOT, "tools", "lint", "baseline.json")
@@ -76,20 +95,25 @@ def discover(paths: Sequence[str]) -> List[str]:
 
 
 def lint_file(
-    full_path: str, contracts
+    full_path: str, contracts, cache: ModuleCache | None = None
 ) -> Tuple[List[Finding], List[Finding], List[str]]:
-    """Lint one file.  Returns (active, suppressed, source_lines)."""
+    """Lint one file with the per-module passes.  Returns
+    (active, suppressed, source_lines)."""
     rel = os.path.relpath(full_path, _ROOT).replace(os.sep, "/")
-    with open(full_path, encoding="utf-8") as fh:
-        text = fh.read()
     try:
-        module = Module.from_source(rel, text)
+        if cache is not None:
+            module = cache.get(rel)
+        else:
+            with open(full_path, encoding="utf-8") as fh:
+                text = fh.read()
+            module = Module.from_source(rel, text)
     except SyntaxError as e:
         f = Finding(
             code="DY001", path=rel, line=e.lineno or 1, col=e.offset or 0,
             message=f"file does not parse: {e.msg}",
         )
-        return [f], [], text.splitlines()
+        with open(full_path, encoding="utf-8") as fh:
+            return [f], [], fh.read().splitlines()
     findings: List[Finding] = []
     for p in ALL_PASSES:
         if p.applies(rel, contracts):
@@ -98,15 +122,37 @@ def lint_file(
     return (*split_suppressed(findings, module.lines), module.lines)
 
 
+# One contracts load per pool worker (module objects don't pickle).
+_WORKER_CONTRACTS = None
+
+
+def _worker_init() -> None:
+    global _WORKER_CONTRACTS
+    _WORKER_CONTRACTS = load_contracts()
+
+
+def _worker_lint(full_path: str):
+    return lint_file(full_path, _WORKER_CONTRACTS)
+
+
 def lint_paths(
-    paths: Sequence[str], contracts
+    paths: Sequence[str], contracts, jobs: int = 1,
+    cache: ModuleCache | None = None,
 ) -> Tuple[List[Finding], List[Finding], Dict[str, List[str]]]:
-    """Lint many paths.  Returns (active, suppressed, lines_by_path)."""
+    """Per-module passes over many paths (``jobs`` parallel workers;
+    0 = one per core).  Returns (active, suppressed, lines_by_path)."""
+    files = discover(paths)
     active: List[Finding] = []
     suppressed: List[Finding] = []
     lines_by_path: Dict[str, List[str]] = {}
-    for full in discover(paths):
-        a, s, lines = lint_file(full, contracts)
+    if jobs != 1 and len(files) > 1:
+        with multiprocessing.Pool(
+            jobs or None, initializer=_worker_init
+        ) as pool:
+            results = pool.map(_worker_lint, files)
+    else:
+        results = [lint_file(f, contracts, cache) for f in files]
+    for full, (a, s, lines) in zip(files, results):
         rel = os.path.relpath(full, _ROOT).replace(os.sep, "/")
         lines_by_path[rel] = lines
         active.extend(a)
@@ -114,11 +160,54 @@ def lint_paths(
     return active, suppressed, lines_by_path
 
 
+def run_program_passes(
+    rel_files: Set[str], contracts, cache: ModuleCache,
+    explicit_files: Sequence[str] = (),
+) -> Tuple[List[Finding], List[Finding]]:
+    """The dyflow program passes, filtered to the linted scope (so a
+    single-file lint of a fixture is not spammed with whole-tree
+    findings).  ``explicit_files`` — files named individually on the
+    command line — are units-checked even outside ``UNITS_SCOPE``
+    (fixtures); directory sweeps never widen the scope.  Skipped
+    entirely when nothing touches the program surface."""
+    prefixes = tuple(contracts.GRAPH_SCOPE) + tuple(contracts.UNITS_SCOPE)
+    extras = tuple(
+        rel for rel in explicit_files if not rel.startswith(prefixes)
+    )
+    if not extras and not any(
+        rel.startswith(prefixes) for rel in rel_files
+    ):
+        return [], []
+    program = Program.build(_ROOT, contracts, cache)
+    findings: List[Finding] = []
+    for p in PROGRAM_PASSES:
+        findings.extend(p.run_program(program, contracts, extras))
+    findings = [f for f in findings if f.path in rel_files]
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    by_path: Dict[str, List[Finding]] = {}
+    for f in findings:
+        by_path.setdefault(f.path, []).append(f)
+    for path, fs in by_path.items():
+        try:
+            lines = cache.get(path).lines
+        except (OSError, SyntaxError):
+            active.extend(fs)
+            continue
+        a, s = split_suppressed(fs, lines)
+        active.extend(a)
+        suppressed.extend(s)
+    return active, suppressed
+
+
 def main(argv: Sequence[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="dyslint", description=__doc__)
     ap.add_argument("paths", nargs="*",
                     help="files/directories to lint (default: the "
                          "contract layer's DEFAULT_LINT_PATHS)")
+    ap.add_argument("--jobs", type=int, default=1, metavar="N",
+                    help="parallel lint workers (0 = one per core; "
+                         "default 1)")
     ap.add_argument("--baseline", default=_BASELINE_PATH,
                     help="grandfathered-findings file")
     ap.add_argument("--no-baseline", action="store_true",
@@ -126,23 +215,58 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the current "
                          "UN-suppressed findings and exit 0")
+    ap.add_argument("--write-pin-map", action="store_true",
+                    help="recompute the pin-impact closures and "
+                         "rewrite tools/lint/pin_map.json")
     ap.add_argument("--list-codes", action="store_true")
     args = ap.parse_args(argv)
 
     if args.list_codes:
-        for p in ALL_PASSES:
+        for p in ALL_PASSES + PROGRAM_PASSES:
             print(f"[{p.NAME}]")
             for code, desc in sorted(p.CODES.items()):
                 print(f"  {code}  {desc}")
         return 0
 
+    t0 = time.perf_counter()
     contracts = load_contracts()
+    cache = ModuleCache(_ROOT)
+
+    if args.write_pin_map:
+        program = Program.build(_ROOT, contracts, cache)
+        pin_map = pin_impact.compute_pin_map(program, contracts)
+        out_path = os.path.join(_ROOT, contracts.PIN_MAP_PATH)
+        with open(out_path, "w", encoding="utf-8") as fh:
+            fh.write(pin_impact.dump_pin_map(pin_map))
+        n = sum(len(p["functions"]) for p in pin_map["pins"].values())
+        print(f"dyslint: pin map rewritten ({len(pin_map['pins'])} "
+              f"pin(s), {n} function entries) -> "
+              f"{contracts.PIN_MAP_PATH}")
+        return 0
+
     paths = args.paths or list(contracts.DEFAULT_LINT_PATHS)
     try:
-        active, suppressed, lines_by_path = lint_paths(paths, contracts)
+        active, suppressed, lines_by_path = lint_paths(
+            paths, contracts, jobs=args.jobs, cache=cache
+        )
     except FileNotFoundError as e:
         print(f"dyslint: no such path: {e}", file=sys.stderr)
         return 2
+    explicit_files = tuple(
+        os.path.relpath(
+            p if os.path.isabs(p) else os.path.join(_ROOT, p), _ROOT
+        ).replace(os.sep, "/")
+        for p in paths
+        if os.path.isfile(p if os.path.isabs(p)
+                          else os.path.join(_ROOT, p))
+        and p.endswith(".py")
+    )
+    prog_active, prog_suppressed = run_program_passes(
+        set(lines_by_path), contracts, cache, explicit_files
+    )
+    active.extend(prog_active)
+    suppressed.extend(prog_suppressed)
+    active.sort(key=lambda f: (f.path, f.line, f.col, f.code))
 
     if args.update_baseline:
         with open(args.baseline, "w", encoding="utf-8") as fh:
@@ -163,10 +287,11 @@ def main(argv: Sequence[str] | None = None) -> int:
         print(f.render())
     known = all_codes()
     n_files = len(lines_by_path)
+    wall = time.perf_counter() - t0
     summary = (
         f"dyslint: {len(active)} finding(s) "
         f"({len(suppressed)} suppressed, {len(baselined)} baselined) "
-        f"across {n_files} file(s), {len(known)} codes"
+        f"across {n_files} file(s), {len(known)} codes in {wall:.2f}s"
     )
     if stale:
         summary += (
